@@ -1,0 +1,38 @@
+"""Shared helpers for the benchmark harness."""
+import json
+import os
+import time
+
+import numpy as np
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+os.makedirs(ART, exist_ok=True)
+
+
+def emit(rows, name, us_per_call, **derived):
+    """Append one CSV row: name,us_per_call,derived."""
+    d = ";".join(f"{k}={v}" for k, v in derived.items())
+    rows.append(f"{name},{us_per_call:.3f},{d}")
+    return rows
+
+
+def save_json(name, obj):
+    path = os.path.join(ART, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, default=float)
+    return path
+
+
+def timeit(fn, *args, n=20, warmup=3):
+    """Median wall time of a jitted call in us."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))

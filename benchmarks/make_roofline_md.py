@@ -1,0 +1,50 @@
+"""Regenerate ROOFLINE.md from dry-run artifacts (baseline + optimized)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import ART
+from benchmarks import roofline_table as RT
+
+
+def main():
+    out = ["# Roofline tables (generated from dry-run artifacts)", ""]
+    out.append(RT.dryrun_markdown())
+    out.append("")
+    out.append("## Optimized (current code, post-§Perf)")
+    for mesh in ("single", "multi"):
+        out.append("")
+        out.append(RT.roofline_markdown(mesh))
+    base = os.path.join(ART, "dryrun", "baseline")
+    if os.path.isdir(base):
+        out.append("")
+        out.append("## Baseline (paper-faithful first compile, archived)")
+        orig = RT.load_cells.__defaults__
+        import benchmarks.roofline_table as rt
+        import glob, json
+
+        def load_base(mesh):
+            cells = {}
+            for p in sorted(glob.glob(os.path.join(base, mesh, "*.json"))):
+                rec = json.load(open(p))
+                cells[(rec["arch"], rec["shape"])] = rec
+            return cells
+
+        rt_load = rt.load_cells
+        rt.load_cells = load_base
+        for mesh in ("single",):
+            out.append("")
+            out.append(RT.roofline_markdown(mesh).replace(
+                "### Roofline", "### Baseline roofline"))
+        rt.load_cells = rt_load
+    path = os.path.join(os.path.dirname(ART), "..", "ROOFLINE.md")
+    path = os.path.abspath(path)
+    open(path, "w").write("\n".join(out) + "\n")
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Aggregate the dry-run artifacts into the §Dry-run and §Roofline tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ART
+
+
+def load_cells(mesh="single"):
+    out = {}
+    for path in sorted(glob.glob(os.path.join(ART, "dryrun", mesh,
+                                              "*.json"))):
+        rec = json.load(open(path))
+        if "shape" not in rec:
+            continue                      # extra artifacts (migrate/pp)
+        key = rec["shape"]
+        if rec.get("kv_dtype", "bf16") != "bf16":
+            key += f"+{rec['kv_dtype']}"
+        out[(rec["arch"], key)] = rec
+    return out
+
+
+def roofline_markdown(mesh="single"):
+    cells = load_cells(mesh)
+    lines = [
+        f"### Roofline — {mesh} mesh "
+        f"({'2x16x16' if mesh == 'multi' else '16x16'})",
+        "",
+        "| arch | shape | t_compute | t_memory | t_collective | bound |"
+        " useful | roofline frac | HBM GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), rec in sorted(cells.items()):
+        if rec.get("status") == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | skip |"
+                         f" — | — | ({rec['reason'][:40]}…) |")
+            continue
+        if rec.get("status") != "ok":
+            lines.append(f"| {arch} | {shape} | ERROR | | | | | | |")
+            continue
+        r = rec["roofline"]
+        mem = rec["memory"]["peak_per_device"] / 2**30
+        lines.append(
+            f"| {arch} | {shape} "
+            f"| {r['t_compute_s']*1e3:.1f}ms "
+            f"| {r['t_memory_s']*1e3:.1f}ms "
+            f"| {r['t_collective_s']*1e3:.1f}ms "
+            f"| {r['bottleneck']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {mem:.2f} |")
+    return "\n".join(lines)
+
+
+def dryrun_markdown():
+    lines = ["### Dry-run status (lower+compile, per mesh)", ""]
+    for mesh in ("single", "multi"):
+        cells = load_cells(mesh)
+        ok = sum(1 for r in cells.values() if r.get("status") == "ok")
+        skip = sum(1 for r in cells.values() if r.get("status") == "skipped")
+        err = sum(1 for r in cells.values() if r.get("status") == "error")
+        fits = sum(1 for r in cells.values()
+                   if r.get("status") == "ok" and r.get("fits_hbm_16g"))
+        lines.append(f"* **{mesh}**: {ok} compiled ok ({fits} fit 16GiB "
+                     f"HBM), {skip} skipped per brief, {err} errors "
+                     f"of {len(cells)} cells")
+    return "\n".join(lines)
+
+
+def run(rows):
+    art = {"single": {}, "multi": {}}
+    for mesh in ("single", "multi"):
+        for (arch, shape), rec in load_cells(mesh).items():
+            if rec.get("status") != "ok":
+                continue
+            r = rec["roofline"]
+            art[mesh][f"{arch}__{shape}"] = r
+            bound_us = max(r["t_compute_s"], r["t_memory_s"],
+                           r["t_collective_s"]) * 1e6
+            rows.append(
+                f"roofline/{mesh}/{arch}/{shape},{bound_us:.1f},"
+                f"bottleneck={r['bottleneck']};"
+                f"frac={r['roofline_fraction']:.3f}")
+    return art

@@ -1,0 +1,47 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one entry per paper table/figure + the roofline
+aggregation.  ``python -m benchmarks.run [--only fig8,fig23]``."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    help="comma list: table1,fig8,fig9,fig10,fig19,fig22,"
+                         "fig23,roofline")
+    args = ap.parse_args()
+    only = None if args.only == "all" else set(args.only.split(","))
+
+    from benchmarks import paper_tables as PT
+    from benchmarks import roofline_table as RT
+    from benchmarks.common import save_json
+
+    benches = [
+        ("table1", PT.table1_critical_path),
+        ("fig8", PT.fig8_hit_ratio),
+        ("fig9", PT.fig9_block_size),
+        ("fig10", PT.fig10_21_distribution),
+        ("fig19", PT.fig19_20_working_set),
+        ("fig22", PT.fig22_scalability),
+        ("fig23", PT.fig23_eviction),
+        ("victim", PT.victim_quality),
+        ("roofline", RT.run),
+    ]
+    rows = ["name,us_per_call,derived"]
+    arts = {}
+    for name, fn in benches:
+        if only is not None and name not in only:
+            continue
+        t0 = time.time()
+        arts[name] = fn(rows)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    save_json("bench_results", arts)
+    print("\n".join(rows))
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,86 @@
+"""Fault tolerance end-to-end: async replicated checkpoints, replica
+corruption, elastic-recovery planning, and peer-failure page recovery.
+
+    PYTHONPATH=src python examples/fault_tolerance.py
+"""
+import os
+import tempfile
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import ARCHS, reduced
+from repro.core import TieredPageStore, POLICIES, PAPER_COSTS
+from repro.data import DataConfig, TrainDataset
+from repro.models import transformer as T
+from repro.train import (TrainConfig, ValetCheckpointer, fit,
+                         ClusterSpec, make_recovery_plan)
+
+
+def main():
+    cfg = reduced(ARCHS["phi3-mini-3.8b"])
+    ctx = T.ParallelCtx(remat=False, q_block=16, kv_block=16, loss_chunk=16,
+                        compute_dtype=jnp.float32)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    tcfg = TrainConfig(microbatches=2, compute_dtype=jnp.float32,
+                       adamw=optim.AdamWConfig(lr=1e-3, warmup_steps=5,
+                                               total_steps=40))
+    ds = TrainDataset(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8))
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = ValetCheckpointer(d, replicas=2)
+
+        # train 20 steps, checkpoint asynchronously (staging = critical path)
+        params, opt, hist = fit(params, cfg, ctx, tcfg, ds, n_steps=20,
+                                log_every=10)
+        stage_s = ckpt.save(20, {"params": params})
+        ckpt.wait()
+        print(f"[ckpt] staged in {stage_s*1e3:.1f} ms "
+              f"(writer replicates to 2 dirs in the background)")
+
+        # corrupt the primary replica -> restore falls back (Table 3)
+        r0 = os.path.join(d, "replica0", "step_00000020", "arrays.npz")
+        open(r0, "wb").write(b"corrupted!")
+        step, restored = ckpt.restore(tree_like={"params": params})
+        ok = bool(jnp.allclose(restored["params"]["embed"],
+                               params["embed"]))
+        print(f"[ckpt] primary corrupted -> restored step {step} from "
+              f"replica 1, exact={ok}")
+
+        # resume training from the snapshot: the deterministic pipeline
+        # replays the exact stream position
+        ds2 = TrainDataset(DataConfig(vocab=cfg.vocab, seq_len=32,
+                                      global_batch=8), start_step=20)
+        _, _, hist2 = fit(restored["params"], cfg, ctx, tcfg, ds2,
+                          n_steps=5, log_every=2)
+        print(f"[resume] loss continues from {hist[-1]['loss']:.3f} -> "
+              f"{hist2[-1]['loss']:.3f}")
+        ckpt.close()
+
+    # elastic: lose 37 of 512 devices -> recovery plan keeps TP=16
+    spec = ClusterSpec(n_pods=2, data_parallel=16, model_parallel=16)
+    plan = make_recovery_plan(spec, alive_devices=list(range(512 - 37)),
+                              restore_step=20)
+    m = plan["mesh"]
+    print(f"[elastic] 512->{512-37} devices: new mesh pods={m.n_pods} "
+          f"dp={m.data_parallel} tp={m.model_parallel} "
+          f"({m.n_devices} used), resume at step {plan['restore_step']}")
+
+    # remote peer failure: replicated pages recover without data loss
+    store = TieredPageStore(POLICIES["valet"], PAPER_COSTS,
+                            pool_capacity=256, min_pool=32,
+                            n_peers=6, peer_capacity_blocks=128,
+                            pages_per_block=16)
+    for p in range(1000):
+        store.write(p)
+    store.drain()
+    recovered, lost = store.fail_peer(2)
+    print(f"[peer-failure] peer 2 died: {recovered} pages repointed to "
+          f"replicas, {lost} lost")
+
+
+if __name__ == "__main__":
+    main()

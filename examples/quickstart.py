@@ -1,0 +1,66 @@
+"""Quickstart: train a small LM and serve it through the Valet engine.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs on CPU in ~2 minutes: 30 training steps on the synthetic copy task,
+then generation under memory pressure with the Valet policy (outputs are
+identical to a pressure-free engine — the point of the paper).
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.configs import ARCHS, reduced
+from repro.core.policies import POLICIES
+from repro.data import DataConfig, TrainDataset
+from repro.models import transformer as T
+from repro.serve import ValetServeEngine
+from repro.train import TrainConfig, fit
+
+
+def main():
+    cfg = reduced(ARCHS["gemma3-4b"])          # tiny same-family config
+    print(f"arch={cfg.name} layers={cfg.n_layers} d={cfg.d_model} "
+          f"vocab={cfg.vocab}")
+
+    ctx = T.ParallelCtx(remat=False, q_block=16, kv_block=16, loss_chunk=16,
+                        compute_dtype=jnp.float32)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+
+    # -- train ---------------------------------------------------------------
+    tcfg = TrainConfig(microbatches=2, compute_dtype=jnp.float32,
+                       adamw=optim.AdamWConfig(lr=1e-3, warmup_steps=5,
+                                               total_steps=40))
+    ds = TrainDataset(DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8))
+    params, _, hist = fit(params, cfg, ctx, tcfg, ds, n_steps=30,
+                          log_every=10)
+    for h in hist:
+        print(f"step {h['step']:3d}  loss {h['loss']:.3f}")
+
+    # -- serve under memory pressure ------------------------------------------
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(2, cfg.vocab, size=8) for _ in range(4)]
+
+    def generate(pool_slots):
+        eng = ValetServeEngine(params, cfg, ctx, max_batch=2, max_seq=48,
+                               page=4, pool_slots=pool_slots,
+                               policy=POLICIES["valet"])
+        for p in prompts:
+            eng.submit(p, max_new=8)
+        reqs = eng.run()
+        return ([r.tokens_out for r in sorted(reqs, key=lambda r: r.rid)],
+                eng.stats)
+
+    full, _ = generate(pool_slots=64)          # everything fits
+    tight, stats = generate(pool_slots=5)      # ~25% working-set fit
+    print(f"\npool pressure: pauses={stats.pauses} "
+          f"spilled={stats.spilled_pages} restored={stats.restored_pages}")
+    print("outputs identical under pressure:", full == tight)
+    for i, toks in enumerate(tight):
+        print(f"  req{i}: {toks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Valet core: host/remote shared-memory orchestration (the paper's
+contribution), adapted to the TPU memory hierarchy.  See DESIGN.md §2-§4."""
+from repro.core.pool import ValetMempool, SlotState
+from repro.core.queues import WritePipeline, StagingQueue, ReclaimableQueue, WriteSet
+from repro.core.page_table import GlobalPageTable, Location, Tier
+from repro.core.activity import (ActivityTracker, select_victims_nad,
+                                 select_victims_mass, select_victims_random,
+                                 power_of_two_choices)
+from repro.core.migration import MigrationEngine, Migration, Phase
+from repro.core.replication import ReplicaPlacer, FaultConfig, fail_peer
+from repro.core.policies import (Policy, CostModel, POLICIES, VALET,
+                                 VALET_MASS, INFINISWAP, NBDX, OS_SWAP,
+                                 PAPER_COSTS, TPU_COSTS)
+from repro.core.tiering import TieredPageStore, PeerState, Stats
+from repro.core import device_ops

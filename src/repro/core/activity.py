@@ -1,0 +1,103 @@
+"""Activity tracking + victim selection (paper §3.5).
+
+``Non-Activity-Duration = now - last_write_activity`` per MR block; the
+eviction victim is the block with the longest duration — likely in its idle
+phase of the write->read->idle activity cycle the paper observes.  No
+queries to sender nodes are needed: the timestamp tag lives with the block.
+
+Two schemes:
+
+* ``select_victims_nad`` — the paper's, on write timestamps.
+* ``select_victims_mass`` — beyond-paper: for KV pages, "activity" can be the
+  *attention mass* a page received recently (free from the flash-decode
+  partials).  Same interface, better victims for read-heavy KV workloads.
+
+Plus power-of-two-choices peer selection (§2.1 / §4.3) for placement and
+migration destinations.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+class ActivityTracker:
+    """Per-block last-activity timestamps + optional attention-mass EMA.
+
+    Dict-backed: block ids are sparse (peer<<20 | slot).  The paper's
+    per-block metadata tag is exactly this: a timestamp updated on write.
+    """
+
+    def __init__(self, n_blocks: int = 0, mass_decay: float = 0.9):
+        self.last_activity: dict = {}
+        self.mass: dict = {}
+        self.mass_decay = mass_decay
+        self._mass_age = 0
+
+    def on_write(self, blocks: Sequence[int], step: int):
+        for b in blocks:
+            self.last_activity[int(b)] = step
+
+    def on_read_mass(self, blocks: Sequence[int], mass: Sequence[float]):
+        """Accumulate attention-mass observations (beyond-paper activity)."""
+        self._mass_age += 1
+        for b, m in zip(blocks, mass):
+            b = int(b)
+            self.mass[b] = self.mass.get(b, 0.0) * self.mass_decay + float(m)
+
+    def last(self, block: int) -> int:
+        return self.last_activity.get(int(block), 0)
+
+    def nad(self, blocks: Sequence[int], step: int) -> np.ndarray:
+        return np.array([step - self.last(b) for b in blocks], np.int64)
+
+    def mass_of(self, blocks: Sequence[int]) -> np.ndarray:
+        return np.array([self.mass.get(int(b), 0.0) for b in blocks])
+
+
+def select_victims_nad(tracker: ActivityTracker, candidates: Sequence[int],
+                       n: int, step: int) -> List[int]:
+    """Paper's activity-based victim selection: longest Non-Activity-Duration."""
+    cand = np.asarray(list(candidates), np.int64)
+    if cand.size == 0 or n <= 0:
+        return []
+    nad = tracker.nad(cand, step)
+    order = np.argsort(-nad, kind="stable")
+    return cand[order[:n]].tolist()
+
+
+def select_victims_mass(tracker: ActivityTracker, candidates: Sequence[int],
+                        n: int, step: int) -> List[int]:
+    """Beyond-paper: evict lowest recent attention mass (ties -> oldest)."""
+    cand = np.asarray(list(candidates), np.int64)
+    if cand.size == 0 or n <= 0:
+        return []
+    mass = tracker.mass_of(cand)
+    nad = tracker.nad(cand, step)
+    order = np.lexsort((-nad, mass))        # primary: low mass; tie: old
+    return cand[order[:n]].tolist()
+
+
+def select_victims_random(rng: np.random.Generator, candidates: Sequence[int],
+                          n: int) -> List[int]:
+    """Baseline (Infiniswap-like batched random selection, §6.5)."""
+    cand = list(candidates)
+    if not cand or n <= 0:
+        return []
+    idx = rng.permutation(len(cand))[:min(n, len(cand))]
+    return [cand[i] for i in idx]
+
+
+def power_of_two_choices(free_counts: Sequence[int],
+                         rng: np.random.Generator,
+                         exclude: Sequence[int] = ()) -> Optional[int]:
+    """Pick the freer of two random peers (paper §2.1, §4.3)."""
+    peers = [i for i in range(len(free_counts)) if i not in set(exclude)]
+    if not peers:
+        return None
+    if len(peers) == 1:
+        return peers[0]
+    a, b = rng.choice(len(peers), size=2, replace=False)
+    pa, pb = peers[a], peers[b]
+    return pa if free_counts[pa] >= free_counts[pb] else pb

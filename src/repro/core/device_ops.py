@@ -1,0 +1,148 @@
+"""Device-side data plane for the Valet page pools (pure jnp, jit-able).
+
+The pool is a fixed array of page slots per layer:
+  K/V pool: (n_slots, page_size, n_kv_heads, head_dim)
+
+All ops are functional (return new arrays) and static-shaped so they compose
+with jit/pjit; the control plane (pool.py/tiering.py) decides *which* slots,
+the data plane only moves bytes.  On TPU the gather/append paths are the
+Pallas kernels (``repro.kernels.paged_attention``); these jnp versions are
+the oracle + CPU path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KVPool(NamedTuple):
+    """One layer's paged KV storage."""
+    k: jax.Array        # (n_slots, page, n_kv, hd)
+    v: jax.Array
+
+
+def make_kv_pool(n_slots, page, n_kv, hd, dtype=jnp.bfloat16) -> KVPool:
+    shape = (n_slots, page, n_kv, hd)
+    return KVPool(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def append_token(pool: KVPool, k, v, slot, offset) -> KVPool:
+    """Write one token's K/V into (slot, offset) per batch element.
+
+    k, v: (B, n_kv, hd); slot, offset: (B,) int32.  The write completes into
+    the *local pool* — the paper's critical-path contract: callers never wait
+    for any remote traffic.
+    """
+    return KVPool(
+        pool.k.at[slot, offset].set(k),
+        pool.v.at[slot, offset].set(v),
+    )
+
+
+def append_token_masked(pool: KVPool, k, v, slot, offset, own_mask) -> KVPool:
+    """Masked append for sharded pools: only the owning rank writes."""
+    slot = jnp.where(own_mask, slot, pool.k.shape[0])      # OOB -> dropped
+    return KVPool(
+        pool.k.at[slot, offset].set(k, mode="drop"),
+        pool.v.at[slot, offset].set(v, mode="drop"),
+    )
+
+
+def gather_pages(pool: KVPool, slots):
+    """slots: (B, P) int32 (-1 = pad).  Returns k,v (B, P, page, n_kv, hd)
+    and a page-valid mask (B, P)."""
+    valid = slots >= 0
+    safe = jnp.maximum(slots, 0)
+    return pool.k[safe], pool.v[safe], valid
+
+
+def write_prefill_pages(pool: KVPool, k_pages, v_pages, slots) -> KVPool:
+    """Bulk-insert prefill KV.  k_pages: (B, P, page, n_kv, hd);
+    slots: (B, P) int32 (-1 = skip)."""
+    flat_slots = slots.reshape(-1)
+    kf = k_pages.reshape((-1,) + k_pages.shape[2:])
+    vf = v_pages.reshape((-1,) + v_pages.shape[2:])
+    safe = jnp.where(flat_slots >= 0, flat_slots, pool.k.shape[0])
+    return KVPool(
+        pool.k.at[safe].set(kf, mode="drop"),
+        pool.v.at[safe].set(vf, mode="drop"),
+    )
+
+
+def copy_block(pool: KVPool, src_slot: jax.Array, dst_slot: jax.Array) -> KVPool:
+    """Migration data plane: copy one slot's page (same pool or after a
+    cross-device transfer).  Functional; a few HBM reads+writes."""
+    return KVPool(
+        pool.k.at[dst_slot].set(pool.k[src_slot]),
+        pool.v.at[dst_slot].set(pool.v[src_slot]),
+    )
+
+
+def extract_blocks(pool: KVPool, slots):
+    """Read slots out of the pool (spill to host tier).  (n, page, kv, hd)."""
+    return pool.k[slots], pool.v[slots]
+
+
+def insert_blocks(pool: KVPool, ks, vs, slots) -> KVPool:
+    """Insert blocks fetched from a slower tier back into the pool."""
+    return KVPool(pool.k.at[slots].set(ks), pool.v.at[slots].set(vs))
+
+
+# -- host tier ----------------------------------------------------------------
+
+def to_host_tier(x):
+    """Spill an array to the host memory tier.
+
+    On TPU this uses the jax memories API (``memory_kind="pinned_host"``) —
+    an async DMA that leaves the data device-addressable; on backends
+    without host memory kinds it falls back to a host numpy copy.  Either
+    way the Valet contract holds: the spill is off the critical path and
+    round-trips exactly.
+    """
+    import numpy as np
+    try:
+        s = x.sharding.with_memory_kind("pinned_host")
+        return jax.device_put(x, s)
+    except Exception:
+        return np.asarray(x)
+
+
+def from_host_tier(x, like=None):
+    """Fetch a spilled array back toward HBM (inverse of ``to_host_tier``)."""
+    try:
+        if like is not None and hasattr(like, "sharding"):
+            return jax.device_put(x, like.sharding)
+        return jnp.asarray(x)
+    except Exception:
+        return jnp.asarray(x)
+
+
+# -- ring buffer for sliding-window layers -----------------------------------
+
+class RingKV(NamedTuple):
+    k: jax.Array        # (B, W, n_kv, hd)
+    v: jax.Array
+
+
+def make_ring(batch, window, n_kv, hd, dtype=jnp.bfloat16) -> RingKV:
+    return RingKV(jnp.zeros((batch, window, n_kv, hd), dtype),
+                  jnp.zeros((batch, window, n_kv, hd), dtype))
+
+
+def ring_append(ring: RingKV, k, v, pos) -> RingKV:
+    """k, v: (B, n_kv, hd); pos: scalar int (global step)."""
+    w = ring.k.shape[1]
+    idx = pos % w
+    return RingKV(ring.k.at[:, idx].set(k), ring.v.at[:, idx].set(v))
+
+
+def ring_valid(ring: RingKV, pos):
+    """(B, W) validity mask after ``pos + 1`` tokens written."""
+    w = ring.k.shape[1]
+    b = ring.k.shape[0]
+    filled = jnp.minimum(pos + 1, w)
+    m = jnp.arange(w)[None, :] < filled
+    return jnp.broadcast_to(m, (b, w))

@@ -1,0 +1,159 @@
+"""Sender-driven migration protocol (paper §3.5, Figure 14).
+
+When a remote peer is memory-pressured it must reclaim MR blocks.  Valet
+*migrates* the victim block to a less-pressured peer instead of deleting it:
+
+  1. peer's activity monitor reports pressure to the sender
+  2. sender selects the victim (least-active block, ``activity.py``) and the
+     destination (power-of-two-choices over peer free memory)
+  3. sender parks new writes to the migrating block in its local mempool
+     staging queue (reads continue against the source block)
+  4. source copies the block to the destination (data plane)
+  5. sender cuts the page table over, unparks writes, frees the source block
+
+The sender owns the whole control flow (receivers are passive), so messages
+are naturally serialized and no extra ordering protocol is needed.  The
+explicit message log makes the protocol unit-testable and mirrors Figure 14.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.activity import ActivityTracker, power_of_two_choices, \
+    select_victims_nad
+from repro.core.page_table import GlobalPageTable, Location, Tier
+
+
+class Phase(enum.Enum):
+    IDLE = 0
+    PREPARE = 1       # destination chosen, writes being parked
+    COPYING = 2       # data plane copy in flight; reads served from source
+    CUTOVER = 3       # page table repoint + unpark writes
+    DONE = 4
+    ABORTED = 5
+
+
+@dataclass
+class Message:
+    """One protocol message (for the log / tests)."""
+    src: str
+    dst: str
+    kind: str
+    payload: dict = field(default_factory=dict)
+
+
+@dataclass
+class Migration:
+    block: int                    # victim block id (pool slot on source peer)
+    pages: List[int]              # logical pages in the block
+    src_peer: int
+    dst_peer: int
+    dst_slot: int = -1
+    phase: Phase = Phase.IDLE
+    log: List[Message] = field(default_factory=list)
+
+
+class MigrationEngine:
+    """Drives migrations; the caller supplies data/metadata callbacks.
+
+    copy_fn(src_peer, src_slot, dst_peer, dst_slot): data-plane block copy
+    alloc_fn(peer) -> slot | None: allocate an MR slot on a peer
+    free_fn(peer, slot): release an MR slot
+    park_fn(pages, hold: bool): park/unpark writes (staging queue hold)
+    """
+
+    def __init__(self, gpt: GlobalPageTable, tracker: ActivityTracker,
+                 free_counts_fn: Callable[[], Sequence[int]],
+                 copy_fn, alloc_fn, free_fn, park_fn,
+                 rng: Optional[np.random.Generator] = None):
+        self.gpt = gpt
+        self.tracker = tracker
+        self.free_counts_fn = free_counts_fn
+        self.copy_fn = copy_fn
+        self.alloc_fn = alloc_fn
+        self.free_fn = free_fn
+        self.park_fn = park_fn
+        self.rng = rng or np.random.default_rng(0)
+        self.completed: List[Migration] = []
+        self.aborted: List[Migration] = []
+        # counters
+        self.n_migrated_blocks = 0
+        self.n_migrated_pages = 0
+
+    # -- entry point: a peer signals memory pressure --------------------------
+
+    def handle_pressure(self, src_peer: int, blocks_to_free: int,
+                        block_pages: Callable[[int], List[int]],
+                        candidate_blocks: Sequence[int], step: int
+                        ) -> List[Migration]:
+        """Select least-active victims on ``src_peer`` and migrate them."""
+        victims = select_victims_nad(self.tracker, candidate_blocks,
+                                     blocks_to_free, step)
+        out = []
+        for blk in victims:
+            mig = self.migrate_block(src_peer, blk, block_pages(blk))
+            out.append(mig)
+        return out
+
+    # -- one block migration ---------------------------------------------------
+
+    def migrate_block(self, src_peer: int, block: int,
+                      pages: List[int]) -> Migration:
+        mig = Migration(block=block, pages=list(pages), src_peer=src_peer,
+                        dst_peer=-1)
+
+        # 2. destination: power-of-two-choices over free counts, != source
+        free = list(self.free_counts_fn())
+        dst = power_of_two_choices(free, self.rng, exclude=[src_peer])
+        if dst is None or free[dst] <= 0:
+            mig.phase = Phase.ABORTED
+            mig.log.append(Message("sender", "sender", "NO_DESTINATION"))
+            self.aborted.append(mig)
+            return mig
+        mig.dst_peer = dst
+        mig.log.append(Message("sender", f"peer{dst}", "ALLOC_REQ",
+                               {"block": block}))
+        slot = self.alloc_fn(dst)
+        if slot is None:
+            mig.phase = Phase.ABORTED
+            mig.log.append(Message(f"peer{dst}", "sender", "ALLOC_FAIL"))
+            self.aborted.append(mig)
+            return mig
+        mig.dst_slot = slot
+        mig.log.append(Message(f"peer{dst}", "sender", "ALLOC_OK",
+                               {"slot": slot}))
+
+        # 3. park writes; reads keep hitting the source block (Figure 12)
+        mig.phase = Phase.PREPARE
+        self.park_fn(mig.pages, True)
+        mig.log.append(Message("sender", "sender", "PARK_WRITES",
+                               {"pages": len(mig.pages)}))
+
+        # 4. data-plane copy (source -> destination, sender-coordinated)
+        mig.phase = Phase.COPYING
+        mig.log.append(Message("sender", f"peer{src_peer}", "COPY_REQ",
+                               {"dst": dst, "dst_slot": slot}))
+        self.copy_fn(src_peer, block, dst, slot)
+        mig.log.append(Message(f"peer{src_peer}", "sender", "COPY_DONE"))
+
+        # 5. cutover: repoint pages, unpark writes, free source block
+        mig.phase = Phase.CUTOVER
+        for pg in mig.pages:
+            loc = self.gpt.remote_location(pg)
+            reps = loc.replicas if loc else ()
+            self.gpt.map_remote(pg, Location(Tier.PEER, peer=dst, slot=slot,
+                                             replicas=reps))
+        self.park_fn(mig.pages, False)
+        self.free_fn(src_peer, block)
+        mig.log.append(Message("sender", f"peer{src_peer}", "FREE_BLOCK",
+                               {"block": block}))
+
+        mig.phase = Phase.DONE
+        self.completed.append(mig)
+        self.n_migrated_blocks += 1
+        self.n_migrated_pages += len(mig.pages)
+        return mig

@@ -1,0 +1,110 @@
+"""Global Page Table (paper §4.1) — logical page -> physical location.
+
+The paper uses a radix tree (pointer-chasing, host-friendly).  On an
+accelerator control plane we keep the same contract with flat dense tables:
+O(1) lookup, grow-on-demand, and the paper's simple existence rule — *if a
+local mapping exists the page is local; otherwise it is remote* — which
+avoids lock contention on updates (here: avoids read-modify-write races
+between the scheduler thread and the flush thread).
+
+Tiers mirror DESIGN.md §2: LOCAL HBM pool -> PEER device HBM -> HOST DRAM ->
+COLD (recompute / disk analogue).
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class Tier(enum.IntEnum):
+    NONE = 0
+    LOCAL = 1      # local HBM pool slot
+    PEER = 2       # another device's spill pool (RDMA MR analogue)
+    HOST = 3       # host DRAM (pinned) tier
+    COLD = 4       # disk / recompute analogue
+
+
+@dataclass(frozen=True)
+class Location:
+    tier: Tier
+    peer: int = -1          # peer id for Tier.PEER / host id for Tier.HOST
+    slot: int = -1          # slot within that tier's pool
+    replicas: Tuple[Tuple[int, int], ...] = ()   # [(peer, slot)] extra copies
+
+
+class GlobalPageTable:
+    """logical page id -> Location (+ optional local pool slot)."""
+
+    def __init__(self):
+        self._local: Dict[int, int] = {}          # page -> local pool slot
+        self._remote: Dict[int, Location] = {}    # page -> remote location
+
+    # -- local mapping (the paper's "page reference exists -> local") --------
+
+    def map_local(self, page: int, slot: int):
+        self._local[page] = slot
+
+    def unmap_local(self, page: int) -> Optional[int]:
+        return self._local.pop(page, None)
+
+    def local_slot(self, page: int) -> Optional[int]:
+        return self._local.get(page)
+
+    # -- remote mapping -------------------------------------------------------
+
+    def map_remote(self, page: int, loc: Location):
+        self._remote[page] = loc
+
+    def remote_location(self, page: int) -> Optional[Location]:
+        return self._remote.get(page)
+
+    def drop_remote(self, page: int):
+        self._remote.pop(page, None)
+
+    def lookup(self, page: int) -> Location:
+        """Resolution order: local pool, then remote, then NONE."""
+        slot = self._local.get(page)
+        if slot is not None:
+            return Location(Tier.LOCAL, slot=slot)
+        return self._remote.get(page, Location(Tier.NONE))
+
+    def pages_on_peer(self, peer: int) -> List[int]:
+        return [pg for pg, loc in self._remote.items()
+                if loc.tier == Tier.PEER and loc.peer == peer]
+
+    def repoint_replica(self, page: int) -> bool:
+        """Peer failure: promote the first replica to primary (Table 3)."""
+        loc = self._remote.get(page)
+        if loc is None or not loc.replicas:
+            return False
+        (peer, slot), rest = loc.replicas[0], loc.replicas[1:]
+        self._remote[page] = Location(loc.tier, peer=peer, slot=slot,
+                                      replicas=rest)
+        return True
+
+    def __len__(self):
+        return len(self._local) + len(
+            set(self._remote) - set(self._local))
+
+    # -- dense device-facing view ---------------------------------------------
+
+    def block_table(self, pages: List[int], n_peers: int,
+                    pages_per_peer: int) -> np.ndarray:
+        """Dense per-peer gather lists for the data plane.
+
+        Returns int32 [n_peers, pages_per_peer] of tier-slot ids (-1 pad) —
+        the device-side view the paged-attention kernel consumes.  Pages in
+        the LOCAL tier are listed under peer 0's pool by convention of the
+        caller (serving engine passes separate local lists).
+        """
+        out = np.full((n_peers, pages_per_peer), -1, np.int32)
+        fill = [0] * n_peers
+        for pg in pages:
+            loc = self.lookup(pg)
+            if loc.tier == Tier.PEER and fill[loc.peer] < pages_per_peer:
+                out[loc.peer, fill[loc.peer]] = loc.slot
+                fill[loc.peer] += 1
+        return out

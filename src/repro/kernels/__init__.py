@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+flash_attention — train/prefill attention (causal, sliding-window, GQA)
+paged_attention — decode over the Valet page pool (GPT lookup fused)
+ssd_scan        — Mamba-2 SSD chunk scan (state carried in VMEM scratch)
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a jit'd layout-handling
+wrapper in ``ops.py``; tests sweep shapes/dtypes in interpret mode.
+"""
+from repro.kernels.ops import (flash_attention_op, paged_attention_op,
+                               ssd_scan_op)

@@ -1,0 +1,125 @@
+"""Flash attention TPU kernel (train / prefill path).
+
+``pl.pallas_call`` with explicit VMEM ``BlockSpec`` tiling:
+
+* grid = (batch*q_heads, Sq/bq, Sk/bk); the KV dimension is the innermost,
+  sequential grid axis so the online-softmax state (m, l, acc) lives in VMEM
+  scratch across KV steps.
+* GQA is folded into the index maps: the KV block index maps query-head
+  ``bh`` to its KV head ``bh // group`` — no KV duplication in HBM.
+* Causal/sliding-window blocks that are fully masked are skipped with
+  ``pl.when`` (no MXU work), and the mask is applied with broadcasted iotas
+  for partially-masked diagonal blocks.
+
+Block sizes default to (128, 128): MXU-aligned (128x128 systolic array) and
+a VMEM working set of ~bq*D + 2*bk*D + bq*bk floats — far under the ~16 MiB
+VMEM budget for D <= 256.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  causal, window, bq, bk, nk, scale):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # skip blocks that are fully masked (strictly above the causal diagonal
+    # or entirely left of the sliding window)
+    run = True
+    if causal:
+        run = k_start <= q_start + bq - 1
+    if window > 0:
+        run = jnp.logical_and(run, k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window > 0:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                              # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=False):
+    """q: (BH, Sq, D) query-head-major; k, v: (BKV, Sk, D).
+
+    BH = batch * q_heads, BKV = batch * kv_heads; q head ``i`` reads KV head
+    ``i // (BH // BKV)`` within its batch entry (caller lays out heads
+    contiguously per batch element).
+    """
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    assert bh % bkv == 0
+    group = bh // bkv
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    nq, nk = sq // bq, sk // bk
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_flash_kernel, causal=causal, window=window,
+                               bq=bq, bk=bk, nk=nk, scale=scale)
+    grid = (bh, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qi, ki: (b // group, ki, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, qi, ki: (b // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,56 @@
+"""Jit'd model-facing wrappers around the Pallas kernels.
+
+Each op takes the model layout, dispatches to the Pallas kernel (TPU) or the
+jnp reference (CPU / dry-run), and hides the layout shuffling.  ``impl`` is
+``"pallas"`` (compiled), ``"interpret"`` (Pallas in Python — CPU-correct), or
+``"reference"`` (pure jnp oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_lib
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.paged_attention import paged_attention as _paged
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "block_q", "block_k"))
+def flash_attention_op(q, k, v, *, causal=True, window=0, impl="reference",
+                       block_q=128, block_k=128):
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) -> (B, S, Hq, D)."""
+    if impl == "reference":
+        return ref_lib.flash_attention_ref(q, k, v, causal=causal,
+                                           window=window)
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    qk = q.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    out = _flash(qk, kk, vk, causal=causal, window=window, block_q=block_q,
+                 block_k=block_k, interpret=(impl == "interpret"))
+    return out.reshape(b, hq, s, d).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_attention_op(q, k_pool, v_pool, block_table, lengths, *,
+                       impl="reference"):
+    """q: (B, Hq, D) one token/seq; pools: (slots, page, Hkv, D)."""
+    if impl == "reference":
+        return ref_lib.paged_attention_ref(q, k_pool, v_pool, block_table,
+                                           lengths)
+    return _paged(q, k_pool, v_pool, block_table, lengths,
+                  interpret=(impl == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def ssd_scan_op(x, dt, A, B_mat, C_mat, *, chunk=256, impl="reference"):
+    """SSD core scan; see ``repro.models.ssm`` for the full mixer."""
+    if impl == "reference":
+        return ref_lib.ssd_scan_ref(x, dt, A, B_mat, C_mat, chunk)
+    return _ssd(x, dt, A, B_mat, C_mat, chunk,
+                interpret=(impl == "interpret"))

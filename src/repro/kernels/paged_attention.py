@@ -1,0 +1,122 @@
+"""Paged decode attention TPU kernel — the Valet data plane hot spot.
+
+One query token attends over KV pages scattered through the device page
+pool.  The Global Page Table (block table) rides in SMEM via scalar
+prefetch (``PrefetchScalarGridSpec``) and drives the HBM->VMEM page DMA per
+grid step — i.e. the paper's GPT lookup + one-sided page read are fused into
+the attention kernel, so no gathered KV copy is ever materialized in HBM.
+
+This is also where the paper's "small block I/O, large RDMA message"
+flexibility (§3.3) shows up on TPU: the *logical* page (tokens) is small for
+allocator granularity, while the *physical* DMA per grid step is a full
+page x head tile — large, aligned, WQE-cache-miss-free in TPU terms (few,
+big DMA descriptors).
+
+Layout:
+  q:            (B, Hkv, G, D)   one token per sequence, grouped heads
+  k/v pool:     (n_slots, page, Hkv, D)
+  block_table:  (B, P) int32 pool slot per logical page (-1 pad)
+  lengths:      (B,)   valid token count per sequence
+Grid: (B, Hkv, P) with the page axis innermost/sequential; softmax state in
+VMEM scratch.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(block_table, lengths, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page, n_pages, scale):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    slot = block_table[b, pi]
+    length = lengths[b]
+
+    @pl.when(slot >= 0)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)               # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        # token validity within the page (ragged tail)
+        pos = pi * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos < length
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                               # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-20)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pool, v_pool, block_table, lengths, *,
+                    interpret=False):
+    """q: (B, Hq, D); pools: (n_slots, page, Hkv, D); block_table: (B, P).
+
+    Returns (B, Hq, D).  Pages with slot -1 are skipped (no DMA issued for
+    their compute; the safe slot-0 fetch is masked out).
+    """
+    b, hq, d = q.shape
+    n_slots, page, hkv, _ = k_pool.shape
+    n_pages = block_table.shape[1]
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, d)
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(_paged_kernel, page=page, n_pages=n_pages,
+                               scale=scale)
+    grid = (b, hkv, n_pages)
+
+    def kv_index(bi, hi, pi, block_table, lengths):
+        slot = jnp.maximum(block_table[bi, pi], 0)        # pad -> slot 0
+        return (slot, 0, hi, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, group, d),
+                             lambda bi, hi, pi, *refs: (bi, hi, 0, 0)),
+                pl.BlockSpec((1, page, 1, d), kv_index),
+                pl.BlockSpec((1, page, 1, d), kv_index),
+            ],
+            out_specs=pl.BlockSpec((1, 1, group, d),
+                                   lambda bi, hi, pi, *refs: (bi, hi, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, 1), jnp.float32),
+                pltpu.VMEM((group, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, group, d), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, qg, k_pool, v_pool)
+    return out.reshape(b, hq, d)

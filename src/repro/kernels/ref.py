@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every Pallas kernel (kernel-facing signatures).
+
+These delegate to the validated model-layer implementations
+(``models.attention`` / ``models.ssm``) so tests pin the kernels to the same
+math the framework executes on the jnp path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (reference_attention, decode_partial,
+                                    combine_partials)
+from repro.models.ssm import ssd_chunked
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B, S, Hq, D); k, v: (B, S, Hkv, D) -> (B, S, Hq, D)."""
+    return reference_attention(q, k, v, causal=causal, window=window)
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, lengths):
+    """Decode over a page pool.
+
+    q: (B, Hq, D); k_pool/v_pool: (n_slots, page, Hkv, D);
+    block_table: (B, P) int32 slot ids (-1 pad); lengths: (B,) valid tokens.
+    Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    n_slots, page, hkv, _ = k_pool.shape
+    p = block_table.shape[1]
+    safe = jnp.maximum(block_table, 0)
+    keys = k_pool[safe].reshape(b, p * page, hkv, d)
+    values = v_pool[safe].reshape(b, p * page, hkv, d)
+    pos = jnp.arange(p * page)[None, :]
+    valid = (pos < lengths[:, None]) & jnp.repeat(
+        block_table >= 0, page, axis=1)
+    m, l, acc = decode_partial(q, keys, values, valid)
+    return combine_partials(
+        (m[None], l[None], acc[None]), q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, B_mat, C_mat, chunk):
+    """SSD over chunks (no D skip / gating — kernel computes the core scan).
+
+    x: (B,S,H,P); dt: (B,S,H) post-softplus; A: (H,); B/C: (B,S,G,N).
+    Returns y (B,S,H,P), h_final (B,H,P,N).
+    """
+    return ssd_chunked(x, dt, A, B_mat, C_mat,
+                       jnp.zeros((x.shape[2],), jnp.float32), chunk)

@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective analysis.
+
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-8b \
+      --shape decode_32k --mesh single
+
+Artifacts: benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json
+(incremental: existing artifacts are skipped unless --force).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS, SHAPES, shape_applicable, get_arch, get_shape
+from repro.launch.mesh import make_production_mesh
+
+
+def _artifact_dir():
+    here = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    d = os.path.join(here, "benchmarks", "artifacts", "dryrun")
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def run_cell(arch_name, shape_name, mesh_name, mesh, out_dir, force=False,
+             kv_dtype="bf16"):
+    from repro import roofline as RL
+    from repro.launch.specs import build_cell
+
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    suffix = "" if kv_dtype == "bf16" else f"__{kv_dtype}"
+    path = os.path.join(out_dir, mesh_name,
+                        f"{arch_name}__{shape_name}{suffix}.json")
+    if os.path.exists(path) and not force:
+        print(f"[skip] {mesh_name}/{arch_name}/{shape_name} (cached)")
+        return json.load(open(path))
+
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": why}
+        json.dump(rec, open(path, "w"), indent=2)
+        print(f"[SKIP] {mesh_name}/{arch_name}/{shape_name}: {why}")
+        return rec
+
+    t0 = time.time()
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+           "kv_dtype": kv_dtype}
+    try:
+        cell = build_cell(arch_name, shape_name, mesh, kv_dtype=kv_dtype)
+        with mesh:
+            kw = {}
+            if cell.out_shardings is not None:
+                kw["out_shardings"] = cell.out_shardings
+            jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                             donate_argnums=cell.donate, **kw)
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        hlo = compiled.as_text()
+        # loop-aware analysis: cost_analysis counts while bodies once, so
+        # scans (layers/attention blocks/microbatches) would be undercounted
+        coll = RL.analyze_hlo(hlo)
+        n_chips = mesh.devices.size
+
+        mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+        n_micro = cell.meta.get("microbatches", 1)
+        terms = RL.RooflineTerms(
+            flops=max(float(cost.get("flops", 0.0)), coll["flops"]),
+            bytes_hbm=RL.analytic_bytes_for(
+                cfg, shape, mesh_shape, n_micro=n_micro,
+                kv_bytes=1.0 if kv_dtype == "int8" else 2.0),
+            bytes_coll=float(coll["total_collective"]),
+            model_flops=RL.model_flops_for(cfg, shape, n_chips),
+        )
+        rec.update({
+            "status": "ok",
+            "n_chips": int(n_chips),
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+                "peak_per_device": (mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+            },
+            "collectives": {k: v for k, v in coll.items()},
+            "cost_analysis_raw": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+                "hlo_bytes_unfused_upper_bound": coll["bytes"],
+            },
+            "roofline": terms.to_dict(),
+            "meta": {k: str(v) for k, v in cell.meta.items()},
+        })
+        fits = rec["memory"]["peak_per_device"] < 16 * (1 << 30)
+        rec["fits_hbm_16g"] = bool(fits)
+        print(f"[ok]   {mesh_name}/{arch_name}/{shape_name}: "
+              f"compile={t_compile:.0f}s "
+              f"mem/dev={rec['memory']['peak_per_device']/2**30:.2f}GiB "
+              f"bottleneck={terms.bottleneck} "
+              f"frac={terms.roofline_fraction:.3f}")
+    except Exception as e:                                   # noqa: BLE001
+        rec.update({"status": "error", "error": repr(e),
+                    "trace": traceback.format_exc()[-4000:]})
+        print(f"[ERR]  {mesh_name}/{arch_name}/{shape_name}: {e!r}")
+    json.dump(rec, open(path, "w"), indent=2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"])
+    args = ap.parse_args()
+
+    out_dir = args.out or _artifact_dir()
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        name = "multi" if multi else "single"
+        for a in archs:
+            for s in shapes:
+                results.append(run_cell(a, s, name, mesh, out_dir,
+                                        force=args.force,
+                                        kv_dtype=args.kv_dtype))
+    n_ok = sum(1 for r in results if r.get("status") == "ok")
+    n_skip = sum(1 for r in results if r.get("status") == "skipped")
+    n_err = sum(1 for r in results if r.get("status") == "error")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"of {len(results)} cells")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

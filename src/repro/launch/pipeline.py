@@ -1,0 +1,181 @@
+"""Pipeline parallelism over the pod axis (GPipe, 2 stages).
+
+Between pods the interconnect is DCN, not ICI — pipelining is the natural
+cross-pod strategy: per microbatch only one (mb, S, d) activation (and its
+gradient) crosses the pod boundary, instead of a full-parameter gradient
+all-reduce.  SPMD formulation:
+
+* layer parameters are stacked per stage with a leading pod dim sharded over
+  ``pod`` — each pod holds only its stage's layers;
+* ``shard_map`` is manual over ``pod`` only (``data``/``model`` stay
+  auto/GSPMD, so the whole Megatron-TP machinery from ``models.transformer``
+  keeps working inside the stage);
+* the GPipe schedule is a ``lax.scan`` over M+1 ticks: at tick t stage 0
+  runs microbatch t while stage 1 runs microbatch t-1 received via
+  ``ppermute``; stage masking is a ``where`` on the pod index (both pods
+  execute the same HLO).  Autodiff flows through scan+ppermute, giving the
+  backward pipeline for free (the ppermute transpose is the reverse hop).
+
+Uniform dense archs only (stages need identical layer structure).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models.layers import rms_norm
+from repro.models.moe import _shard_map
+from repro.train import trainer
+
+
+def _stage_forward(p_stage, x, seg, cfg, ctx):
+    """Apply one stage's stacked layers (uniform dense segment)."""
+    def body(carry, p_layer):
+        xc, aux = carry
+        xo, a = T.apply_layer(p_layer, xc, seg, cfg, ctx)
+        return (xo, aux + jnp.asarray(a, jnp.float32)), None
+
+    if ctx.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               p_stage)
+    return x, aux
+
+
+def make_pp_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                       n_micro: int = 8):
+    """2-stage GPipe train step on the (pod, data, model) mesh.
+
+    params layout: embed/unembed/final_ln replicated over pod; layer stack
+    (n_layers, ...) viewed as (2, n_layers//2, ...) with dim0 over ``pod``.
+    """
+    assert "pod" in mesh.axis_names, "PP needs the multi-pod mesh"
+    assert cfg.family == "dense" and not cfg.global_every and not cfg.window,\
+        "PP demo targets uniform dense archs"
+    segs = T.segments(cfg)
+    assert len(segs) == 1
+    seg = segs[0]
+    # inside the pod-manual region, with_sharding_constraint would need a
+    # Manual-pod AbstractMesh; we drop explicit constraints there and let
+    # GSPMD propagate data/model sharding from the (auto-sharded) weights
+    ctx = T.ParallelCtx(mesh=None, dp_axes=("data",), model_axis="model",
+                        remat=True, compute_dtype=jnp.bfloat16,
+                        loss_chunk=256)
+
+    dp = mesh.shape["data"]
+    b, s = shape.global_batch, shape.seq_len
+    mb = b // n_micro
+
+    def loss_tail(params, h, labels_mb):
+        h = rms_norm(params["final_ln"], h, cfg.norm_eps)
+        w = T.unembed_matrix(params, cfg).astype(h.dtype)
+        logits_ok = T.lm_loss  # reuse chunked machinery via a local closure
+        # chunked NLL (dense path to keep the pod-manual region simple)
+        chunk = min(ctx.loss_chunk, s)
+        nc = s // chunk
+        def body(carry, i):
+            hs = jax.lax.dynamic_slice_in_dim(h, i * chunk, chunk, 1)
+            ls = jax.lax.dynamic_slice_in_dim(labels_mb, i * chunk, chunk, 1)
+            logits = jnp.einsum("bcd,dv->bcv", hs, w).astype(jnp.float32)
+            logits = T.mask_vocab_pad(logits, cfg)
+            lse = jax.nn.logsumexp(logits, -1)
+            onehot = jax.nn.one_hot(ls, logits.shape[-1],
+                                    dtype=logits.dtype)
+            picked = jnp.einsum("bcv,bcv->bc", logits, onehot)
+            return carry + (lse - picked).sum(), None
+        tot, _ = jax.lax.scan(jax.checkpoint(body),
+                              jnp.zeros((), jnp.float32), jnp.arange(nc))
+        return tot / (mb * s)
+
+    def pp_loss(params, tokens, labels):
+        """tokens/labels: (n_micro, mb, S).  Manual over pod only."""
+
+        def podwise(stage_params, shared, tokens_l, labels_l):
+            # local view: the (n_layers,) stack is halved over pod -> my stage
+            my = jax.lax.axis_index("pod")
+            d = cfg.d_model
+
+            def tick(carry, t):
+                x_recv, loss_acc, aux_acc = carry
+                # stage 0 consumes microbatch t (clamped on drain tick)
+                t0 = jnp.minimum(t, n_micro - 1)
+                toks = jax.lax.dynamic_index_in_dim(
+                    tokens_l, t0, 0, keepdims=False)
+                x0 = shared["embed"][toks].astype(ctx.compute_dtype)
+                x = jnp.where(my == 0, x0, x_recv)
+                h, aux = _stage_forward(stage_params, x, seg, cfg, ctx)
+                # stage 1 finishes microbatch t-1 -> loss
+                t1 = jnp.clip(t - 1, 0, n_micro - 1)
+                lbls = jax.lax.dynamic_index_in_dim(
+                    labels_l, t1, 0, keepdims=False)
+                l = loss_tail(shared, h, lbls)
+                live1 = (my == 1) & (t >= 1)
+                live0 = (my == 0) & (t <= n_micro - 1)
+                loss_acc = loss_acc + jnp.where(live1, l, 0.0)
+                aux_acc = aux_acc + jnp.where(live0 | live1, aux, 0.0)
+                # hop: stage0 output of micro t -> stage1 input for tick t+1
+                x_next = jax.lax.ppermute(h, "pod", [(0, 1), (1, 0)])
+                return (x_next, loss_acc, aux_acc), None
+
+            x0 = jnp.zeros((mb, s, d), ctx.compute_dtype)
+            (xf, loss_sum, aux_sum), _ = jax.lax.scan(
+                tick, (x0, jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32)),
+                jnp.arange(n_micro + 1))
+            # stage 1 owns the loss; sum over pods (stage 0 contributes 0)
+            loss = jax.lax.psum(loss_sum, "pod") / n_micro
+            return loss + jax.lax.psum(aux_sum, "pod") / (2 * n_micro)
+
+        stage_stack = params["segments"][0]
+        shared = {k: params[k] for k in params if k != "segments"}
+        # manual over the pod axis ONLY — data/model stay automatic, so all
+        # the Megatron-TP sharding inside the stage keeps working via GSPMD
+        return jax.shard_map(
+            podwise, mesh=mesh, axis_names={"pod"},
+            in_specs=(P("pod"), P(), P(), P()),
+            out_specs=P(),
+            check_vma=False,
+        )(stage_stack, shared, tokens, labels)
+
+    def train_step(params, opt_state, tokens, labels):
+        params_c = trainer.cast_for_compute(params, jnp.bfloat16)
+        loss, grads = jax.value_and_grad(pp_loss)(params_c, tokens, labels)
+        new_p, new_o, metrics = optim.update(optim.AdamWConfig(), params,
+                                             grads, opt_state)
+        metrics["loss"] = loss
+        return new_p, new_o, metrics
+
+    # shardings ------------------------------------------------------------
+    pshape = jax.eval_shape(
+        lambda: T.init_params(jax.random.PRNGKey(0), cfg, jnp.float32))
+    pspecs = T.param_pspecs(pshape, cfg, model_size=mesh.shape["model"])
+
+    def podded(path_spec_shape):
+        spec, shp = path_spec_shape
+        return P(*(("pod",) + tuple(spec)))
+
+    # layer stacks: (L, ...) -> leading dim over pod (L = 2 * L/2 views)
+    seg_specs = jax.tree.map(
+        lambda sp: P(*(["pod"] + list(sp)[1:])), pspecs["segments"][0],
+        is_leaf=lambda x: isinstance(x, P))
+    pspecs = dict(pspecs)
+    pspecs["segments"] = [seg_specs]
+    ns = lambda sp: NamedSharding(mesh, sp)
+    p_shard = jax.tree.map(ns, pspecs, is_leaf=lambda x: isinstance(x, P))
+    m_shard = p_shard
+    opt_shard = optim.AdamWState(ns(P()), m_shard, m_shard)
+    batch_shard = ns(P(None, "data", None))
+    ins = (p_shard, opt_shard, batch_shard, batch_shard)
+
+    pstruct = pshape
+    args = (pstruct, jax.eval_shape(optim.init, pstruct),
+            jax.ShapeDtypeStruct((n_micro, mb, s), jnp.int32),
+            jax.ShapeDtypeStruct((n_micro, mb, s), jnp.int32))
+    return train_step, args, ins

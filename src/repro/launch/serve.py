@@ -1,0 +1,72 @@
+"""Serving launcher: the Valet engine over a batch of requests.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma3-4b --local \
+        --requests 8 --policy valet --pool-slots 16
+
+``--dryrun`` lowers+compiles the sharded serve_step for the production mesh
+(same path the dry-run sweep uses).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--local", action="store_true")
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--policy", default="valet")
+    ap.add_argument("--pool-slots", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--page", type=int, default=8)
+    args = ap.parse_args()
+
+    if args.dryrun:
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        from repro.launch.dryrun import run_cell, _artifact_dir
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+        rec = run_cell(args.arch, args.shape, "single", mesh,
+                       _artifact_dir(), force=True)
+        return 0 if rec.get("status") == "ok" else 1
+
+    import numpy as np
+    import jax
+    from repro.configs import get_arch, reduced
+    from repro.core.policies import POLICIES
+    from repro.models import transformer as T
+    from repro.serve import ValetServeEngine
+
+    cfg = reduced(get_arch(args.arch)) if args.local else get_arch(args.arch)
+    ctx = T.ParallelCtx(remat=False, q_block=16, kv_block=16)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    eng = ValetServeEngine(
+        params, cfg, ctx, max_batch=args.max_batch,
+        max_seq=args.prompt_len + args.max_new + args.page,
+        page=args.page, pool_slots=args.pool_slots,
+        policy=POLICIES[args.policy])
+    rng = np.random.default_rng(0)
+    for _ in range(args.requests):
+        eng.submit(rng.integers(2, cfg.vocab, size=args.prompt_len),
+                   args.max_new)
+    reqs = eng.run()
+    s = eng.stats
+    print(f"policy={args.policy} requests={len(reqs)} "
+          f"done={sum(r.status == 'done' for r in reqs)} tokens={s.tokens}")
+    print(f"steps={s.steps} pauses={s.pauses} spilled={s.spilled_pages} "
+          f"restored={s.restored_pages} recomputes={s.recomputes}")
+    print(f"sim_time={s.sim_time_us / 1e3:.2f}ms "
+          f"bg_time={s.bg_time_us / 1e3:.2f}ms wall={s.wall_time_s:.2f}s")
+    for r in reqs[:4]:
+        print(f"  req{r.rid}: {r.tokens_out[:8]}...")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

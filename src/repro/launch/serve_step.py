@@ -1,0 +1,500 @@
+"""Sharded serve_step: decode with the Valet page pool distributed across
+the production mesh.
+
+Distribution plan (DESIGN.md §5):
+
+* batch over the DP axes; **KV pages round-robin over the KV axes** — each
+  device cell is a "peer memory donor" holding a shard of every sequence's
+  pages (paper §4.3: spread pages evenly across peers);
+* paged attention runs inside ``shard_map``: each peer computes a partial
+  softmax over *its* pages (one-sided read: no control-plane work on the
+  peer), and an exact flash-decoding combine over the KV axes costs one tiny
+  ``psum`` — the TPU translation of Valet's one-sided RDMA READ fan-out;
+* appends are masked to the owning peer (sender-driven placement);
+* weights stay Megatron-TP over ``model``; per-token activations are
+  replicated across ``model`` (decode is memory-bound; the all-gather of one
+  token's q is noise against the page-pool reads).
+
+Shapes:
+  decode_32k : batch over (pod,)data, pages over model.
+  long_500k  : batch=1 -> pure sequence parallelism: pages over ALL axes.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as T
+from repro.models.attention import (decode_partial, combine_partials,
+                                    combine_partials_psum)
+from repro.models.layers import apply_rope, rms_norm, swiglu, gelu_mlp
+from repro.models.moe import moe_ffn, _shard_map
+from repro.models.transformer import ParallelCtx, Segment, segments
+
+
+@dataclass(frozen=True)
+class DecodePlan:
+    batch_axes: Tuple[str, ...]
+    kv_axes: Tuple[str, ...]
+    page: int = 64
+    headroom: float = 1.25
+    kv_dtype: str = "bf16"        # bf16 | int8 (quantized page pool)
+
+    def batch_spec(self):
+        if not self.batch_axes:
+            return None
+        return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+
+    def kv_spec(self):
+        return self.kv_axes if len(self.kv_axes) > 1 else self.kv_axes[0]
+
+
+def plan_for(shape: ShapeConfig, mesh, kv_dtype: str = "bf16") -> DecodePlan:
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n != "model")
+    if shape.global_batch == 1:
+        return DecodePlan(batch_axes=(), kv_axes=tuple(names),
+                          kv_dtype=kv_dtype)
+    return DecodePlan(batch_axes=dp, kv_axes=("model",), kv_dtype=kv_dtype)
+
+
+def axis_sizes(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# --------------------------------------------------------------------------
+# Cache geometry
+# --------------------------------------------------------------------------
+
+def cache_geometry(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                   plan: DecodePlan):
+    b = shape.global_batch
+    dp = axis_sizes(mesh, plan.batch_axes)
+    kvr = axis_sizes(mesh, plan.kv_axes)
+    b_loc = b // max(dp, 1)
+    p_tot = -(-shape.seq_len // plan.page)             # pages per sequence
+    p_loc = -(-p_tot // kvr)
+    slots_loc = max(int(b_loc * p_loc * plan.headroom), b_loc)
+    return dict(b=b, dp=dp, kvr=kvr, b_loc=b_loc, p_tot=p_tot, p_loc=p_loc,
+                slots_loc=slots_loc)
+
+
+def decode_struct(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                  plan: DecodePlan, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs + PartitionSpecs for caches and step inputs."""
+    geo = cache_geometry(cfg, shape, mesh, plan)
+    hd = cfg.resolved_head_dim
+    kv = cfg.n_kv_heads
+    bsp = plan.batch_spec()
+    ksp = plan.kv_spec()
+    segs = segments(cfg)
+
+    caches, specs = [], []
+    for seg in segs:
+        c, s = {}, {}
+        n = seg.count
+        if seg.kind in ("attn", "dec", "hybrid") and seg.window == 0:
+            shp = (n, max(geo["dp"], 1), geo["kvr"], geo["slots_loc"],
+                   plan.page, kv, hd)
+            pool_dt = jnp.int8 if plan.kv_dtype == "int8" else dtype
+            c["pool_k"] = jax.ShapeDtypeStruct(shp, pool_dt)
+            c["pool_v"] = jax.ShapeDtypeStruct(shp, pool_dt)
+            s["pool_k"] = s["pool_v"] = P(None, bsp, ksp, None, None, None, None)
+            if plan.kv_dtype == "int8":
+                sshp = shp[:-1]               # per (slot, pos, head) scales
+                c["scale_k"] = jax.ShapeDtypeStruct(sshp, dtype)
+                c["scale_v"] = jax.ShapeDtypeStruct(sshp, dtype)
+                s["scale_k"] = s["scale_v"] = P(None, bsp, ksp, None, None,
+                                                None)
+        if seg.kind in ("attn", "hybrid") and seg.window > 0:
+            shp = (n, geo["b"], seg.window, kv, hd)
+            c["ring_k"] = jax.ShapeDtypeStruct(shp, dtype)
+            c["ring_v"] = jax.ShapeDtypeStruct(shp, dtype)
+            s["ring_k"] = s["ring_v"] = P(None, bsp, None, None, None)
+        if seg.kind in ("ssm", "hybrid"):
+            d_in, nh, d_bc = ssm_lib.ssm_dims(cfg.d_model, cfg.ssm)
+            mp = mesh.shape["model"]
+            c["ssm_h"] = jax.ShapeDtypeStruct(
+                (n, geo["b"], nh, cfg.ssm.head_dim, cfg.ssm.d_state),
+                jnp.float32)
+            if nh % mp == 0:           # shard heads, else head_dim, else rep
+                s["ssm_h"] = P(None, bsp, "model", None, None)
+            elif cfg.ssm.head_dim % mp == 0:
+                s["ssm_h"] = P(None, bsp, None, "model", None)
+            else:
+                s["ssm_h"] = P(None, bsp, None, None, None)
+            c["ssm_conv"] = jax.ShapeDtypeStruct(
+                (n, geo["b"], cfg.ssm.conv_kernel - 1, d_in + d_bc), dtype)
+            s["ssm_conv"] = P(None, bsp, None, None)
+        if seg.kind in ("xattn", "dec"):
+            ncross = cfg.n_frontend_tokens
+            shp = (n, geo["b"], ncross, kv, hd)
+            c["cross_k"] = jax.ShapeDtypeStruct(shp, dtype)
+            c["cross_v"] = jax.ShapeDtypeStruct(shp, dtype)
+            s["cross_k"] = s["cross_v"] = P(None, bsp, None, None, None)
+        caches.append(c)
+        specs.append(s)
+
+    step = {
+        "tokens": jax.ShapeDtypeStruct((geo["b"],), jnp.int32),
+        "block_table": jax.ShapeDtypeStruct(
+            (max(geo["dp"], 1), geo["kvr"], geo["b_loc"], geo["p_loc"]),
+            jnp.int32),
+        "app_slot": jax.ShapeDtypeStruct((geo["b"],), jnp.int32),
+        "app_off": jax.ShapeDtypeStruct((geo["b"],), jnp.int32),
+        "app_rank": jax.ShapeDtypeStruct((geo["b"],), jnp.int32),
+        "lengths": jax.ShapeDtypeStruct((geo["b"],), jnp.int32),
+    }
+    step_specs = {
+        "tokens": P(bsp),
+        "block_table": P(bsp, ksp, None, None),
+        "app_slot": P(bsp),
+        "app_off": P(bsp),
+        "app_rank": P(bsp),
+        "lengths": P(bsp),
+    }
+    return caches, specs, step, step_specs, geo
+
+
+# --------------------------------------------------------------------------
+# The sharded paged-attention inner (one layer)
+# --------------------------------------------------------------------------
+
+def _quantize_token(x, eps=1e-6):
+    """(B, kv, hd) bf16 -> int8 values + per-(B, kv) scales."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, eps)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale.astype(x.dtype)
+
+
+def _paged_attn_sharded(cache, bt, q, k, v, app_slot, app_off,
+                        app_rank, lengths, *, mesh, plan: DecodePlan,
+                        page: int, out_dtype):
+    """shard_map'd append + partial attention + cross-peer combine.
+
+    Global shapes: pool (DP, KVR, slots, page, kv, hd); bt (DP, KVR, B_loc,
+    P_loc); q (B, Hq, hd); k/v (B, kv, hd); app_*/lengths (B,).
+    kv_dtype="int8": pool stores quantized pages + per-(slot,pos,head)
+    scales — halves the per-step HBM stream of the Valet pool (§Perf
+    iteration 7, beyond-paper).
+    """
+    bsp = plan.batch_spec()
+    ksp = plan.kv_spec()
+    kvr = axis_sizes(mesh, plan.kv_axes)
+    quant = plan.kv_dtype == "int8"
+
+    def body(pk, pv, sk, sv, btl, ql, kl, vl, aslot, aoff, arank, lens):
+        # local blocks: pk (1, 1, slots, page, kv, hd); btl (1,1,B,P_loc)
+        pk, pv = pk[0, 0], pv[0, 0]
+        sk, sv = (sk[0, 0], sv[0, 0]) if quant else (sk, sv)
+        btl = btl[0, 0]
+        # my combined kv-rank index
+        my = jnp.zeros((), jnp.int32)
+        for a in plan.kv_axes:
+            my = my * mesh.shape[a] + jax.lax.axis_index(a)
+        own = arank == my
+        safe_slot = jnp.where(own, aslot, pk.shape[0])
+        if quant:
+            kq, ks = _quantize_token(kl)
+            vq, vs = _quantize_token(vl)
+            pk = pk.at[safe_slot, aoff].set(kq, mode="drop")
+            pv = pv.at[safe_slot, aoff].set(vq, mode="drop")
+            sk = sk.at[safe_slot, aoff].set(ks, mode="drop")
+            sv = sv.at[safe_slot, aoff].set(vs, mode="drop")
+        else:
+            pk = pk.at[safe_slot, aoff].set(kl, mode="drop")
+            pv = pv.at[safe_slot, aoff].set(vl, mode="drop")
+
+        # page-chunked flash accumulation: never materialize the full local
+        # KV gather (CPU temps showed ~20 GiB/dev for MHA archs otherwise);
+        # this is exactly how the Pallas paged kernel walks the pool
+        # (§Perf iteration 8)
+        bl, p_loc = btl.shape
+        chunk = next(c for c in (8, 4, 2, 1) if p_loc % c == 0)
+        n_chunks = p_loc // chunk
+        hq_g = ql.shape[1]
+        hd_ = ql.shape[2]
+        n_kv = pk.shape[2]
+
+        def chunk_step(carry, ci):
+            m, l, acc = carry
+            btc = jax.lax.dynamic_slice_in_dim(btl, ci * chunk, chunk,
+                                               axis=1)
+            safe = jnp.maximum(btc, 0)
+            keys = pk[safe]                        # (B, C, page, kv, hd)
+            values = pv[safe]
+            if quant:
+                keys = keys.astype(out_dtype) * sk[safe][..., None]
+                values = values.astype(out_dtype) * sv[safe][..., None]
+            keys = keys.reshape(bl, chunk * page, n_kv, hd_)
+            values = values.reshape(bl, chunk * page, n_kv, hd_)
+            j = ci * chunk + jnp.arange(chunk)[None, :]
+            abs_base = (j * kvr + my) * page
+            pos = abs_base[:, :, None] + jnp.arange(page)[None, None, :]
+            pos = jnp.broadcast_to(pos, (bl, chunk, page)).reshape(bl, -1)
+            valid = (pos <= lens[:, None]) & jnp.repeat(
+                btc >= 0, page, axis=1)
+            m2, l2, a2 = decode_partial(ql, keys, values, valid)
+            mn = jnp.maximum(m, m2)
+            c1 = jnp.exp(m - mn)
+            c2 = jnp.exp(m2 - mn)
+            return (mn, l * c1 + l2 * c2,
+                    acc * c1[..., None] + a2 * c2[..., None]), None
+
+        g = hq_g // n_kv
+        m0 = jnp.full((bl, n_kv, g), -1e30, jnp.float32)
+        l0 = jnp.zeros((bl, n_kv, g), jnp.float32)
+        a0 = jnp.zeros((bl, n_kv, g, hd_), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(chunk_step, (m0, l0, a0),
+                                      jnp.arange(n_chunks))
+        out = combine_partials_psum(m, l, acc, plan.kv_axes, out_dtype)
+        if quant:
+            return (pk[None, None], pv[None, None], sk[None, None],
+                    sv[None, None], out)
+        return pk[None, None], pv[None, None], out
+
+    pool_spec = P(bsp, ksp, None, None, None, None)
+    scale_spec = P(bsp, ksp, None, None, None)
+    vec_spec = P(bsp, None, None)
+    scal_spec = P(bsp)
+    if quant:
+        outs = _shard_map(
+            body, mesh,
+            (pool_spec, pool_spec, scale_spec, scale_spec,
+             P(bsp, ksp, None, None), vec_spec, vec_spec, vec_spec,
+             scal_spec, scal_spec, scal_spec, scal_spec),
+            (pool_spec, pool_spec, scale_spec, scale_spec, vec_spec),
+        )(cache["pool_k"], cache["pool_v"], cache["scale_k"],
+          cache["scale_v"], bt, q, k, v, app_slot, app_off, app_rank,
+          lengths)
+        pk, pv, sk, sv, out = outs
+        return {"pool_k": pk, "pool_v": pv, "scale_k": sk,
+                "scale_v": sv}, out
+    pk, pv, out = _shard_map(
+        body, mesh,
+        (pool_spec, pool_spec, P(), P(), P(bsp, ksp, None, None), vec_spec,
+         vec_spec, vec_spec, scal_spec, scal_spec, scal_spec, scal_spec),
+        (pool_spec, pool_spec, vec_spec),
+    )(cache["pool_k"], cache["pool_v"], jnp.zeros(()), jnp.zeros(()),
+      bt, q, k, v, app_slot, app_off, app_rank, lengths)
+    return {"pool_k": pk, "pool_v": pv}, out
+
+
+# --------------------------------------------------------------------------
+# Migration data plane (paper §3.5 at pod scale)
+# --------------------------------------------------------------------------
+
+def make_migrate_step(mesh, plan: DecodePlan, pool_struct):
+    """Data plane for sender-driven migration between peer shards.
+
+    The control plane (Valet sender) picks victims by Non-Activity-Duration
+    and a destination by power-of-two-choices; this jitted step moves the
+    selected page payloads one hop along the KV axis ring
+    (``collective_permute``) and installs them at the destination slots.
+    Reads keep hitting the source slots until the control plane cuts the
+    block table over — the data plane never blocks decode.
+
+    pool (n, DP, KVR, slots, page, kv, hd); src/dst slots (DP, KVR, n_mig).
+    """
+    bsp = plan.batch_spec()
+    ksp = plan.kv_spec()
+    axis = plan.kv_axes[-1]
+    n_ranks = mesh.shape[axis]
+    perm = [(i, (i + 1) % n_ranks) for i in range(n_ranks)]
+
+    def body(pk, pv, src, dst):
+        pk, pv = pk[:, 0, 0], pv[:, 0, 0]       # (n, slots, page, kv, hd)
+        src, dst = src[0, 0], dst[0, 0]          # (n_mig,)
+        payload_k = pk[:, src]                   # (n, n_mig, page, kv, hd)
+        payload_v = pv[:, src]
+        payload_k = jax.lax.ppermute(payload_k, axis, perm)
+        payload_v = jax.lax.ppermute(payload_v, axis, perm)
+        pk = pk.at[:, dst].set(payload_k)
+        pv = pv.at[:, dst].set(payload_v)
+        return pk[:, None, None], pv[:, None, None]
+
+    pool_spec = P(None, bsp, ksp, None, None, None, None)
+    slot_spec = P(bsp, ksp, None)
+
+    def migrate_step(pool_k, pool_v, src_slots, dst_slots):
+        return _shard_map(body, mesh,
+                          (pool_spec, pool_spec, slot_spec, slot_spec),
+                          (pool_spec, pool_spec))(
+            pool_k, pool_v, src_slots, dst_slots)
+
+    return migrate_step
+
+
+# --------------------------------------------------------------------------
+# Full serve step
+# --------------------------------------------------------------------------
+
+def make_serve_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                    plan: Optional[DecodePlan] = None,
+                    compute_dtype=jnp.bfloat16):
+    """Build serve_step(params, caches, step) -> (next_tokens, caches)."""
+    plan = plan or plan_for(shape, mesh)
+    ctx = ParallelCtx(mesh=mesh,
+                      dp_axes=plan.batch_axes or ("data",),
+                      compute_dtype=compute_dtype)
+    segs = segments(cfg)
+    hd = cfg.resolved_head_dim
+    bsp = plan.batch_spec()
+
+    def qkv_one(p, x, lengths):
+        b = x.shape[0]
+        q = jnp.einsum("bd,dh->bh", x, p["wq"]).reshape(b, cfg.n_heads, hd)
+        k = jnp.einsum("bd,dh->bh", x, p["wk"]).reshape(b, cfg.n_kv_heads, hd)
+        v = jnp.einsum("bd,dh->bh", x, p["wv"]).reshape(b, cfg.n_kv_heads, hd)
+        if cfg.rope_theta > 0:
+            q = apply_rope(q[:, None], lengths[:, None], cfg.rope_theta)[:, 0]
+            k = apply_rope(k[:, None], lengths[:, None], cfg.rope_theta)[:, 0]
+        # replicate across model for the page-pool read
+        q = T.shard(q, ctx, bsp, None, None)
+        k = T.shard(k, ctx, bsp, None, None)
+        v = T.shard(v, ctx, bsp, None, None)
+        return q, k, v
+
+    def ring_attn(p, x, ring_k, ring_v, step):
+        """Sliding-window decode, batch-local inside shard_map.
+
+        The ring append is a per-sequence scatter; under plain GSPMD the
+        traced indices over the batch-sharded dim forced a full ring
+        all-gather per layer (danube baseline: 60.9ms collective per step).
+        shard_map makes it a purely local update (§Perf iteration 6)."""
+        b = x.shape[0]
+        lengths = step["lengths"]
+        q, k, v = qkv_one(p, x, lengths)
+
+        def body(rk, rv, ql, kl, vl, lens):
+            bl = ql.shape[0]
+            w = rk.shape[1]
+            idx = lens % w
+            rk = rk.at[jnp.arange(bl), idx].set(kl)
+            rv = rv.at[jnp.arange(bl), idx].set(vl)
+            slot = jnp.arange(w)[None]
+            cur = lens[:, None]
+            abs_pos = cur - ((cur - slot) % w)
+            valid = (abs_pos >= 0) & (abs_pos <= cur)
+            m, l, acc = decode_partial(ql, rk, rv, valid)
+            out = combine_partials((m[None], l[None], acc[None]), ql.dtype)
+            return rk, rv, out
+
+        if mesh is not None:
+            rspec = P(bsp, None, None, None)
+            vspec = P(bsp, None, None)
+            ring_k, ring_v, out = _shard_map(
+                body, mesh,
+                (rspec, rspec, vspec, vspec, vspec, P(bsp)),
+                (rspec, rspec, vspec),
+            )(ring_k, ring_v, q, k, v, lengths)
+        else:
+            ring_k, ring_v, out = body(ring_k, ring_v, q, k, v, lengths)
+        return jnp.einsum("bh,hd->bd", out.reshape(b, -1), p["wo"]), \
+            ring_k, ring_v
+
+    def paged_attn(p, x, cache, step):
+        b = x.shape[0]
+        q, k, v = qkv_one(p, x, step["lengths"])
+        updates, out = _paged_attn_sharded(
+            cache, step["block_table"], q, k, v,
+            step["app_slot"], step["app_off"], step["app_rank"],
+            step["lengths"], mesh=mesh, plan=plan, page=plan.page,
+            out_dtype=x.dtype)
+        return jnp.einsum("bh,hd->bd", out.reshape(b, -1), p["wo"]), updates
+
+    def cross_attn(p, x, ck, cv):
+        b = x.shape[0]
+        q = jnp.einsum("bd,dh->bh", x, p["wq"]).reshape(b, cfg.n_heads, hd)
+        q = T.shard(q, ctx, bsp, None, None)
+        valid = jnp.ones(ck.shape[:2], bool)
+        m, l, acc = decode_partial(q, ck, cv, valid)
+        out = combine_partials((m[None], l[None], acc[None]), x.dtype)
+        return jnp.einsum("bh,hd->bd", out.reshape(b, -1), p["wo"])
+
+    def ffn(p, x, seg: Segment):
+        if seg.ffn == "moe":
+            out, _ = moe_ffn(p["moe"], x[:, None, :], cfg.moe, mesh=mesh,
+                             model_axis="model",
+                             dp_spec=P(bsp, None, None))
+            return out[:, 0]
+        if seg.ffn == "gelu":
+            return gelu_mlp(p["mlp"], x)
+        return swiglu(p["mlp"], x)
+
+    def layer(p, x, cache, seg: Segment, step):
+        h = rms_norm(p["ln1"], x, cfg.norm_eps)
+        new_c = dict(cache)
+        if seg.kind in ("attn", "dec"):
+            if seg.window == 0:
+                a, upd = paged_attn(p["attn"], h, cache, step)
+                new_c.update(upd)
+            else:
+                a, new_c["ring_k"], new_c["ring_v"] = ring_attn(
+                    p["attn"], h, cache["ring_k"], cache["ring_v"], step)
+            x = x + a
+            if seg.kind == "dec":
+                hx = rms_norm(p["lnx"], x, cfg.norm_eps)
+                x = x + cross_attn(p["xattn"], hx, cache["cross_k"],
+                                   cache["cross_v"])
+        elif seg.kind == "xattn":
+            gate = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x.dtype)
+            x = x + gate * cross_attn(p["xattn"], h, cache["cross_k"],
+                                      cache["cross_v"])
+        elif seg.kind in ("ssm", "hybrid"):
+            st = {"h": cache["ssm_h"], "conv": cache["ssm_conv"]}
+            y, st = ssm_lib.ssm_decode_step(p["ssm"], h, st, cfg.d_model,
+                                            cfg.ssm)
+            new_c["ssm_h"], new_c["ssm_conv"] = st["h"], st["conv"]
+            if seg.kind == "hybrid":
+                if seg.window == 0:
+                    a, upd = paged_attn(p["attn"], h, cache, step)
+                    new_c.update(upd)
+                else:
+                    a, new_c["ring_k"], new_c["ring_v"] = ring_attn(
+                        p["attn"], h, cache["ring_k"], cache["ring_v"], step)
+                y = 0.5 * (rms_norm(p["attn_norm"], a, cfg.norm_eps)
+                           + rms_norm(p["ssm_norm"], y, cfg.norm_eps))
+            x = x + y
+        if seg.ffn != "none":
+            h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+            x = x + ffn(p, h2, seg)
+        return T.shard(x, ctx, bsp, None), new_c
+
+    def serve_step(params, caches, step):
+        x = params["embed"][step["tokens"]].astype(compute_dtype)
+        x = T.shard(x, ctx, bsp, None)
+        new_caches = []
+        for p_stack, cache, seg in zip(params["segments"], caches, segs):
+            if seg.count == 1:
+                p1 = jax.tree.map(lambda a: a[0], p_stack)
+                c1 = {k: v[0] for k, v in cache.items()}
+                x, c1 = layer(p1, x, c1, seg, step)
+                new_caches.append({k: v[None] for k, v in c1.items()})
+            else:
+                def body(xc, inp, seg=seg):
+                    p1, c1 = inp
+                    xo, co = layer(p1, xc, c1, seg, step)
+                    return xo, co
+                x, co = jax.lax.scan(body, x, (p_stack, cache))
+                new_caches.append(co)
+        x = rms_norm(params["final_ln"], x, cfg.norm_eps)
+        w = T.unembed_matrix(params, cfg).astype(x.dtype)
+        logits = T.mask_vocab_pad(
+            jnp.einsum("bd,dv->bv", x, w).astype(jnp.float32), cfg)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_caches
+
+    return serve_step, plan, ctx

@@ -1,0 +1,154 @@
+"""Cell builders: for every (arch x shape) produce the step function, its
+abstract inputs (ShapeDtypeStruct — no allocation), and shardings.
+
+Used by the dry-run (lower+compile only) and by the real launchers.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.configs import get_arch, get_shape, shape_applicable
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import serve_step as SS
+from repro.launch.mesh import mesh_axes
+from repro.models import transformer as T
+from repro.train import trainer
+
+
+@dataclass
+class Cell:
+    arch: ArchConfig
+    shape: ShapeConfig
+    fn: Any                      # callable to jit
+    args: tuple                  # ShapeDtypeStruct pytrees
+    in_shardings: Any
+    donate: Tuple[int, ...]
+    meta: Dict[str, Any]
+    out_shardings: Any = None    # explicit -> enables donation aliasing
+
+
+def params_struct(cfg: ArchConfig, dtype):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: T.init_params(key, cfg, dtype=dtype))
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def _param_shardings(mesh, cfg, pshape):
+    specs = T.param_pspecs(pshape, cfg, model_size=mesh.shape["model"])
+    return jax.tree.map(lambda s: _ns(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def microbatches_for(cfg: ArchConfig, shape: ShapeConfig, mesh) -> int:
+    """Pick grad-accum so the per-microbatch activation fits HBM."""
+    dp_axes, _ = mesh_axes(mesh)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    b_local = max(shape.global_batch // dp, 1)
+    if cfg.n_frontend_tokens and cfg.d_model >= 4096:
+        micro_local = 1               # vlm: frontend KV inflates activations
+    elif cfg.d_model >= 2048:
+        micro_local = 2
+    else:
+        micro_local = 4
+    return max(b_local // micro_local, 1)
+
+
+def build_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh) -> Cell:
+    dp_axes, model_axis = mesh_axes(mesh)
+    ctx = T.ParallelCtx(mesh=mesh, dp_axes=dp_axes, model_axis=model_axis,
+                        remat=True, compute_dtype=jnp.bfloat16,
+                        loss_chunk=256, save_collectives=True)
+    tcfg = trainer.TrainConfig(
+        microbatches=microbatches_for(cfg, shape, mesh),
+        zero1=True, compute_dtype=jnp.bfloat16)
+    has_fe = cfg.n_frontend_tokens > 0
+    fn = trainer.make_train_step(cfg, ctx, tcfg, has_frontend=has_fe)
+    pshape = params_struct(cfg, jnp.float32)
+    opt_shape = jax.eval_shape(optim.init, pshape)
+    b, s = shape.global_batch, shape.seq_len
+    nm = tcfg.microbatches
+    toks = jax.ShapeDtypeStruct((nm, b // nm, s), jnp.int32)
+    args = [pshape, opt_shape, toks, toks]
+    if has_fe:
+        args.append(jax.ShapeDtypeStruct(
+            (nm, b // nm, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16))
+    ins, outs = trainer.make_shardings(cfg, ctx, tcfg, pshape,
+                                       has_frontend=has_fe)
+    return Cell(cfg, shape, fn, tuple(args), ins, donate=(0, 1),
+                meta={"kind": "train", "microbatches": tcfg.microbatches},
+                out_shardings=outs)
+
+
+def build_prefill_cell(cfg: ArchConfig, shape: ShapeConfig, mesh) -> Cell:
+    dp_axes, model_axis = mesh_axes(mesh)
+    # sequence-parallel residuals pay off for prefill (no backward
+    # transposes) but only when attention itself shards by heads; MHA archs
+    # with heads % TP != 0 shard via transient head padding (whisper), so
+    # only GQA archs with unshardable heads (hymba 25H/5kv) keep SP off
+    mp = mesh.shape["model"]
+    sp = (cfg.n_heads % mp == 0 or cfg.n_heads == cfg.n_kv_heads) \
+        if cfg.n_heads else True
+    ctx = T.ParallelCtx(mesh=mesh, dp_axes=dp_axes, model_axis=model_axis,
+                        remat=False, compute_dtype=jnp.bfloat16,
+                        seq_parallel=sp)
+    has_fe = cfg.n_frontend_tokens > 0
+
+    def fn(params, tokens, frontend=None):
+        return T.prefill_logits(params, tokens, cfg, ctx, frontend=frontend)
+
+    pshape = params_struct(cfg, jnp.bfloat16)
+    b, s = shape.global_batch, shape.seq_len
+    args = [pshape, jax.ShapeDtypeStruct((b, s), jnp.int32)]
+    ins = [_param_shardings(mesh, cfg, pshape),
+           _ns(mesh, P(ctx.dp, None))]
+    if has_fe:
+        args.append(jax.ShapeDtypeStruct(
+            (b, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16))
+        ins.append(_ns(mesh, P(ctx.dp, None, None)))
+    return Cell(cfg, shape, fn, tuple(args), tuple(ins), donate=(),
+                meta={"kind": "prefill"})
+
+
+def build_decode_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+                      kv_dtype: str = "bf16") -> Cell:
+    plan = SS.plan_for(shape, mesh, kv_dtype=kv_dtype)
+    fn, plan, ctx = SS.make_serve_step(cfg, shape, mesh, plan=plan)
+    caches, cache_specs, step, step_specs, geo = SS.decode_struct(
+        cfg, shape, mesh, plan)
+    pshape = params_struct(cfg, jnp.bfloat16)
+    p_shard = _param_shardings(mesh, cfg, pshape)
+    cache_shards = [
+        {k: _ns(mesh, s[k]) for k in c} for c, s in zip(caches, cache_specs)]
+    step_shards = {k: _ns(mesh, step_specs[k]) for k in step}
+    args = (pshape, caches, step)
+    ins = (p_shard, cache_shards, step_shards)
+    outs = (step_shards["tokens"], cache_shards)
+    return Cell(cfg, shape, fn, args, ins, donate=(1,),
+                meta={"kind": "decode", "plan": plan, "geo": geo},
+                out_shardings=outs)
+
+
+def build_cell(arch_name: str, shape_name: str, mesh,
+               kv_dtype: str = "bf16") -> Optional[Cell]:
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None
+    if shape.kind == "train":
+        return build_train_cell(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return build_prefill_cell(cfg, shape, mesh)
+    return build_decode_cell(cfg, shape, mesh, kv_dtype=kv_dtype)

@@ -1,0 +1,236 @@
+"""Attention: blockwise (flash-style) train/prefill path + decode paths.
+
+Three implementations:
+
+* ``reference_attention`` — materializes the (Sq, Sk) score matrix.  Oracle
+  for tests only.
+* ``blockwise_attention`` — flash-style online-softmax over KV blocks, pure
+  jnp + ``lax.scan``.  Differentiable; never materializes (Sq, Sk).  Windowed
+  attention visits only the statically-known band of KV blocks.  This is the
+  path used for dry-runs and CPU execution; the Pallas kernel
+  (``repro.kernels.flash_attention``) is the TPU fast path with identical
+  semantics.
+* ``decode_partial`` / ``combine_partials`` — flash-decoding: per-shard
+  partial softmax over a slice of the KV working set (ring buffer or Valet
+  page pool) plus an exact cross-shard combine.  This is how KV pages spread
+  across "peer" devices (the paper's remote memory donors) are read with a
+  single tiny collective.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _fold_gqa(q, n_kv):
+    """(B, S, Hq, D) -> (B, S, Hkv, G, D)."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, d)
+
+
+# --------------------------------------------------------------------------
+# Oracle
+# --------------------------------------------------------------------------
+
+def reference_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                        kv_valid=None):
+    """Materialized-score attention.  Test oracle; O(Sq*Sk) memory.
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D).
+    ``q_offset``: global position of q[0] (for decode/chunked prefill).
+    ``kv_valid``: optional (B, Sk) bool mask.
+    """
+    b, sq, hq, d = q.shape
+    n_kv = k.shape[2]
+    qf = _fold_gqa(q, n_kv).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bqkgd,btkd->bkgqt", qf, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_valid is not None:
+        mask = mask[None] & kv_valid[:, None, :]
+        mask = mask[:, None, None]                      # (B,1,1,Sq,Sk)
+    else:
+        mask = mask[None, None, None]
+    logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# Blockwise flash-style attention (train / prefill)
+# --------------------------------------------------------------------------
+
+def _block_mask(qpos, kpos, causal, window, kv_len):
+    m = kpos[None, :] < kv_len
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=0, q_block=512,
+                        kv_block=512, q_offset=0):
+    """Flash-style attention.  q: (B,Sq,Hq,D); k,v: (B,Sk,Hkv,D).
+
+    Windowed + causal attention slices only the statically-reachable KV band
+    per q block: FLOPs are O(Sq * (window + q_block)) instead of O(Sq * Sk).
+    Non-divisible lengths are padded internally and masked.
+    """
+    b, sq0, hq, d = q.shape
+    sk0 = k.shape[1]
+    q_block = min(q_block, sq0)
+    kv_block = min(kv_block, sk0)
+    qpad = (-sq0) % q_block
+    kpad = (-sk0) % kv_block
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    out = _blockwise_padded(q, k, v, causal=causal, window=window,
+                            q_block=q_block, kv_block=kv_block,
+                            q_offset=q_offset, kv_len=sk0)
+    return out[:, :sq0] if qpad else out
+
+
+def _blockwise_padded(q, k, v, *, causal, window, q_block, kv_block,
+                      q_offset, kv_len):
+    b, sq, hq, d = q.shape
+    sk, n_kv = k.shape[1], k.shape[2]
+    nq = sq // q_block
+    scale = 1.0 / math.sqrt(d)
+    qf = _fold_gqa(q, n_kv)                             # (B,Sq,K,G,D)
+    g = hq // n_kv
+
+    kpos_all = jnp.arange(sk)
+
+    if window > 0 and causal:
+        # Static band: ceil(window / kv_block) blocks behind + the q block.
+        band = (window + kv_block - 1) // kv_block * kv_block + q_block
+        band = min(band, sk)
+
+        def qblock_body(qi):
+            qstart = qi * q_block
+            qb = jax.lax.dynamic_slice_in_dim(qf, qstart, q_block, axis=1)
+            kstart = jnp.clip(qstart + q_block - band, 0, sk - band)
+            kb = jax.lax.dynamic_slice_in_dim(k, kstart, band, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, kstart, band, axis=1)
+            qpos = qstart + jnp.arange(q_block) + q_offset
+            kpos = kstart + jnp.arange(band)
+            mask = _block_mask(qpos, kpos, causal, window, kv_len)
+            logits = jnp.einsum("bqkgd,btkd->bkgqt", qb.astype(jnp.float32),
+                                kb.astype(jnp.float32)) * scale
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            p = jax.nn.softmax(logits, axis=-1)
+            out = jnp.einsum("bkgqt,btkd->bqkgd", p, vb.astype(jnp.float32))
+            return out.astype(q.dtype)
+
+        outs = jax.lax.map(jax.checkpoint(qblock_body),
+                           jnp.arange(nq))                  # (nq,B,qb,K,G,D)
+        out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, n_kv, g, d)
+        return out.reshape(b, sq, hq, d)
+
+    # Full (causal or bidirectional): online softmax over all KV blocks.
+    nk = sk // kv_block
+
+    def qblock_body(qi):
+        qstart = qi * q_block
+        qb = jax.lax.dynamic_slice_in_dim(qf, qstart, q_block, axis=1)
+        qb = qb.astype(jnp.float32)
+        qpos = qstart + jnp.arange(q_block) + q_offset
+
+        def kv_body(carry, ki):
+            m, l, acc = carry
+            kstart = ki * kv_block
+            kb = jax.lax.dynamic_slice_in_dim(k, kstart, kv_block, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, kstart, kv_block, axis=1)
+            kpos = kstart + jnp.arange(kv_block)
+            mask = _block_mask(qpos, kpos, causal, window, kv_len)
+            logits = jnp.einsum("bqkgd,btkd->bkgqt", qb,
+                                kb.astype(jnp.float32)) * scale
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            p = jnp.exp(logits - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqt,btkd->bkgqd", p, vb.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, n_kv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, n_kv, g, q_block, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]         # (B,K,G,qb,D)
+        return jnp.moveaxis(out, 3, 1).astype(q.dtype)       # (B,qb,K,G,D)
+
+    # checkpoint per q block: the backward otherwise stacks the inner KV
+    # scan's residuals across BOTH loops (nq x nk x block buffers)
+    outs = jax.lax.map(jax.checkpoint(qblock_body), jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, n_kv, g, d)
+    return out.reshape(b, sq, hq, d)
+
+
+# --------------------------------------------------------------------------
+# Decode: partial softmax + exact combine (flash-decoding across peers)
+# --------------------------------------------------------------------------
+
+def decode_partial(q, keys, values, valid):
+    """Partial attention of a single query over a local KV slice.
+
+    q: (B, Hq, D); keys/values: (B, T, Hkv, D); valid: (B, T) bool.
+    Returns (m, l, acc): (B,K,G), (B,K,G), (B,K,G,D) float32 partials.
+    """
+    b, hq, d = q.shape
+    n_kv = keys.shape[2]
+    qf = q.reshape(b, n_kv, hq // n_kv, d).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qf,
+                        keys.astype(jnp.float32)) * scale
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    m = logits.max(axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    l = p.sum(axis=-1)
+    acc = jnp.einsum("bkgt,btkd->bkgd", p, values.astype(jnp.float32))
+    return m, l, acc
+
+
+def combine_partials(partials, out_dtype):
+    """Exact softmax combine of stacked partials.
+
+    partials: tuple of (m, l, acc) stacked on a leading shard axis:
+    m,l: (N, B, K, G); acc: (N, B, K, G, D).  Returns (B, Hq, D).
+    """
+    m, l, acc = partials
+    m_glob = m.max(axis=0)
+    corr = jnp.exp(m - m_glob[None])
+    l_glob = (l * corr).sum(axis=0)
+    acc_glob = (acc * corr[..., None]).sum(axis=0)
+    out = acc_glob / jnp.maximum(l_glob, 1e-20)[..., None]
+    n, b = m.shape[0], m.shape[1]
+    return out.reshape(b, -1, acc.shape[-1]).astype(out_dtype)
+
+
+def combine_partials_psum(m, l, acc, axis_name, out_dtype):
+    """Same combine, across a mesh axis inside shard_map (tiny collective)."""
+    m_glob = jax.lax.pmax(m, axis_name)
+    corr = jnp.exp(m - m_glob)
+    l_glob = jax.lax.psum(l * corr, axis_name)
+    acc_glob = jax.lax.psum(acc * corr[..., None], axis_name)
+    out = acc_glob / jnp.maximum(l_glob, 1e-20)[..., None]
+    b = m.shape[0]
+    return out.reshape(b, -1, acc.shape[-1]).astype(out_dtype)

@@ -1,0 +1,105 @@
+"""Primitive layers: init helpers, RMSNorm, RoPE, SwiGLU.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  All layers are
+pure functions ``f(params, x, ...) -> y`` so they compose with ``jax.lax.scan``
+over stacked per-layer parameters and with pjit/shard_map.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+class KeyGen:
+    """Split an rng key on demand: ``kg = KeyGen(key); w = init(kg(), ...)``."""
+
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rms_norm(w, x, eps=1e-5):
+    """RMSNorm in fp32, output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    """Inverse frequencies, shape (head_dim // 2,)."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x, positions, theta: float):
+    """Rotate pairs. x: (..., S, H, D); positions: (..., S) int32."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                                    # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def swiglu(params, x):
+    """SwiGLU FFN.  params: wgu (d, 2f) fused gate+up, wd (f, d).
+
+    The fused projection means ONE dot (and one backward dx all-reduce under
+    tensor parallelism) instead of two — §Perf iteration 5.  The (gate, up)
+    halves are interleaved per shard: wgu[:, 0::2]=gate, wgu[:, 1::2]=up so
+    a TP shard of the fused dim contains matching gate/up pairs.
+    """
+    gu = jnp.einsum("...d,df->...f", x, params["wgu"])
+    gu = gu.reshape(gu.shape[:-1] + (-1, 2))
+    g, u = gu[..., 0], gu[..., 1]
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["wd"])
+
+
+def init_swiglu(kg: KeyGen, d: int, f: int, dtype=jnp.float32):
+    return {
+        "wgu": normal_init(kg(), (d, 2 * f), dtype=dtype),
+        "wd": normal_init(kg(), (f, d), dtype=dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    """Plain GELU MLP (whisper-style).  params: wi (d,f), wo (f,d)."""
+    h = jnp.einsum("...d,df->...f", x, params["wi"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["wo"])
+
+
+def init_gelu_mlp(kg: KeyGen, d: int, f: int, dtype=jnp.float32):
+    return {
+        "wi": normal_init(kg(), (d, f), dtype=dtype),
+        "wo": normal_init(kg(), (f, d), dtype=dtype),
+    }

@@ -1,0 +1,223 @@
+"""Mamba-2 (SSD, state-space duality) block — TPU-friendly chunked form.
+
+The SSD recurrence  h_t = a_t * h_{t-1} + dt_t * B_t x_t^T ,
+                    y_t = C_t h_t + D x_t
+(with per-head scalar decay a_t = exp(dt_t * A_h)) is computed chunk-wise:
+quadratic *within* a chunk (MXU-friendly matmuls) and a tiny per-chunk state
+recurrence *across* chunks (``lax.scan``).  This is the hardware adaptation of
+SSD for TPUs: the intra-chunk part is the Pallas kernel target
+(``repro.kernels.ssd_scan``); this file is the jnp implementation used as the
+oracle and the dry-run path.
+
+Projections are stored split (wz / wx / wbc / wdt) so each shards cleanly
+over the TP (`model`) axis: z/x/dt by heads, B/C replicated (tiny).
+
+Decode keeps O(1) state per layer: (H, P, N) SSD state + a (K-1)-deep conv
+ring — the reason `long_500k` is runnable for SSM archs (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import KeyGen, normal_init, rms_norm
+
+
+def ssm_dims(d_model: int, ssm: SSMConfig):
+    d_inner = ssm.expand * d_model
+    n_heads = d_inner // ssm.head_dim
+    d_bc = 2 * ssm.n_groups * ssm.d_state
+    return d_inner, n_heads, d_bc
+
+
+def init_ssm(kg: KeyGen, d_model: int, ssm: SSMConfig, dtype=jnp.float32):
+    d_inner, n_heads, d_bc = ssm_dims(d_model, ssm)
+    return {
+        "wz": normal_init(kg(), (d_model, d_inner), dtype=dtype),
+        "wx": normal_init(kg(), (d_model, d_inner), dtype=dtype),
+        "wbc": normal_init(kg(), (d_model, d_bc), dtype=dtype),
+        "wdt": normal_init(kg(), (d_model, n_heads), dtype=dtype),
+        "conv_x": normal_init(kg(), (ssm.conv_kernel, d_inner), scale=0.5,
+                              dtype=dtype),
+        "conv_bc": normal_init(kg(), (ssm.conv_kernel, d_bc), scale=0.5,
+                               dtype=dtype),
+        "conv_b": jnp.zeros((d_inner + d_bc,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.linspace(1e-3, 1e-1, n_heads))).astype(jnp.float32),
+        "gate_norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": normal_init(kg(), (d_inner, d_model), dtype=dtype),
+    }
+
+
+def _project(params, x):
+    z = jnp.einsum("...d,di->...i", x, params["wz"])
+    xs = jnp.einsum("...d,di->...i", x, params["wx"])
+    bc = jnp.einsum("...d,di->...i", x, params["wbc"])
+    dt = jnp.einsum("...d,dh->...h", x, params["wdt"])
+    return z, xs, bc, dt
+
+
+def _causal_conv(w, b, x, kernel):
+    """Depthwise causal conv over (B, S, C)."""
+    pad = jnp.pad(x, ((0, 0), (kernel - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(kernel))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x, dt, A, B_mat, C_mat, D, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative;
+    B_mat/C_mat: (B,S,G,N); D: (H,).  Returns y (B,S,H,P), h_final (B,H,P,N).
+    """
+    b, s, h, p = x.shape
+    g, n = B_mat.shape[2], B_mat.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    heads_per_group = h // g
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B_mat.reshape(b, nc, chunk, g, n)
+    Cc = C_mat.reshape(b, nc, chunk, g, n)
+
+    # per-token log decay and within-chunk cumulative decay
+    l = dtc * A[None, None, None, :]                       # (B,NC,Q,H) <= 0
+    Lc = jnp.cumsum(l, axis=2)                             # (B,NC,Q,H)
+    Ltot = Lc[:, :, -1, :]                                 # (B,NC,H)
+
+    # ---- intra-chunk (diagonal blocks), batched over chunks ---------------
+    cb = jnp.einsum("bcqgn,bcsgn->bcgqs", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))                # (B,NC,G,Q,Q)
+    cb = jnp.repeat(cb, heads_per_group, axis=2)           # (B,NC,H,Q,Q)
+    lt = jnp.moveaxis(Lc, 3, 2)                            # (B,NC,H,Q)
+    decay = jnp.exp(lt[..., :, None] - lt[..., None, :])   # exp(L[t]-L[s])
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    m = jnp.where(mask[None, None, None], cb * decay, 0.0)
+    m = m * jnp.moveaxis(dtc, 3, 2)[..., None, :]          # * dt_s
+    y_intra = jnp.einsum("bchqs,bcshp->bcqhp", m, xc.astype(jnp.float32))
+
+    # ---- chunk input states ----------------------------------------------
+    dstate = jnp.exp(Ltot[:, :, None, :] - Lc)             # (B,NC,Q,H)
+    Bh = jnp.repeat(Bc, heads_per_group, axis=3)           # (B,NC,Q,H,N)
+    s_in = jnp.einsum("bcqhn,bcqhp,bcqh->bchpn",
+                      Bh.astype(jnp.float32), xc.astype(jnp.float32),
+                      dtc * dstate)                        # (B,NC,H,P,N)
+
+    # ---- inter-chunk recurrence (tiny scan over chunks) -------------------
+    def body(hprev, inp):
+        s_c, ltot = inp                                    # (B,H,P,N), (B,H)
+        hnew = hprev * jnp.exp(ltot)[:, :, None, None] + s_c
+        return hnew, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hT, hprevs = jax.lax.scan(
+        body,
+        h0,
+        (jnp.moveaxis(s_in, 1, 0), jnp.moveaxis(Ltot, 1, 0)),
+    )
+    hprevs = jnp.moveaxis(hprevs, 0, 1)                    # (B,NC,H,P,N)
+
+    # ---- inter-chunk contribution -----------------------------------------
+    Ch = jnp.repeat(Cc, heads_per_group, axis=3)           # (B,NC,Q,H,N)
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                         Ch.astype(jnp.float32), hprevs, jnp.exp(Lc))
+
+    y = y_intra + y_inter + D[None, None, None, :, None] * xc.astype(jnp.float32)
+    return y.reshape(b, s, h, p), hT
+
+
+def ssm_forward(params, x, d_model, ssm: SSMConfig, return_state=False):
+    """Full SSD mixer over a sequence.  x: (B,S,d_model)."""
+    b, s, _ = x.shape
+    d_inner, n_heads, d_bc = ssm_dims(d_model, ssm)
+    g, n = ssm.n_groups, ssm.d_state
+
+    z, xs, bc, dt = _project(params, x)
+    xbc_raw = jnp.concatenate([xs, bc], axis=-1)
+    xbc = xbc_raw
+    conv_w = jnp.concatenate([params["conv_x"], params["conv_bc"]], axis=-1)
+    xbc = _causal_conv(conv_w, params["conv_b"], xbc, ssm.conv_kernel)
+    xs = xbc[..., :d_inner].reshape(b, s, n_heads, ssm.head_dim)
+    B_mat = xbc[..., d_inner:d_inner + g * n].reshape(b, s, g, n)
+    C_mat = xbc[..., d_inner + g * n:].reshape(b, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    chunk = min(ssm.chunk_size, s)
+    pad = (-s) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    y, hT = ssd_chunked(xs, dt, A, B_mat, C_mat, params["D"], chunk)
+    y = y[:, :s].reshape(b, s, d_inner).astype(x.dtype)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(params["gate_norm"], y)
+    out = jnp.einsum("...i,id->...d", y, params["out_proj"])
+    if not return_state:
+        return out
+    # decode-ready state: SSD state (padding tokens contribute ~0 via dt=0
+    # only if pad==0; callers prefill with exact chunk multiples or accept
+    # the tail) + conv ring of the last (K-1) raw xBC inputs
+    k = ssm.conv_kernel
+    conv_state = jnp.zeros((b, k - 1, d_inner + d_bc), x.dtype)
+    take = min(k - 1, s)
+    conv_state = conv_state.at[:, k - 1 - take:].set(xbc_raw[:, s - take:])
+    return out, {"h": hT, "conv": conv_state}
+
+
+# --------------------------------------------------------------------------
+# Decode: O(1) state per layer
+# --------------------------------------------------------------------------
+
+def ssm_init_state(batch, d_model, ssm: SSMConfig, dtype=jnp.float32):
+    d_inner, n_heads, d_bc = ssm_dims(d_model, ssm)
+    return {
+        "h": jnp.zeros((batch, n_heads, ssm.head_dim, ssm.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, ssm.conv_kernel - 1, d_inner + d_bc), dtype),
+    }
+
+
+def ssm_decode_step(params, x, state, d_model, ssm: SSMConfig):
+    """One-token step.  x: (B, d_model).  Returns (y, new_state)."""
+    b = x.shape[0]
+    d_inner, n_heads, d_bc = ssm_dims(d_model, ssm)
+    g, n = ssm.n_groups, ssm.d_state
+
+    z, xs, bc, dt = _project(params, x)
+    xbc = jnp.concatenate([xs, bc], axis=-1)
+    hist = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)
+    conv_w = jnp.concatenate([params["conv_x"], params["conv_bc"]], axis=-1)
+    conv = jnp.einsum("bkc,kc->bc", hist, conv_w) + params["conv_b"]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    new_conv = hist[:, 1:, :]
+
+    xs = conv[..., :d_inner].reshape(b, n_heads, ssm.head_dim)
+    B_mat = conv[..., d_inner:d_inner + g * n].reshape(b, g, n)
+    C_mat = conv[..., d_inner + g * n:].reshape(b, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+
+    heads_per_group = n_heads // g
+    Bh = jnp.repeat(B_mat, heads_per_group, axis=1)        # (B,H,N)
+    Ch = jnp.repeat(C_mat, heads_per_group, axis=1)
+
+    a = jnp.exp(dt * A[None, :])                           # (B,H)
+    h = state["h"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bhn->bhpn", dt, xs.astype(jnp.float32), Bh.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), h)
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, d_inner).astype(x.dtype)
+
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(params["gate_norm"], y)
+    out = jnp.einsum("bi,id->bd", y, params["out_proj"])
+    return out, {"h": h, "conv": new_conv}

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, AdamWState, init, update,
+                               schedule, global_norm, clip_by_global_norm,
+                               zero1_specs)

@@ -1,0 +1,117 @@
+"""AdamW + schedule + global-norm clipping, pure JAX over pytrees.
+
+ZeRO-1 support: optimizer moments can be sharded over the data-parallel mesh
+axes (``zero1_specs``) — GSPMD then emits reduce-scatter/all-gather around
+the update instead of keeping replicated moments, cutting optimizer memory
+by the DP degree (a distributed-optimization feature for scale; see
+DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_fraction: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to min_lr_fraction."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_fraction + (1 - cfg.min_lr_fraction) * cos
+    return cfg.lr * warm * frac
+
+
+def init(params) -> AdamWState:
+    zeros = lambda t: jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), t)
+    return AdamWState(jnp.zeros((), jnp.int32), zeros(params), zeros(params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def update(cfg: AdamWConfig, params, grads, state: AdamWState):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * (g * g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (delta + decay)
+        return newp.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    res = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    newp = treedef.unflatten([r[0] for r in res])
+    mu = treedef.unflatten([r[1] for r in res])
+    nu = treedef.unflatten([r[2] for r in res])
+    return newp, AdamWState(step, mu, nu), {"lr": lr, "grad_norm": gnorm}
+
+
+def zero1_specs(param_specs, params_shape, dp_axes=("data",), dp_size=1):
+    """Moment PartitionSpecs: ZeRO-1 — shard moments over DP on top of TP.
+
+    For each parameter, shard the first TP-unsharded dimension whose size is
+    divisible by the DP degree; parameters with no such dim keep the TP spec
+    (replicated moments — only tiny norms/biases in practice).
+    """
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def moment_spec(spec, shape):
+        parts = list(spec)
+        for i, p_ in enumerate(parts):
+            if p_ is None and shape.shape[i] % dp_size == 0 \
+                    and shape.shape[i] > 0:
+                parts[i] = dp
+                return P(*parts)
+        return P(*parts)
+
+    return jax.tree.map(moment_spec, param_specs, params_shape,
+                        is_leaf=lambda s: isinstance(s, P))

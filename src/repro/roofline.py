@@ -1,0 +1,417 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms, in seconds, per (arch x shape x mesh):
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_chip / HBM_bandwidth
+  collective = collective_bytes_per_chip / ICI_link_bandwidth
+
+``compiled.cost_analysis()`` (post-SPMD, per-device program) supplies FLOPs
+and bytes.  Collective bytes are NOT in cost_analysis: we parse the
+partitioned HLO (``compiled.as_text()``) and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+Per-device numerators over per-chip peaks are identical to the brief's
+global/(chips x peak) form.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes / s / chip
+ICI_BW = 50e9                # bytes / s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]+(?:e[0-9a-z]+)?)\[([0-9,]*)\]")
+
+# ops whose output (+operands) we count as HBM traffic; everything else is
+# assumed fused / metadata (bitcast, tuple, gte, parameter, constant, iota)
+_TRAFFIC_OPS = {
+    "dot", "fusion", "copy", "dynamic-slice", "dynamic-update-slice",
+    "gather", "scatter", "reduce", "reduce-window", "convert", "transpose",
+    "reshape", "concatenate", "pad", "slice", "select", "custom-call",
+    "convolution", "broadcast", "add", "multiply", "subtract", "divide",
+    "maximum", "minimum", "exponential", "rsqrt", "tanh", "compare",
+    "select-and-scatter", "clamp", "negate", "and", "or", "iota",
+} | set(_COLLECTIVES)
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*((?:\([^)]*\)|\S+?))\s+([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(%[\w.\-]+|ENTRY\s+%[\w.\-]+)\s*\((.*)\)\s*->")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"(?:body|calls)=(%[\w.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w.\-]+)")
+
+
+class HloAnalysis:
+    """Loop-aware FLOP / traffic / collective analysis of partitioned HLO.
+
+    ``cost_analysis`` counts while-loop bodies once; scans over layers,
+    attention blocks, microbatches and loss chunks would be undercounted by
+    their trip counts.  This walker multiplies every called computation by
+    its ``known_trip_count`` (recorded by XLA in backend_config), giving
+    per-device totals:
+
+      flops       — 2 * prod(out_dims) * prod(contracted_dims) per dot
+      bytes       — operand+output bytes of non-fused traffic ops (an
+                    *unfused upper bound* on HBM traffic; fusion bodies are
+                    counted once via their fusion op's operands/output)
+      collectives — output bytes per collective kind
+    """
+
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, list] = {}
+        self.headers: Dict[str, str] = {}
+        cur = None
+        for line in hlo_text.splitlines():
+            m = _COMP_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                name = m.group(1).replace("ENTRY", "").strip()
+                cur = name
+                self.comps[cur] = []
+                self.headers[cur] = m.group(2)
+                if line.lstrip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                elif line.strip():
+                    self.comps[cur].append(line)
+        self._memo: Dict[str, Dict] = {}
+        self.unknown_loops = 0
+
+    def _local_types(self, comp: str) -> Dict[str, str]:
+        table: Dict[str, str] = {}
+        for pdecl in re.findall(r"([\w.\-]+):\s*((?:\([^)]*\)|[^,)]+))",
+                                self.headers.get(comp, "")):
+            table["%" + pdecl[0]] = pdecl[1]
+        for line in self.comps.get(comp, []):
+            m = _INSTR_RE.match(line)
+            if m:
+                table[m.group(1)] = m.group(2)
+        return table
+
+    def analyze(self, comp: Optional[str] = None) -> Dict:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        res = {"flops": 0.0, "bytes": 0.0, "f32_collective": 0.0,
+               **{k: 0.0 for k in _COLLECTIVES}}
+        types = self._local_types(comp)
+        for line in self.comps.get(comp, []):
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, out_type, op = m.groups()
+            out_b = _type_bytes(out_type)
+            if op == "dot":
+                ops_m = re.search(r"dot\((%[\w.\-]+),\s*(%[\w.\-]+)\)", line)
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+                flops = 0.0
+                if ops_m and cdims is not None:
+                    lhs_t = types.get(ops_m.group(1), "")
+                    sm = _SHAPE_RE.search(lhs_t)
+                    if sm:
+                        dims = [int(d) for d in sm.group(2).split(",") if d]
+                        contracted = 1
+                        for i in (int(x) for x in cdims.group(1).split(",")
+                                  if x):
+                            contracted *= dims[i]
+                        out_elems = out_b / _DTYPE_BYTES.get(
+                            _SHAPE_RE.search(out_type).group(1), 4)
+                        flops = 2.0 * out_elems * contracted
+                res["flops"] += flops
+            if op in _TRAFFIC_OPS:
+                operand_b = 0
+                for opr in re.findall(r"\((%[\w.\-]+(?:,\s*%[\w.\-]+)*)\)",
+                                      line[:line.find("metadata")
+                                           if "metadata" in line else None]):
+                    for nm in re.findall(r"%[\w.\-]+", opr):
+                        operand_b += _type_bytes(types.get(nm, ""))
+                res["bytes"] += out_b + operand_b
+                for k in _COLLECTIVES:
+                    if op == k or op == k + "-start":
+                        res[k] += out_b
+                        if out_type.count("f32"):
+                            # CPU backend upcasts bf16 dots to f32; on TPU
+                            # these collectives run in bf16 (half the bytes)
+                            res["f32_collective"] += out_b
+            # recurse into called computations
+            mult = 1.0
+            if op == "while":
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    mult = float(tm.group(1))
+                else:
+                    self.unknown_loops += 1
+                cm = _COND_RE.search(line)
+                if cm and cm.group(1) in self.comps:
+                    sub = self.analyze(cm.group(1))
+                    for k in res:
+                        res[k] += mult * sub[k]
+            if op in ("while", "call", "conditional", "async-start"):
+                for callee in _CALLS_RE.findall(line):
+                    if callee in self.comps:
+                        sub = self.analyze(callee)
+                        for k in res:
+                            res[k] += mult * sub[k]
+            # fusion bodies: count their dots (flops) but not their bytes
+            if op == "fusion":
+                cm = _CALLS_RE.search(line)
+                if cm and cm.group(1) in self.comps:
+                    sub = self.analyze(cm.group(1))
+                    res["flops"] += sub["flops"]
+                    for k in list(_COLLECTIVES) + ["f32_collective"]:
+                        res[k] += sub[k]
+        self._memo[comp] = res
+        return res
+
+
+def analyze_hlo(hlo_text: str) -> Dict[str, float]:
+    an = HloAnalysis(hlo_text)
+    res = an.analyze()
+    out = dict(res)
+    raw = sum(res[k] for k in _COLLECTIVES)
+    out["total_collective_raw"] = raw
+    # bf16 normalization: f32 collectives would run in bf16 on the TPU path
+    out["total_collective"] = raw - 0.5 * res["f32_collective"]
+    out["unknown_loops"] = an.unknown_loops
+    return out
+
+
+# --------------------------------------------------------------------------
+# Analytic TPU memory-traffic model (the memory-term numerator)
+# --------------------------------------------------------------------------
+
+def analytic_bytes_for(cfg, shape, mesh_shape: Dict[str, int],
+                       n_micro: int = 1, zero1: bool = True,
+                       kv_bytes: float = 2.0) -> float:
+    """Per-chip HBM bytes per step, at TPU kernel (fusion) granularity.
+
+    The CPU dry-run's HLO byte counts reflect XLA-CPU fusion boundaries
+    (f32 logits blocks spilled between loop fusions), not the TPU kernels
+    (flash attention keeps them in VMEM), so the memory term uses this
+    analytic model instead; HLO bytes are kept as an unfused upper bound.
+
+    Streams counted (all per device):
+      weights      fwd (+ remat re-fwd + bwd) reads, grad accum r/w,
+                   optimizer moments/master r/w (ZeRO-1 sharded over DP)
+      activations  layer-boundary residual r/w per microbatch
+      attention    Q/K/V + flash KV re-streaming (band-limited for SWA)
+      mlp/moe/ssm  intermediate streams at kernel granularity
+      kv cache     decode: full local page-pool shard read + one append
+    """
+    chips = 1
+    for v in mesh_shape.values():
+        chips *= v
+    tp = mesh_shape.get("model", 1)
+    dp = chips // tp
+    b_loc = max(shape.global_batch // dp, 1)
+    s = shape.seq_len
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    kv_loc = max(cfg.n_kv_heads / tp, 1.0) if cfg.n_kv_heads else 0
+    hq_loc = max(cfg.n_heads / tp, 1.0) if cfg.n_heads else 0
+    p_loc = cfg.param_count() / tp
+    dt = 2.0                              # bf16
+
+    from repro.models.transformer import segments, encoder_segments
+    segs = [(g.kind, g.count, g.window, g.ffn, g.d_ff or cfg.d_ff)
+            for g in segments(cfg)]
+    if cfg.family == "audio":
+        segs += [(g.kind, g.count, g.window, g.ffn, g.d_ff or cfg.d_ff)
+                 for g in encoder_segments(cfg)]
+
+    kind = shape.kind
+    passes = {"train": 3.0, "prefill": 1.0, "decode": 1.0}[kind]
+
+    if kind == "decode":
+        tokens = b_loc                     # one token per sequence
+        weights = p_loc * dt               # stream all local weights once
+        cache = 0.0
+        for seg_kind, count, window, ffn, dff in segs:
+            if seg_kind in ("attn", "dec", "hybrid") and cfg.n_kv_heads:
+                eff = min(window or s, s)
+                if window == 0:
+                    # paged pool shard: seq dim split over the KV axes
+                    eff = s / (chips // max(dp, 1))
+                    eff = eff * b_loc
+                else:
+                    eff = eff * b_loc
+                per_tok = kv_bytes * hd + (2 if kv_bytes < 2 else 0)
+                cache += count * eff * cfg.n_kv_heads * per_tok * 2
+            if seg_kind in ("ssm", "hybrid") and cfg.ssm:
+                d_in = cfg.ssm.expand * d
+                nh = d_in // cfg.ssm.head_dim
+                cache += count * b_loc * (nh / tp) * cfg.ssm.head_dim \
+                    * cfg.ssm.d_state * 4 * 2
+        act = tokens * d * dt * 4 * cfg.n_layers
+        return weights + cache + act
+
+    # train / prefill
+    toks_loc = b_loc * s
+    weights = passes * p_loc * dt * n_micro
+    if kind == "train":
+        opt_div = chips if zero1 else tp
+        weights += n_micro * 12.0 * p_loc          # fp32 grad accum r/w+add
+        weights += (cfg.param_count() / opt_div) * 4.0 * (2 + 2 + 2 + 2)
+    act = 0.0
+    for seg_kind, count, window, ffn, dff in segs:
+        per_layer = 0.0
+        # residual + norms r/w
+        per_layer += 4 * toks_loc * d * dt
+        if seg_kind in ("attn", "dec", "hybrid", "enc", "xattn") and cfg.n_heads:
+            qkv = toks_loc * (hq_loc + 2 * kv_loc) * hd * dt * 2
+            nq = max(s // 512, 1)
+            band = min((window or s), s)
+            kv_stream = nq * min(band + 512, s) * b_loc * kv_loc * hd * 2 * dt
+            per_layer += qkv + kv_stream + toks_loc * hq_loc * hd * dt * 2
+        if seg_kind in ("ssm", "hybrid") and cfg.ssm:
+            d_in = cfg.ssm.expand * d
+            per_layer += toks_loc * (d_in / tp) * dt * 6
+        if ffn == "moe" and cfg.moe:
+            cap_tokens = toks_loc * cfg.moe.top_k * cfg.moe.capacity_factor
+            per_layer += cap_tokens * d * dt * 4 \
+                + cap_tokens * (cfg.moe.d_expert) * dt * 2
+            per_layer += toks_loc * (cfg.moe.n_shared * cfg.moe.d_expert / tp) * dt * 3
+        elif ffn in ("swiglu", "gelu"):
+            per_layer += toks_loc * (dff / tp) * dt * 3
+        act += count * per_layer
+    act *= passes * 0.9                   # bwd streams ~ fwd; remat re-fwd
+    if kind == "train":
+        act /= 1.0
+    # embeddings / logits (vocab-chunked loss)
+    logits = toks_loc * (cfg.vocab / tp) * (4.0 if kind == "train" else 0.0)
+    if kind == "prefill":
+        logits = b_loc * (cfg.vocab / tp) * 4.0
+    return weights + act + logits
+
+
+@dataclass
+class RooflineTerms:
+    flops: float                 # per chip
+    bytes_hbm: float             # per chip
+    bytes_coll: float            # per chip
+    model_flops: float = 0.0     # analytic useful FLOPs per chip
+
+    @property
+    def t_compute(self):
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self):
+        return self.bytes_hbm / HBM_BW
+
+    @property
+    def t_collective(self):
+        return self.bytes_coll / ICI_BW
+
+    @property
+    def bottleneck(self):
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self):
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_ratio(self):
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self):
+        """Fraction of the bound-time budget doing useful model FLOPs."""
+        if self.bound_time <= 0:
+            return 0.0
+        return (self.model_flops / PEAK_FLOPS) / self.bound_time
+
+    def to_dict(self):
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.bytes_hbm,
+            "collective_bytes_per_chip": self.bytes_coll,
+            "model_flops_per_chip": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape, n_chips: int) -> float:
+    """Analytic useful FLOPs per chip for the cell.
+
+    train: 6·N_active·tokens; prefill: 2·N_active·tokens (+causal attention
+    2·L·H·hd·S²/2·2(QK,AV)·B); decode: 2·N_active·B + full KV attention
+    reads (counted as FLOPs: 4·L·kv·hd·S·B... attention decode is
+    memory-bound; we count its MACs too).
+    """
+    n_active = cfg.active_param_count()
+    b, s = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    # attention score+value FLOPs (causal halves the square)
+    attn = 0.0
+    if cfg.n_heads:
+        full_layers = 0
+        win_layers = 0
+        for seg_kind, count, window in _seg_summary(cfg):
+            if seg_kind in ("attn", "dec", "hybrid", "enc"):
+                if window:
+                    win_layers += count
+                else:
+                    full_layers += count
+        if shape.kind == "train" or shape.kind == "prefill":
+            attn += full_layers * 4 * cfg.n_heads * hd * (s ** 2) / 2 * b
+            w = cfg.window or s
+            attn += win_layers * 4 * cfg.n_heads * hd * s * min(w, s) * b
+            mult = 6.0 if shape.kind == "train" else 2.0
+            attn *= mult / 2.0       # bwd recomputes ~2x fwd attention
+            return (mult * n_active * b * s + attn) / n_chips
+        # decode: one token per seq
+        attn += full_layers * 4 * cfg.n_heads * hd * s * b
+        attn += win_layers * 4 * cfg.n_heads * hd * min(cfg.window or s, s) * b
+    if shape.kind == "train":
+        return (6 * n_active * b * s) / n_chips
+    if shape.kind == "prefill":
+        return (2 * n_active * b * s) / n_chips
+    return (2 * n_active * b + attn) / n_chips
+
+
+def _seg_summary(cfg):
+    from repro.models.transformer import segments, encoder_segments
+    out = [(s.kind, s.count, s.window) for s in segments(cfg)]
+    if cfg.family == "audio":
+        out += [(s.kind, s.count, s.window) for s in encoder_segments(cfg)]
+    return out

@@ -1,0 +1,436 @@
+"""ValetServeEngine — continuous-batching LM serving with Valet-orchestrated
+KV memory.
+
+The engine is the paper's sender node in serving clothes:
+
+* the **HBM page pool** (``ValetMempool``) holds the KV pages of *resident*
+  sequences (the paper's local mempool; exact attention requires residency);
+* when admission/growth needs pages that aren't free, the policy acts:
+    - ``valet``: pause the least-active sequence (Non-Activity-Duration over
+      its pages) and *spill* its pages to the host tier (data preserved —
+      the migration-not-deletion principle).  Spills are lazy/off the
+      critical path; resuming restores pages (remote-read analogue).
+    - ``infiniswap``: *delete* a random victim's pages; resuming must
+      re-prefill from the prompt (the cold/disk path).
+    - ``os-swap``: synchronous spill AND restore in the critical path.
+* every page write/read updates activity tags; hit-ratio and latency
+  accounting mirror the paper's Stats.
+
+The data plane stays exact: spilled pages round-trip bit-identically, and
+deleted pages are recomputed by a real re-prefill.  Tests pin engine output
+to the no-pressure reference decode.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import device_ops as dev
+from repro.core.activity import ActivityTracker, select_victims_nad
+from repro.core.page_table import GlobalPageTable, Location, Tier
+from repro.core.policies import Policy, CostModel, VALET, TPU_COSTS
+from repro.core.pool import ValetMempool, SlotState
+from repro.models import decode as D
+from repro.models.transformer import ParallelCtx
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    # runtime
+    status: str = "waiting"          # waiting | active | paused | done
+    slot: int = -1                   # batch slot
+    pages: List[int] = field(default_factory=list)   # logical page ids
+    tokens_out: List[int] = field(default_factory=list)
+    last_active_step: int = 0
+    n_recomputes: int = 0
+
+
+@dataclass
+class EngineStats:
+    steps: int = 0
+    tokens: int = 0
+    spilled_pages: int = 0
+    restored_pages: int = 0
+    deleted_pages: int = 0
+    recomputes: int = 0
+    pauses: int = 0
+    sim_time_us: float = 0.0         # critical-path simulated time
+    bg_time_us: float = 0.0          # overlapped background traffic
+    wall_time_s: float = 0.0
+
+
+class ValetServeEngine:
+    def __init__(self, params, cfg: ArchConfig, ctx: ParallelCtx, *,
+                 max_batch: int, max_seq: int, page: int = 16,
+                 pool_slots: int, min_pool: Optional[int] = None,
+                 policy: Policy = VALET, costs: CostModel = TPU_COSTS,
+                 step_cost_us: float = 0.0, seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.ctx = ctx
+        self.page = page
+        self.max_batch = max_batch
+        self.max_pages = (max_seq + page - 1) // page
+        self.policy = policy
+        self.costs = costs
+        self.step_cost_us = step_cost_us
+        self.rng = np.random.default_rng(seed)
+
+        self.infos = D.layer_infos(cfg)
+        self.paged_layers = [i for i, inf in enumerate(self.infos)
+                             if inf.uses_paged]
+        self.caches = D.init_caches(cfg, max_batch, pool_slots=pool_slots,
+                                    page=page)
+        self.pool = ValetMempool(
+            pool_slots,
+            min_pages=min_pool or pool_slots,
+            max_pages=pool_slots)
+        self.gpt = GlobalPageTable()
+        self.tracker = ActivityTracker()
+        self.host_store: Dict[int, Dict[int, Tuple[np.ndarray, np.ndarray]]] = {}
+        self.stats = EngineStats()
+        self.step_counter = 0
+        self._next_page_id = 0
+        self._slots_free = list(range(max_batch))
+        self._requests: Dict[int, Request] = {}
+        self._seq_blobs: Dict[int, Any] = {}
+
+        self._decode_jit = jax.jit(self._decode_fn)
+        self._prefill_jit = {}
+
+    # ------------------------------------------------------------------ jit
+
+    def _decode_fn(self, params, caches, tokens, bt, app_slot, app_off,
+                   active):
+        return D.decode_step(params, caches, tokens, self.cfg, self.ctx,
+                             bt, app_slot, app_off, active=active)
+
+    def _prefill_one(self, prompt_tokens: np.ndarray, slot: int,
+                     bt_row: np.ndarray):
+        """Prefill one request (B=1) and scatter results into batch caches."""
+        s = len(prompt_tokens)
+        key = s
+        if key not in self._prefill_jit:
+            def fn(params, caches, toks, bt):
+                one = D.init_caches(self.cfg, 1,
+                                    pool_slots=1, page=self.page)
+                # share the batched pools: prefill writes pages directly
+                for li, c in enumerate(one["layers"]):
+                    if "pool" in c:
+                        c["pool"] = caches["layers"][li]["pool"]
+                logits, one = D.prefill(params, toks, self.cfg, self.ctx,
+                                        one, bt)
+                return logits, one
+            self._prefill_jit[key] = jax.jit(fn)
+        bt_j = jnp.asarray(bt_row)[None]
+        logits, one = self._prefill_jit[key](
+            self.params, self.caches, jnp.asarray(prompt_tokens)[None], bt_j)
+
+        # scatter per-seq cache entries into the batch slot
+        for li, (bc, oc) in enumerate(zip(self.caches["layers"],
+                                          one["layers"])):
+            for k in bc:
+                if k == "pool":
+                    bc[k] = oc[k]                      # shared pool, updated
+                elif isinstance(bc[k], dev.RingKV):
+                    bc[k] = dev.RingKV(bc[k].k.at[slot].set(oc[k].k[0]),
+                                       bc[k].v.at[slot].set(oc[k].v[0]))
+                elif isinstance(bc[k], dict):          # ssm state
+                    bc[k] = jax.tree.map(
+                        lambda full, onev: full.at[slot].set(onev[0]),
+                        bc[k], oc[k])
+                else:                                   # cross_k / cross_v
+                    bc[k] = bc[k].at[slot].set(oc[k][0])
+        self.caches["lengths"] = self.caches["lengths"].at[slot].set(s)
+        return logits
+
+    # --------------------------------------------------------------- paging
+
+    def _alloc_page(self, req: Request) -> Optional[int]:
+        """Allocate one logical page backed by a pool slot (all layers)."""
+        pg = self._next_page_id
+        slot = self.pool.alloc(pg, self.step_counter)
+        if slot is None and self.policy.use_local_pool:
+            if self._make_room(1):
+                slot = self.pool.alloc(pg, self.step_counter)
+        if slot is None:
+            return None
+        self._next_page_id += 1
+        self.gpt.map_local(pg, slot)
+        self.tracker.on_write([pg], self.step_counter)
+        req.pages.append(pg)
+        return pg
+
+    def _free_pages(self, req: Request, delete_host=True):
+        for pg in req.pages:
+            slot = self.gpt.local_slot(pg)
+            if slot is not None:
+                self.pool.release(slot)
+                self.gpt.unmap_local(pg)
+            if delete_host:
+                self.host_store.pop(pg, None)
+            self.gpt.drop_remote(pg)
+        req.pages = []
+
+    def _make_room(self, n_pages: int) -> bool:
+        """Policy-driven preemption to free >= n_pages pool slots."""
+        victims_order = sorted(
+            [r for r in self._requests.values() if r.status == "active"],
+            key=lambda r: r.last_active_step)
+        freed = 0
+        while self.pool.free_count() < n_pages and victims_order:
+            if self.policy.evict_action == "migrate":
+                victim = victims_order.pop(0)      # NAD: least recently active
+            elif self.policy.victim == "random":
+                victim = victims_order.pop(
+                    int(self.rng.integers(len(victims_order))))
+            else:
+                victim = victims_order.pop(0)
+            freed += self._preempt(victim)
+        return self.pool.free_count() >= n_pages
+
+    def _restore(self, req: Request) -> bool:
+        """Bring a paused sequence's pages back into the pool."""
+        needed = [pg for pg in req.pages
+                  if self.gpt.local_slot(pg) is None]
+        if self.pool.free_count() < len(needed):
+            if not self._make_room(len(needed)):
+                return False
+        for pg in needed:
+            slot = self.pool.alloc(pg, self.step_counter)
+            assert slot is not None
+            blob = self.host_store.pop(pg)
+            for li, (kb, vb) in blob.items():
+                pool = self.caches["layers"][li]["pool"]
+                self.caches["layers"][li]["pool"] = dev.KVPool(
+                    pool.k.at[slot].set(jnp.asarray(kb)),
+                    pool.v.at[slot].set(jnp.asarray(vb)))
+            self.gpt.map_local(pg, slot)
+            self.gpt.drop_remote(pg)
+            self.tracker.on_write([pg], self.step_counter)
+            self.stats.restored_pages += 1
+            self.stats.sim_time_us += self.costs.host_read
+        return True
+
+    # ------------------------------------------------------------ scheduling
+
+    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+        rid = len(self._requests)
+        self._requests[rid] = Request(rid, np.asarray(prompt), max_new)
+        return rid
+
+    def _pages_for(self, n_tokens: int) -> int:
+        return (n_tokens + self.page - 1) // self.page
+
+    def _admit(self, req: Request) -> bool:
+        if not self._slots_free:
+            return False
+        need = self._pages_for(len(req.prompt) + 1)
+        if self.pool.free_count() < need and not self._make_room(need):
+            return False
+        req.slot = self._slots_free.pop()
+        for _ in range(need):
+            assert self._alloc_page(req) is not None
+        bt = self._block_table_row(req)
+        logits = self._prefill_one(req.prompt, req.slot, bt)
+        # the prompt's last position yields the first generated token
+        req.tokens_out.append(int(jnp.argmax(logits[0])))
+        self.stats.tokens += 1
+        self.stats.sim_time_us += self.costs.local_write * need
+        req.status = "active"
+        req.last_active_step = self.step_counter
+        if len(req.tokens_out) >= req.max_new:
+            req.status = "done"
+            self._slots_free.append(req.slot)
+            self._free_pages(req)
+            req.slot = -1
+        return True
+
+    def _resume(self, req: Request) -> bool:
+        if not self._slots_free:
+            return False
+        if self.policy.evict_action == "delete" or not req.pages:
+            # pages were deleted: re-prefill prompt + generated tokens,
+            # EXCLUDING the newest one — the next decode step consumes it
+            full = np.concatenate([req.prompt,
+                                   np.asarray(req.tokens_out[:-1], np.int64)])
+            need = self._pages_for(len(full) + 1)
+            if self.pool.free_count() < need and not self._make_room(need):
+                return False
+            req.slot = self._slots_free.pop()
+            for _ in range(need):
+                assert self._alloc_page(req) is not None
+            self._prefill_one(full, req.slot, self._block_table_row(req))
+            self.stats.recomputes += 1
+            self.stats.sim_time_us += self.costs.cold_read * need
+            req.status = "active"
+            req.last_active_step = self.step_counter
+            return True
+        if not self._restore(req):
+            return False
+        req.slot = self._slots_free.pop()
+        # ring/ssm/cross caches still hold this slot's data only if the seq
+        # kept its batch slot; after pause we must re-own a slot.  For exact
+        # state we spill/restore those too via host blobs keyed by rid.
+        blob = self._seq_blobs.pop(req.rid, None)
+        if blob is not None:
+            self._write_seq_blob(req.slot, blob)
+        req.status = "active"
+        req.last_active_step = self.step_counter
+        return True
+
+    # per-sequence (non-paged) cache spill helpers
+    def _read_seq_blob(self, slot: int):
+        out = []
+        for c in self.caches["layers"]:
+            e = {}
+            for k, vv in c.items():
+                if k == "pool":
+                    continue
+                e[k] = jax.tree.map(lambda a: np.asarray(a[slot]), vv)
+            out.append(e)
+        out.append(int(self.caches["lengths"][slot]))
+        return out
+
+    def _write_seq_blob(self, slot: int, blob):
+        *layers, length = blob
+        for c, e in zip(self.caches["layers"], layers):
+            for k, vv in e.items():
+                if isinstance(c[k], dev.RingKV):
+                    c_k = c[k]
+                    c[k] = dev.RingKV(c_k.k.at[slot].set(jnp.asarray(vv[0])),
+                                      c_k.v.at[slot].set(jnp.asarray(vv[1])))
+                elif isinstance(c[k], dict):
+                    c[k] = jax.tree.map(
+                        lambda full, onev: full.at[slot].set(jnp.asarray(onev)),
+                        c[k], vv)
+                else:
+                    c[k] = c[k].at[slot].set(jnp.asarray(vv))
+        self.caches["lengths"] = self.caches["lengths"].at[slot].set(length)
+
+    def _block_table_row(self, req: Request) -> np.ndarray:
+        row = np.full((self.max_pages,), -1, np.int32)
+        for j, pg in enumerate(req.pages[: self.max_pages]):
+            slot = self.gpt.local_slot(pg)
+            row[j] = -1 if slot is None else slot
+        return row
+
+    # ----------------------------------------------------------------- run
+
+    def run(self, max_steps: int = 10_000, greedy: bool = True):
+        """Drive until all requests are done (or max_steps)."""
+        t0 = time.monotonic()
+        while max_steps > 0:
+            max_steps -= 1
+            pending = [r for r in self._requests.values()
+                       if r.status in ("waiting", "paused")]
+            for r in pending:
+                if r.status == "waiting":
+                    self._admit(r)
+                else:
+                    self._resume(r)
+            active = [r for r in self._requests.values()
+                      if r.status == "active"]
+            if not active:
+                if any(r.status in ("waiting", "paused")
+                       for r in self._requests.values()):
+                    # deadlock guard: force room
+                    continue
+                break
+            self._step_active(active, greedy)
+        self.stats.wall_time_s = time.monotonic() - t0
+        return [r for r in self._requests.values()]
+
+    def _step_active(self, active: List[Request], greedy: bool):
+        self.step_counter += 1
+        # grow pages where the next token crosses a page boundary
+        for r in active:
+            pos = int(self.caches["lengths"][r.slot])
+            if pos % self.page == 0 and self._pages_for(pos + 1) > len(r.pages):
+                if self._alloc_page(r) is None:
+                    self._preempt(r)
+        active = [r for r in active if r.status == "active"]
+        if not active:
+            return
+
+        bt = np.full((self.max_batch, self.max_pages), -1, np.int32)
+        app_slot = np.zeros((self.max_batch,), np.int32)
+        app_off = np.zeros((self.max_batch,), np.int32)
+        toks = np.zeros((self.max_batch,), np.int64)
+        act = np.zeros((self.max_batch,), bool)
+        for r in active:
+            b = r.slot
+            bt[b] = self._block_table_row(r)
+            pos = int(self.caches["lengths"][b])
+            pg = r.pages[pos // self.page]
+            app_slot[b] = self.gpt.local_slot(pg)
+            app_off[b] = pos % self.page
+            toks[b] = (r.tokens_out[-1] if r.tokens_out
+                       else r.prompt[-1])
+            act[b] = True
+            self.tracker.on_write([pg], self.step_counter)
+            r.last_active_step = self.step_counter
+
+        logits, self.caches = self._decode_jit(
+            self.params, self.caches, jnp.asarray(toks), jnp.asarray(bt),
+            jnp.asarray(app_slot), jnp.asarray(app_off), jnp.asarray(act))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.stats.steps += 1
+        self.stats.sim_time_us += self.step_cost_us \
+            + self.costs.local_write * len(active)
+        for r in active:
+            r.tokens_out.append(int(nxt[r.slot]))
+            self.stats.tokens += 1
+            if len(r.tokens_out) >= r.max_new:
+                r.status = "done"
+                self._slots_free.append(r.slot)
+                self._free_pages(r)
+                r.slot = -1
+
+    def _preempt(self, req: Request) -> int:
+        """Pause a sequence: spill (valet/os-swap) or delete (infiniswap)
+        its pool pages + save its per-slot (ring/ssm/cross) caches."""
+        n = len(req.pages)
+        self.stats.pauses += 1
+        if req.slot >= 0:
+            self._seq_blobs[req.rid] = self._read_seq_blob(req.slot)
+            self._slots_free.append(req.slot)
+            req.slot = -1
+        if self.policy.evict_action == "delete":
+            self._free_pages(req)
+            req.status = "paused"
+            req.n_recomputes += 1
+            self.stats.deleted_pages += n
+            self._seq_blobs.pop(req.rid, None)
+            return n
+        for pg in req.pages:
+            slot = self.gpt.local_slot(pg)
+            if slot is None:
+                continue
+            blob = {}
+            for li in self.paged_layers:
+                pool = self.caches["layers"][li]["pool"]
+                blob[li] = (dev.to_host_tier(pool.k[slot]),
+                            dev.to_host_tier(pool.v[slot]))
+            self.host_store[pg] = blob
+            self.pool.release(slot)
+            self.gpt.unmap_local(pg)
+            self.gpt.map_remote(pg, Location(Tier.HOST))
+            self.stats.spilled_pages += 1
+            cost = self.costs.host_write
+            if self.policy.lazy_send:
+                self.stats.bg_time_us += cost
+            else:
+                self.stats.sim_time_us += cost
+        req.status = "paused"
+        return n

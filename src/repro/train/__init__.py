@@ -1,0 +1,3 @@
+from repro.train.trainer import TrainConfig, make_train_step, make_shardings, fit, cast_for_compute
+from repro.train.checkpoint import ValetCheckpointer
+from repro.train.elastic import ClusterSpec, degraded_mesh_shape, make_recovery_plan

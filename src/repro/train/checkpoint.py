@@ -1,0 +1,173 @@
+"""ValetCheckpointer — asynchronous, replicated checkpointing with the
+paper's write-path semantics (DESIGN.md §3).
+
+``save()`` is the critical path: it only snapshots device arrays into a host
+staging buffer (the "local mempool" write) and returns.  A background writer
+(the Remote Sender Thread analogue) serializes staged snapshots to N replica
+directories (remote peers / disk backup, Table 3), then marks them
+reclaimable.  If a newer snapshot is staged before an older one is written,
+the older one is *skipped* — the Update-flag rule of §5.2 applied to whole
+snapshots (the newest data wins; stale write-sets are never persisted over
+newer ones).
+
+Restore validates manifests and falls back across replicas (peer-failure
+path).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import tempfile
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+@dataclass
+class _Staged:
+    step: int
+    arrays: List[np.ndarray]
+    stage_time: float
+
+
+class ValetCheckpointer:
+    """Async replicated checkpointer for (params, opt_state, extras)."""
+
+    def __init__(self, directory: str, replicas: int = 2,
+                 keep: int = 3):
+        self.dirs = [os.path.join(directory, f"replica{r}")
+                     for r in range(max(replicas, 1))]
+        for d in self.dirs:
+            os.makedirs(d, exist_ok=True)
+        self.keep = keep
+        self._q: "queue.Queue[Optional[_Staged]]" = queue.Queue()
+        self._latest_staged = -1
+        self._latest_written = -1
+        self._lock = threading.Lock()
+        self._treedef = None
+        self.n_skipped_stale = 0
+        self._writer = threading.Thread(target=self._writer_loop, daemon=True)
+        self._writer.start()
+
+    # -- critical path ---------------------------------------------------------
+
+    def save(self, step: int, tree) -> float:
+        """Stage a snapshot; returns staging latency in seconds."""
+        t0 = time.monotonic()
+        leaves, treedef = _flatten(tree)
+        self._treedef = treedef
+        arrays = [np.asarray(l) for l in leaves]      # device -> host staging
+        dt = time.monotonic() - t0
+        with self._lock:
+            self._latest_staged = max(self._latest_staged, step)
+        self._q.put(_Staged(step, arrays, time.monotonic()))
+        return dt
+
+    # -- background writer -------------------------------------------------------
+
+    def _writer_loop(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            with self._lock:
+                stale = item.step < self._latest_staged
+            if stale:
+                # Update-flag semantics: a newer snapshot supersedes this one
+                self.n_skipped_stale += 1
+                self._q.task_done()
+                continue
+            for d in self.dirs:
+                self._write_one(d, item)
+            with self._lock:
+                self._latest_written = max(self._latest_written, item.step)
+            self._q.task_done()
+
+    def _write_one(self, d: str, item: _Staged):
+        tmp = tempfile.mkdtemp(dir=d)
+        try:
+            path = os.path.join(tmp, "arrays.npz")
+            np.savez(path, **{f"a{i}": a for i, a in enumerate(item.arrays)})
+            manifest = {
+                "step": item.step,
+                "n_arrays": len(item.arrays),
+                "shapes": [list(a.shape) for a in item.arrays],
+                "dtypes": [str(a.dtype) for a in item.arrays],
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            final = os.path.join(d, f"step_{item.step:08d}")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)                      # atomic publish
+        except Exception:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc(d)
+
+    def _gc(self, d: str):
+        steps = sorted(self._list_steps(d))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(d, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    @staticmethod
+    def _list_steps(d: str) -> List[int]:
+        out = []
+        for name in os.listdir(d):
+            if name.startswith("step_"):
+                out.append(int(name.split("_")[1]))
+        return out
+
+    # -- barrier / shutdown --------------------------------------------------------
+
+    def wait(self):
+        """Drain the staging queue (checkpoint barrier)."""
+        self._q.join()
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._writer.join(timeout=10)
+
+    # -- restore -------------------------------------------------------------------
+
+    def restore(self, tree_like=None) -> Optional[Tuple[int, Any]]:
+        """Load the newest valid snapshot across replicas.
+
+        Returns (step, tree) or None.  Corrupt/partial replicas are skipped —
+        the Table-3 'access replica first' read path.
+        """
+        candidates: List[Tuple[int, str]] = []
+        for d in self.dirs:
+            for s in self._list_steps(d):
+                candidates.append((s, os.path.join(d, f"step_{s:08d}")))
+        for step, path in sorted(candidates, reverse=True):
+            try:
+                with open(os.path.join(path, "manifest.json")) as f:
+                    manifest = json.load(f)
+                data = np.load(os.path.join(path, "arrays.npz"))
+                arrays = [data[f"a{i}"] for i in range(manifest["n_arrays"])]
+                for a, shape in zip(arrays, manifest["shapes"]):
+                    assert list(a.shape) == shape
+            except Exception:
+                continue                                  # replica failed
+            treedef = self._treedef
+            if treedef is None and tree_like is not None:
+                treedef = jax.tree.structure(tree_like)
+            if treedef is None:
+                return step, arrays
+            return step, jax.tree.unflatten(treedef, arrays)
+        return None

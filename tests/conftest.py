@@ -1,0 +1,15 @@
+import os
+import sys
+
+# keep smoke tests on 1 device — only launch/dryrun sets 512 fake devices
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,93 @@
+"""Migration protocol + activity-based victim selection (paper §3.5)."""
+import numpy as np
+import pytest
+
+from repro.core import (ActivityTracker, TieredPageStore, POLICIES,
+                        PAPER_COSTS, select_victims_nad, select_victims_mass,
+                        power_of_two_choices)
+from repro.core.migration import Phase
+
+
+def populated_store(policy="valet", n_peers=6, blocks=128):
+    store = TieredPageStore(POLICIES[policy], PAPER_COSTS,
+                            pool_capacity=256, min_pool=32, max_pool=256,
+                            n_peers=n_peers, peer_capacity_blocks=blocks,
+                            pages_per_block=16, seed=0)
+    for p in range(1500):
+        store.write(p)
+        if p % 32 == 0:
+            store.background_tick()
+    store.drain()
+    return store
+
+
+def test_nad_selects_least_active():
+    t = ActivityTracker()
+    t.on_write([1], step=10)
+    t.on_write([2], step=50)
+    t.on_write([3], step=90)
+    assert select_victims_nad(t, [1, 2, 3], 1, step=100) == [1]
+    assert select_victims_nad(t, [1, 2, 3], 2, step=100) == [1, 2]
+
+
+def test_mass_victim_prefers_cold_pages():
+    t = ActivityTracker()
+    t.on_write([1, 2, 3], step=1)
+    t.on_read_mass([2], [10.0])
+    t.on_read_mass([3], [0.5])
+    assert select_victims_mass(t, [1, 2, 3], 1, step=5) == [1]
+
+
+def test_power_of_two_choices_prefers_freer():
+    # with 4 peers, the freer peer is in the sampled pair w.p. 1/2 and then
+    # always wins -> expected pick rate 50% (vs 25% uniform)
+    rng = np.random.default_rng(0)
+    picks = [power_of_two_choices([1, 100, 1, 1], rng) for _ in range(200)]
+    freq = picks.count(1) / 200
+    assert 0.38 < freq < 0.62
+    assert all(freq > picks.count(i) / 200 for i in (0, 2, 3))
+
+
+def test_migration_protocol_phases_and_log():
+    store = populated_store()
+    keys = [k for k in store.blocks if k[0] == 0][:1]
+    bid = store._block_id(*keys[0])
+    pages = list(store.blocks[keys[0]])
+    mig = store.migrator.migrate_block(0, bid, pages)
+    assert mig.phase == Phase.DONE
+    kinds = [m.kind for m in mig.log]
+    assert kinds == ["ALLOC_REQ", "ALLOC_OK", "PARK_WRITES", "COPY_REQ",
+                     "COPY_DONE", "FREE_BLOCK"]
+    assert mig.dst_peer != 0
+    # pages now resolve to the destination peer
+    for pg in pages:
+        loc = store.gpt.remote_location(pg)
+        assert loc.peer == mig.dst_peer
+
+
+def test_migration_preserves_reads_no_cold_hits():
+    """Figure 23: migration instead of delete -> no eviction impact."""
+    store = populated_store("valet")
+    freed = store.peer_pressure(0, 8)
+    assert freed == 8
+    for p in range(1500):
+        store.read(p)
+    assert store.stats.cold_hits == 0
+
+
+def test_delete_eviction_causes_cold_hits():
+    """Figures 5/23 baseline: deletion sends reads to the cold tier."""
+    store = populated_store("infiniswap")
+    store.peer_pressure(0, 8)
+    for p in range(1500):
+        store.read(p)
+    assert store.stats.cold_hits > 0
+
+
+def test_migration_destination_not_source():
+    store = populated_store()
+    migs = store.migrator.completed
+    store.peer_pressure(2, 4)
+    for mig in store.migrator.completed:
+        if mig.src_peer == 2:
+            assert mig.dst_peer != 2

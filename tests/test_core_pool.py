@@ -1,0 +1,102 @@
+"""ValetMempool unit + property tests (paper §3.4, §4.1, Table 2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pool import ValetMempool, SlotState
+
+
+def make_pool(capacity=64, min_pages=8, max_pages=64, free=64):
+    return ValetMempool(capacity, min_pages=min_pages, max_pages=max_pages,
+                        free_memory_fn=lambda: free)
+
+
+def test_use_pool_first():
+    """Valet allocates from pre-allocated slots first (Table 2)."""
+    pool = make_pool()
+    before = pool.size
+    s = pool.alloc(0, step=1)
+    assert s is not None
+    assert pool.slots[s].state == SlotState.IN_USE
+    assert pool.n_alloc_from_pool == 1
+
+
+def test_grow_at_80_percent():
+    pool = make_pool(capacity=100, min_pages=10, max_pages=100)
+    for i in range(8):                 # 8/10 = 80% usage triggers growth
+        pool.alloc(i, step=i)
+    assert pool.size > 10
+    pool.check_invariants()
+
+
+def test_growth_capped_by_host_free_memory():
+    """Pool stops at 50% of host free pages (paper §4.1)."""
+    free = 30
+    pool = ValetMempool(100, min_pages=10, max_pages=100,
+                        free_memory_fn=lambda: free)
+    for i in range(40):
+        pool.alloc(i, step=i)
+    assert pool.size <= max(15, 10 + pool.grow_step)  # 50% of 30
+    pool.check_invariants()
+
+
+def test_shrink_respects_min_pages():
+    pool = ValetMempool(100, min_pages=10, max_pages=100,
+                        free_memory_fn=lambda: 0)
+    pool.shrink_for_pressure()
+    assert pool.size >= 10
+    pool.check_invariants()
+
+
+def test_reclaim_cycle():
+    pool = make_pool()
+    s = pool.alloc(7, step=1)
+    pool.mark_reclaimable(s)
+    assert pool.slots[s].state == SlotState.RECLAIMABLE
+    page = pool.reclaim(s)
+    assert page == 7
+    assert pool.slots[s].state == SlotState.FREE
+
+
+def test_update_flag_blocks_reclaim():
+    """§5.2: a slot with a pending newer write-set is not reclaimed."""
+    pool = make_pool()
+    s = pool.alloc(7, step=1)
+    pool.slots[s].update_flag = True
+    pool.mark_reclaimable(s)
+    assert pool.slots[s].state == SlotState.IN_USE   # kept
+    assert not pool.slots[s].update_flag             # flag consumed
+    pool.mark_reclaimable(s)                         # second send completes
+    assert pool.slots[s].state == SlotState.RECLAIMABLE
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(["alloc", "reclaim", "grow", "shrink",
+                                 "release"]), min_size=1, max_size=200),
+       st.integers(8, 32), st.integers(32, 128))
+def test_pool_invariants_hold(ops, min_pages, capacity):
+    """Random op sequences never violate the slot-state invariants."""
+    free = capacity
+    pool = ValetMempool(capacity, min_pages=min_pages, max_pages=capacity,
+                        free_memory_fn=lambda: free)
+    live = []
+    reclaimable = []
+    page = 0
+    for i, op in enumerate(ops):
+        if op == "alloc":
+            s = pool.alloc(page, step=i)
+            if s is not None:
+                live.append(s)
+                page += 1
+        elif op == "release" and live:
+            pool.release(live.pop())
+        elif op == "reclaim":
+            if live:
+                s = live.pop()
+                pool.mark_reclaimable(s)
+                if pool.slots[s].state == SlotState.RECLAIMABLE:
+                    pool.reclaim(s)
+        elif op == "grow":
+            pool.maybe_grow()
+        elif op == "shrink":
+            pool.shrink_for_pressure()
+        pool.check_invariants()

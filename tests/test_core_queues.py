@@ -1,0 +1,89 @@
+"""Staging/Reclaimable queue + §5.2 consistency property tests."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.pool import ValetMempool, SlotState
+from repro.core.queues import WritePipeline
+
+
+def make_pipeline(capacity=128):
+    pool = ValetMempool(capacity, min_pages=capacity, max_pages=capacity)
+    return WritePipeline(pool, queue_len=1 << 12)
+
+
+def test_write_then_flush_then_reclaim():
+    wp = make_pipeline()
+    ws = wp.write((1, 2, 3), step=1)
+    assert ws is not None
+    assert len(wp.staging) == 1
+    sent = []
+    wp.flush(10, lambda w: sent.append(w.pages))
+    assert sent == [(1, 2, 3)]
+    assert len(wp.staging) == 0
+    freed = wp.reclaim(10)
+    assert {pg for _, pg in freed} == {1, 2, 3}
+    wp.check_invariants()
+
+
+def test_migration_hold_parks_writes():
+    """§3.5: writes to a migrating block stay in the staging queue."""
+    wp = make_pipeline()
+    wp.write((1,), step=1)
+    wp.write((2,), step=2)
+    wp.staging.hold_pages([1], True)
+    sent = []
+    wp.flush(10, lambda w: sent.append(w.pages))
+    assert sent == [(2,)]                      # page 1 held
+    assert len(wp.staging) == 1
+    wp.staging.hold_pages([1], False)          # migration done -> unpark
+    wp.flush(10, lambda w: sent.append(w.pages))
+    assert sent == [(2,), (1,)]
+    wp.check_invariants()
+
+
+def test_multiple_updates_same_page_update_flag():
+    """§5.2: older write-set's slot is not reclaimed before the newer one
+    is sent — the Update flag skips it."""
+    wp = make_pipeline()
+    ws1 = wp.write((5,), step=1)
+    ws2 = wp.write((5,), step=2)               # newer update, same page
+    assert wp.pool.slots[ws1.slots[0]].update_flag
+
+    # send ONLY the first write-set
+    wp.flush(1, lambda w: None)
+    # slot1 must not be reclaimable yet (newer data still pending)
+    st1 = wp.pool.slots[ws1.slots[0]].state
+    assert st1 == SlotState.IN_USE
+    freed = wp.reclaim(10)
+    assert (ws1.slots[0], 5) not in freed
+
+    # send the second; now both may be reclaimed in order
+    wp.flush(1, lambda w: None)
+    assert wp.pool.slots[ws2.slots[0]].state == SlotState.RECLAIMABLE
+    wp.check_invariants()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["write", "flush", "reclaim"]),
+                          st.integers(0, 9)), min_size=1, max_size=150))
+def test_pipeline_never_reclaims_latest_pending(ops):
+    """Property: a page's newest pending slot is never freed while unsent
+    (data-loss freedom of the §5.2 protocol)."""
+    wp = make_pipeline(capacity=512)
+    latest_slot = {}
+    sent_seqs = set()
+    for i, (op, pg) in enumerate(ops):
+        if op == "write":
+            ws = wp.write((pg,), step=i)
+            if ws is not None:
+                latest_slot[pg] = ws.slots[0]
+        elif op == "flush":
+            wp.flush(2, lambda w: sent_seqs.add(w.seq))
+        else:
+            wp.reclaim(4)
+        # invariant: the newest slot of each page is FREE only if its
+        # write-set was sent
+        for page, slot in latest_slot.items():
+            m = wp.pool.slots[slot]
+            if m.state == SlotState.FREE:
+                assert all(page not in w.pages for w in wp.staging.entries())
+        wp.check_invariants()

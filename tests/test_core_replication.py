@@ -1,0 +1,62 @@
+"""Replication & fault tolerance (paper §5.1, Table 3)."""
+import numpy as np
+
+from repro.core import TieredPageStore, POLICIES, PAPER_COSTS
+from repro.core.page_table import GlobalPageTable, Location, Tier
+from repro.core.replication import fail_peer
+
+
+def test_repoint_replica():
+    gpt = GlobalPageTable()
+    gpt.map_remote(1, Location(Tier.PEER, peer=0, slot=3,
+                               replicas=((2, 7),)))
+    assert gpt.repoint_replica(1)
+    loc = gpt.remote_location(1)
+    assert (loc.peer, loc.slot) == (2, 7)
+    assert not gpt.repoint_replica(1)      # replicas exhausted
+
+
+def test_peer_failure_with_replication_loses_nothing():
+    store = TieredPageStore(POLICIES["valet"], PAPER_COSTS,
+                            pool_capacity=128, min_pool=16,
+                            n_peers=6, peer_capacity_blocks=128,
+                            pages_per_block=16)
+    for p in range(800):
+        store.write(p)
+    store.drain()
+    recovered, lost = store.fail_peer(1)
+    assert lost == 0                       # every page had a replica
+    # all reads still resolve off the failed peer
+    store.local_pressure(10_000)           # drop local copies
+    before_cold = store.stats.cold_hits
+    for p in range(800):
+        store.read(p)
+    assert store.stats.cold_hits == before_cold
+
+
+def test_peer_failure_without_replication_loses_pages():
+    from repro.core.policies import Policy
+    pol = Policy(name="valet-norep", use_local_pool=True, lazy_send=True,
+                 victim="nad", evict_action="migrate", replication=0)
+    store = TieredPageStore(pol, PAPER_COSTS, pool_capacity=128, min_pool=16,
+                            n_peers=4, peer_capacity_blocks=64,
+                            pages_per_block=16)
+    for p in range(600):
+        store.write(p)
+    store.drain()
+    recovered, lost = store.fail_peer(0)
+    assert recovered == 0 and lost > 0     # caching-system semantics
+
+
+def test_table3_cold_backup_mode():
+    store = TieredPageStore(POLICIES["infiniswap"], PAPER_COSTS,
+                            pool_capacity=128, min_pool=16,
+                            n_peers=4, peer_capacity_blocks=64,
+                            pages_per_block=16)
+    for p in range(400):
+        store.write(p)
+    rec, lost = store.fail_peer(0)
+    # cold_backup=True: lost pages fall to the cold tier, not NONE
+    for p in range(400):
+        loc = store.gpt.lookup(p)
+        assert loc.tier != Tier.NONE

@@ -1,0 +1,103 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_lib
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ssd_scan import ssd_scan
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("b,s,hq,hkv,d", [
+    (1, 128, 4, 4, 32),      # MHA
+    (2, 256, 8, 2, 64),      # GQA 4:1
+    (1, 256, 4, 1, 128),     # MQA
+    (2, 128, 2, 2, 96),      # odd head_dim
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_sweep(b, s, hq, hkv, d, dtype, causal, window):
+    q = rand(0, (b, s, hq, d), dtype)
+    k = rand(1, (b, s, hkv, d), dtype)
+    v = rand(2, (b, s, hkv, d), dtype)
+    qk = q.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    out = flash_attention(qk, kk, vk, causal=causal, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    out = out.reshape(b, hq, s, d).transpose(0, 2, 1, 3)
+    ref = ref_lib.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("b,hq,hkv,d,page,npages", [
+    (2, 4, 2, 64, 16, 4),
+    (3, 8, 8, 32, 8, 6),
+    (1, 8, 1, 128, 32, 3),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(b, hq, hkv, d, page, npages, dtype):
+    n_slots = b * npages + 4
+    q = rand(0, (b, hq, d), dtype)
+    kp = rand(1, (n_slots, page, hkv, d), dtype)
+    vp = rand(2, (n_slots, page, hkv, d), dtype)
+    rng = np.random.default_rng(0)
+    bt = np.full((b, npages), -1, np.int32)
+    lens = rng.integers(1, npages * page, size=b).astype(np.int32)
+    for i in range(b):
+        used = int(np.ceil((lens[i] + 1) / page))
+        bt[i, :used] = rng.choice(n_slots, used, replace=False)
+    out = paged_attention(q, kp, vp, jnp.array(bt), jnp.array(lens),
+                          interpret=True)
+    ref = ref_lib.paged_attention_ref(q, kp, vp, jnp.array(bt),
+                                      jnp.array(lens))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+@pytest.mark.parametrize("b,s,h,p,g,n,chunk", [
+    (1, 64, 2, 8, 1, 16, 16),
+    (2, 64, 4, 16, 2, 8, 32),
+    (1, 128, 8, 8, 2, 4, 16),
+])
+def test_ssd_scan_sweep(b, s, h, p, g, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    Bm = jax.random.normal(ks[3], (b, s, g, n))
+    Cm = jax.random.normal(ks[4], (b, s, g, n))
+    y, hT = ssd_scan(x, dt, A, Bm, Cm, chunk, interpret=True)
+    yr, hr = ref_lib.ssd_scan_ref(x, dt, A, Bm, Cm, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=3e-4, rtol=3e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hr),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_paged_attention_skips_invalid_pages():
+    """-1 block-table entries contribute nothing (Valet GPT miss -> pad)."""
+    b, hq, hkv, d, page = 1, 2, 1, 16, 8
+    kp = rand(1, (8, page, hkv, d), jnp.float32)
+    vp = rand(2, (8, page, hkv, d), jnp.float32)
+    q = rand(0, (b, hq, d), jnp.float32)
+    bt_full = jnp.array([[0, 1, -1, -1]], jnp.int32)
+    bt_short = jnp.array([[0, 1]], jnp.int32)
+    lens = jnp.array([2 * page - 1], jnp.int32)
+    a = paged_attention(q, kp, vp, bt_full, lens, interpret=True)
+    b_ = paged_attention(q, kp, vp, bt_short, lens, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
