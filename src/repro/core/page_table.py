@@ -7,6 +7,13 @@ local mapping exists the page is local; otherwise it is remote* — which
 avoids lock contention on updates (here: avoids read-modify-write races
 between the scheduler thread and the flush thread).
 
+The backing store is a set of dense numpy arrays indexed by logical page id
+(page ids are small sequential ints in both the simulator and the serving
+engine), so a whole batch of lookups is a single vectorized gather
+(``lookup_batch`` / ``local_slots_batch``) instead of a Python loop of dict
+probes — the enabling piece of ``TieredPageStore.access_batch``.  Replica
+lists are sparse (only replicated pages carry them) and stay dict-backed.
+
 Tiers mirror DESIGN.md §2: LOCAL HBM pool -> PEER device HBM -> HOST DRAM ->
 COLD (recompute / disk analogue).
 """
@@ -36,58 +43,193 @@ class Location:
 
 
 class GlobalPageTable:
-    """logical page id -> Location (+ optional local pool slot)."""
+    """logical page id -> Location (+ optional local pool slot).
 
-    def __init__(self):
-        self._local: Dict[int, int] = {}          # page -> local pool slot
-        self._remote: Dict[int, Location] = {}    # page -> remote location
+    Scalar API (``map_local`` / ``lookup`` / ...) is unchanged from the
+    dict-backed version; the ``*_batch`` methods operate on int arrays and
+    are the fast path for batched orchestration.
+    """
+
+    def __init__(self, initial_pages: int = 1024):
+        n = max(int(initial_pages), 1)
+        self._l_slot = np.full(n, -1, np.int64)    # page -> local pool slot
+        self._r_tier = np.zeros(n, np.int8)        # page -> remote tier
+        self._r_peer = np.full(n, -1, np.int32)
+        self._r_slot = np.full(n, -1, np.int64)
+        self._r_mapped = np.zeros(n, bool)         # remote entry exists
+        self._replicas: Dict[int, Tuple[Tuple[int, int], ...]] = {}
+
+    # -- capacity ------------------------------------------------------------
+
+    def _ensure(self, page: int):
+        """Grow the dense tables to cover ``page`` (geometric growth)."""
+        n = self._l_slot.shape[0]
+        if page < n:
+            return
+        new = max(n * 2, page + 1)
+
+        def grow(arr, fill):
+            out = np.full(new, fill, arr.dtype)
+            out[:n] = arr
+            return out
+
+        self._l_slot = grow(self._l_slot, -1)
+        self._r_tier = grow(self._r_tier, 0)
+        self._r_peer = grow(self._r_peer, -1)
+        self._r_slot = grow(self._r_slot, -1)
+        self._r_mapped = grow(self._r_mapped, False)
 
     # -- local mapping (the paper's "page reference exists -> local") --------
 
     def map_local(self, page: int, slot: int):
-        self._local[page] = slot
+        self._ensure(page)
+        self._l_slot[page] = slot
 
     def unmap_local(self, page: int) -> Optional[int]:
-        return self._local.pop(page, None)
+        if page >= self._l_slot.shape[0]:
+            return None
+        slot = self._l_slot[page]
+        if slot < 0:
+            return None
+        self._l_slot[page] = -1
+        return int(slot)
 
     def local_slot(self, page: int) -> Optional[int]:
-        return self._local.get(page)
+        if page >= self._l_slot.shape[0]:
+            return None
+        slot = self._l_slot[page]
+        return None if slot < 0 else int(slot)
 
     # -- remote mapping -------------------------------------------------------
 
     def map_remote(self, page: int, loc: Location):
-        self._remote[page] = loc
+        page = int(page)
+        self._ensure(page)
+        self._r_tier[page] = int(loc.tier)
+        self._r_peer[page] = loc.peer
+        self._r_slot[page] = loc.slot
+        self._r_mapped[page] = True
+        if loc.replicas:
+            self._replicas[page] = tuple(loc.replicas)
+        else:
+            self._replicas.pop(page, None)
 
     def remote_location(self, page: int) -> Optional[Location]:
-        return self._remote.get(page)
+        page = int(page)
+        if page >= self._r_mapped.shape[0] or not self._r_mapped[page]:
+            return None
+        return Location(Tier(int(self._r_tier[page])),
+                        peer=int(self._r_peer[page]),
+                        slot=int(self._r_slot[page]),
+                        replicas=self._replicas.get(page, ()))
 
     def drop_remote(self, page: int):
-        self._remote.pop(page, None)
+        page = int(page)
+        if page >= self._r_mapped.shape[0]:
+            return
+        self._r_mapped[page] = False
+        self._r_tier[page] = 0
+        self._r_peer[page] = -1
+        self._r_slot[page] = -1
+        self._replicas.pop(page, None)
 
     def lookup(self, page: int) -> Location:
         """Resolution order: local pool, then remote, then NONE."""
-        slot = self._local.get(page)
+        slot = self.local_slot(page)
         if slot is not None:
             return Location(Tier.LOCAL, slot=slot)
-        return self._remote.get(page, Location(Tier.NONE))
+        return self.remote_location(page) or Location(Tier.NONE)
 
     def pages_on_peer(self, peer: int) -> List[int]:
-        return [pg for pg, loc in self._remote.items()
-                if loc.tier == Tier.PEER and loc.peer == peer]
+        mask = (self._r_tier == int(Tier.PEER)) & (self._r_peer == peer) \
+            & self._r_mapped
+        return [int(p) for p in np.flatnonzero(mask)]
 
     def repoint_replica(self, page: int) -> bool:
         """Peer failure: promote the first replica to primary (Table 3)."""
-        loc = self._remote.get(page)
-        if loc is None or not loc.replicas:
+        page = int(page)
+        reps = self._replicas.get(page)
+        if page >= self._r_mapped.shape[0] or not self._r_mapped[page] \
+                or not reps:
             return False
-        (peer, slot), rest = loc.replicas[0], loc.replicas[1:]
-        self._remote[page] = Location(loc.tier, peer=peer, slot=slot,
-                                      replicas=rest)
+        (peer, slot), rest = reps[0], reps[1:]
+        self.map_remote(page, Location(Tier(int(self._r_tier[page])),
+                                       peer=peer, slot=slot, replicas=rest))
         return True
 
     def __len__(self):
-        return len(self._local) + len(
-            set(self._remote) - set(self._local))
+        return int(np.count_nonzero((self._l_slot >= 0) | self._r_mapped))
+
+    # -- vectorized batch operations (the access_batch fast path) -------------
+
+    def lookup_batch(self, pages: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized ``lookup`` for a whole batch: one gather per table.
+
+        Returns ``(tier, peer, slot)`` int arrays; local mappings override
+        remote ones exactly as in the scalar resolution order.
+        """
+        pages = np.asarray(pages, np.int64)
+        if pages.size:
+            self._ensure(int(pages.max()))
+        l_slot = self._l_slot[pages]
+        is_local = l_slot >= 0
+        tier = np.where(is_local, np.int8(Tier.LOCAL), self._r_tier[pages])
+        peer = np.where(is_local, np.int32(-1), self._r_peer[pages])
+        slot = np.where(is_local, l_slot, self._r_slot[pages])
+        return tier, peer, slot
+
+    def lookup_raw(self, pages: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Raw gathers for hot callers: ``(local_slot, remote_tier,
+        remote_peer)`` with no local-override blending — callers derive
+        their own masks (a local slot >= 0 wins, as in ``lookup``)."""
+        pages = np.asarray(pages, np.int64)
+        if pages.size:
+            self._ensure(int(pages.max()))
+        return self._l_slot[pages], self._r_tier[pages], self._r_peer[pages]
+
+    def map_remote_batch(self, pages, tiers, peers, slots, replicas=None):
+        """Bulk ``map_remote``: arrays of tier/peer/slot per page, plus an
+        optional parallel sequence of replica tuples.  Duplicate pages keep
+        last-writer-wins semantics, like sequential ``map_remote`` calls."""
+        parr = np.asarray(pages, np.int64)
+        if parr.size:
+            self._ensure(int(parr.max()))
+        self._r_tier[parr] = tiers
+        self._r_peer[parr] = peers
+        self._r_slot[parr] = slots
+        self._r_mapped[parr] = True
+        rd = self._replicas
+        if replicas is None:
+            if rd:
+                for pg in parr.tolist():
+                    rd.pop(pg, None)
+        else:
+            for pg, reps in zip(parr.tolist(), replicas):
+                if reps:
+                    rd[pg] = tuple(reps)
+                elif rd:
+                    rd.pop(pg, None)
+
+    def local_slots_batch(self, pages: np.ndarray) -> np.ndarray:
+        """Vectorized ``local_slot``: int64 array, -1 where unmapped."""
+        pages = np.asarray(pages, np.int64)
+        if pages.size:
+            self._ensure(int(pages.max()))
+        return self._l_slot[pages]
+
+    def map_local_batch(self, pages: np.ndarray, slots: np.ndarray):
+        pages = np.asarray(pages, np.int64)
+        if pages.size:
+            self._ensure(int(pages.max()))
+        self._l_slot[pages] = slots
+
+    def unmap_local_batch(self, pages: np.ndarray):
+        pages = np.asarray(pages, np.int64)
+        if pages.size:
+            self._ensure(int(pages.max()))
+        self._l_slot[pages] = -1
 
     # -- dense device-facing view ---------------------------------------------
 

@@ -65,6 +65,7 @@ class ValetMempool:
         self.slots: List[SlotMeta] = [SlotMeta() for _ in range(capacity)]
         self.size = 0
         self._free: List[int] = []
+        self._used = 0           # non-FREE/non-UNBACKED slots below size
         self._resize_to(min_pages)
         # counters for benchmarks / tests
         self.n_grow = 0
@@ -97,11 +98,14 @@ class ValetMempool:
                           if self.slots[i].state == SlotState.FREE]
             new_size = self.size - released
         self.size = new_size
+        # resizes can strand non-FREE slots beyond the effective size, so
+        # the O(1) usage counter is rebuilt here (resizes are rare events)
+        self._used = sum(1 for i in range(self.size)
+                         if self.slots[i].state != SlotState.FREE
+                         and self.slots[i].state != SlotState.UNBACKED)
 
     def used(self) -> int:
-        return sum(1 for i in range(self.size)
-                   if self.slots[i].state != SlotState.FREE
-                   and self.slots[i].state != SlotState.UNBACKED)
+        return self._used
 
     def usage_fraction(self) -> float:
         return self.used() / max(self.size, 1)
@@ -148,26 +152,77 @@ class ValetMempool:
         m.last_activity = step
         m.update_flag = False
         m.reclaim_flag = False
+        if slot < self.size:
+            self._used += 1
         self.n_alloc_from_pool += 1
         # opportunistic growth so the next alloc stays off the slow path
         if self.usage_fraction() >= self.GROW_THRESHOLD:
             self.maybe_grow()
         return slot
 
+    def alloc_batch(self, logical_pages, steps) -> Optional[List[int]]:
+        """Bulk use-pool-first allocation: one slot per page, in order.
+
+        Semantically identical to calling ``alloc`` once per page (same free-
+        list pop order, same 80%-usage growth triggers, same counters), but
+        with the per-page method-call overhead amortized away; ``maybe_grow``
+        is invoked only when the scalar path would actually attempt growth.
+        When the pool is already at ``max_pages`` the (provably futile) grow
+        probe is skipped entirely, which assumes ``free_memory_fn`` is pure —
+        it is everywhere in this repo.
+
+        Requires ``free_count() >= len(logical_pages)`` (the caller's batch
+        guard); returns None without side effects otherwise.
+        """
+        pages = list(logical_pages)
+        n = len(pages)
+        if len(self._free) < n:
+            return None
+        free = self._free
+        slots_meta = self.slots
+        thresh = self.GROW_THRESHOLD
+        can_grow = self.size < self.max_pages
+        size = self.size
+        used = self._used
+        out: List[int] = []
+        for pg, stp in zip(pages, steps):
+            slot = free.pop()
+            m = slots_meta[slot]
+            m.state = SlotState.IN_USE
+            m.logical_page = pg
+            m.last_activity = stp
+            m.update_flag = False
+            m.reclaim_flag = False
+            out.append(slot)
+            if slot < size:
+                used += 1
+                self._used = used
+            if can_grow and used / max(size, 1) >= thresh:
+                if self.maybe_grow():
+                    size = self.size
+                    used = self._used
+                    can_grow = size < self.max_pages
+        self.n_alloc_from_pool += n
+        return out
+
     def touch(self, slot: int, step: int):
         """Record write activity (paper: timestamp tag updated on write)."""
         self.slots[slot].last_activity = step
 
-    def mark_reclaimable(self, slot: int):
-        """Remote replica now exists (WC polled): slot may be reclaimed."""
+    def mark_reclaimable(self, slot: int) -> bool:
+        """Remote replica now exists (WC polled): slot may be reclaimed.
+
+        Returns False when §5.2 defers the transition: a newer write-set for
+        the same page is still pending, so the flag is cleared and the slot
+        stays IN_USE until that newer set completes (the caller re-marks it
+        then)."""
         m = self.slots[slot]
         if m.update_flag:
-            # §5.2: a newer write-set for the same page is still pending;
-            # clear the flag and keep the slot until that one completes.
             m.update_flag = False
-            return
+            return False
         m.state = SlotState.RECLAIMABLE
         m.reclaim_flag = True
+        return True
 
     def reclaim(self, slot: int) -> int:
         """Return a RECLAIMABLE slot to the free list.  O(1) pointer move."""
@@ -178,6 +233,8 @@ class ValetMempool:
         m.logical_page = -1
         m.update_flag = False
         m.reclaim_flag = False
+        if slot < self.size:
+            self._used -= 1
         self._free.append(slot)
         self.n_reclaimed += 1
         return page
@@ -190,6 +247,8 @@ class ValetMempool:
         m.logical_page = -1
         m.update_flag = False
         m.reclaim_flag = False
+        if slot < self.size:
+            self._used -= 1
         self._free.append(slot)
 
     def free_count(self) -> int:
@@ -203,6 +262,10 @@ class ValetMempool:
 
     def check_invariants(self):
         assert self.min_pages <= self.size <= min(self.max_pages, self.capacity)
+        brute_used = sum(1 for i in range(self.size)
+                         if self.slots[i].state != SlotState.FREE
+                         and self.slots[i].state != SlotState.UNBACKED)
+        assert self._used == brute_used, (self._used, brute_used)
         free_set: Set[int] = set(self._free)
         assert len(free_set) == len(self._free), "duplicate free slots"
         for i, m in enumerate(self.slots):

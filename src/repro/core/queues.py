@@ -21,7 +21,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 from repro.core.pool import ValetMempool
 
 
-@dataclass
+@dataclass(slots=True)
 class WriteSet:
     """One write transaction: logical pages + their pool slots."""
     seq: int
@@ -130,6 +130,9 @@ class WritePipeline:
         self._seq = 0
         # page -> latest pending slot (for update_flag maintenance)
         self._pending_slot: Dict[int, int] = {}
+        # page -> older slot whose reclaim §5.2 deferred until the newer
+        # write-set for the page is sent (FIFO flush ⇒ at most one per page)
+        self._deferred: Dict[int, int] = {}
 
     def write(self, pages: Tuple[int, ...], step: int,
               alloc_fallback=None) -> Optional[WriteSet]:
@@ -157,6 +160,39 @@ class WritePipeline:
             return None
         return ws
 
+    def stage_batch(self, pages, slots) -> Optional[List[WriteSet]]:
+        """Stage one single-page WriteSet per (page, slot) pair in bulk.
+
+        Scalar-equivalent to ``write((pg,), ...)`` per page with the pool
+        allocation done up front by ``ValetMempool.alloc_batch``: same seq
+        numbers, same FIFO staging order, and the same §5.2 update-flag
+        maintenance for duplicate pages (the older pending slot is flagged
+        so it is not reclaimed before the newer write-set is sent).
+
+        Requires staging room for the whole batch; returns None without
+        side effects otherwise (callers pre-check and fall back to the
+        scalar path).
+        """
+        n = len(pages)
+        if self.staging.max_entries - len(self.staging) < n:
+            return None
+        pend = self._pending_slot
+        pool_slots = self.pool.slots
+        q = self.staging._q
+        seq = self._seq
+        out: List[WriteSet] = []
+        for pg, slot in zip(pages, slots):
+            prev = pend.get(pg)
+            if prev is not None:
+                pool_slots[prev].update_flag = True
+            pend[pg] = slot
+            ws = WriteSet(seq, (pg,), (slot,))
+            seq += 1
+            q.append(ws)
+            out.append(ws)
+        self._seq = seq
+        return out
+
     def flush(self, n: int, send_fn) -> List[WriteSet]:
         """Remote Sender Thread step: coalesce + send + mark reclaimable."""
         batch = self.staging.take_batch(n)
@@ -165,7 +201,16 @@ class WritePipeline:
             for pg, slot in zip(ws.pages, ws.slots):
                 if self._pending_slot.get(pg) == slot:
                     del self._pending_slot[pg]
-                self.pool.mark_reclaimable(slot)
+                # §5.2 second half: this send supersedes any older slot for
+                # the page whose reclaim was deferred — release it now (its
+                # original queue entry may already have been popped, so a
+                # fresh single-page entry re-queues it)
+                deferred = self._deferred.pop(pg, None)
+                if deferred is not None and \
+                        self.pool.mark_reclaimable(deferred):
+                    self.reclaimable.push(WriteSet(-1, (pg,), (deferred,)))
+                if not self.pool.mark_reclaimable(slot):
+                    self._deferred[pg] = slot
             self.reclaimable.push(ws)
         return batch
 

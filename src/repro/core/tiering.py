@@ -21,9 +21,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.activity import (ActivityTracker, select_victims_mass,
-                                 select_victims_nad, select_victims_random,
-                                 power_of_two_choices)
+from repro.core.activity import (ActivityTracker, PairSampler,
+                                 select_victims_mass, select_victims_nad,
+                                 select_victims_random, power_of_two_choices)
 from repro.core.migration import MigrationEngine
 from repro.core.page_table import GlobalPageTable, Location, Tier
 from repro.core.policies import CostModel, Policy
@@ -109,6 +109,7 @@ class TieredPageStore:
         self._next_block_slot = [0] * n_peers
         self._open_block: Dict[int, Tuple[int, int]] = {}   # peer -> block key
         self.tracker = ActivityTracker(n_peers * peer_capacity_blocks * 2)
+        self._pairs = PairSampler(n_peers, self.rng) if n_peers >= 2 else None
         self.placer = ReplicaPlacer(self.rng)
         self.host_pages: Dict[int, bool] = {}
         self.host_capacity = host_capacity
@@ -165,13 +166,28 @@ class TieredPageStore:
 
     # -- placement -------------------------------------------------------------
 
-    def _place_remote(self, page: int) -> Optional[Location]:
-        """Append the page to an open MR block (p2c peer choice per block)."""
+    def _place_remote_raw(self, page: int
+                          ) -> Optional[Tuple[int, int, Tuple]]:
+        """Append the page to an open MR block (p2c peer choice per page).
+
+        Returns ``(peer, slot, replicas)`` or None.  Runs once per flushed
+        page, so the peer pair comes from the buffered ``PairSampler`` and
+        only the two sampled peers' free counts are computed (same p2c
+        decision as scanning all of them)."""
         if not self.policy.use_remote:
             return None
-        free = [p.free() for p in self.peers]
-        peer = power_of_two_choices(free, self.rng)
-        if peer is None or free[peer] <= 0:
+        peers = self.peers
+        if self._pairs is not None:
+            a, b = self._pairs.draw()
+            pa, pb = peers[a], peers[b]
+            fa = 0 if pa.failed else pa.capacity - pa.used
+            fb = 0 if pb.failed else pb.capacity - pb.used
+            peer, best_free = (a, fa) if fa >= fb else (b, fb)
+        elif peers:
+            peer, best_free = 0, peers[0].free()
+        else:
+            return None                   # no peers configured: host spill
+        if best_free <= 0:
             return None
         blk = self._open_block.get(peer)
         if blk is None or len(self.blocks.get(blk, [])) >= self.pages_per_block:
@@ -183,6 +199,7 @@ class TieredPageStore:
             # replicas are allocated at BLOCK granularity alongside the primary
             reps = []
             if self.policy.replication > 0:
+                free = [p.free() for p in peers]
                 for rp in self.placer.place(peer, free,
                                             self.policy.replication):
                     rslot = self._alloc_block_slot(rp)
@@ -190,11 +207,18 @@ class TieredPageStore:
                         reps.append((rp, rslot))
             self.block_replicas[blk] = reps
         self.blocks[blk].append(page)
-        self.tracker.on_write([self._block_id(*blk)], self.step)
-        for rp, rs in self.block_replicas.get(blk, []):
+        self.tracker.last_activity[self._block_id(*blk)] = self.step
+        reps = self.block_replicas.get(blk, ())
+        for rp, rs in reps:
             self.blocks[(rp, rs)].append(page)
-        return Location(Tier.PEER, peer=blk[0], slot=blk[1],
-                        replicas=tuple(self.block_replicas.get(blk, ())))
+        return blk[0], blk[1], tuple(reps)
+
+    def _place_remote(self, page: int) -> Optional[Location]:
+        placed = self._place_remote_raw(page)
+        if placed is None:
+            return None
+        peer, slot, reps = placed
+        return Location(Tier.PEER, peer=peer, slot=slot, replicas=reps)
 
     # -- the two critical-path operations ---------------------------------------
 
@@ -265,6 +289,258 @@ class TieredPageStore:
         self.stats.ops += 1
         return lat
 
+    # -- batched critical path (vectorized orchestration) ------------------------
+
+    def access_batch(self, pages, is_write) -> np.ndarray:
+        """Batched page accesses: exact-parity fast path for ``write``/``read``.
+
+        ``pages`` is an int sequence; ``is_write`` is a bool (whole batch is
+        one op) or a bool sequence (a mixed trace slice).  Returns the per-op
+        critical-path latency array, identical to calling the scalar ops in
+        sequence — Stats (counts AND accumulated microseconds) are bitwise
+        equal to the scalar loop.
+
+        For local-pool policies (Valet) the whole mixed batch is handled in
+        vectorized prefixes: one ``GlobalPageTable.lookup_batch`` gather
+        resolves every location, intra-batch dependencies (read-after-write,
+        duplicate reads after a cache fill) are resolved with grouped
+        cumulative write counts, then pool allocation (writes + cache fills,
+        in op order) and write-set staging happen in bulk and costs
+        accumulate per group.  A prefix ends where the pool free list or the
+        staging queue would be overrun — the next op runs through the scalar
+        reference path (performing the reclaim / stall exactly as the scalar
+        loop would) and a fresh prefix starts after it.
+
+        Write-through policies place every page via sequential
+        power-of-two-choices rng draws, so their writes keep the scalar
+        reference loop; their reads (which never mutate state — there is no
+        local pool to fill) are vectorized per homogeneous run.
+        """
+        pages = np.asarray(pages, np.int64)
+        n = pages.size
+        lats = np.empty(n, np.float64)
+        iw = np.broadcast_to(np.asarray(is_write, bool), (n,))
+        if self.policy.use_local_pool:
+            start = 0
+            while start < n:
+                start += self._access_prefix(pages[start:], iw[start:],
+                                             lats[start:])
+            return lats
+        i = 0
+        while i < n:
+            j = i + 1
+            w = iw[i]
+            while j < n and iw[j] == w:
+                j += 1
+            if w:
+                for k in range(i, j):
+                    lats[k] = self.write(int(pages[k]))
+            else:
+                lats[i:j] = self._read_run_writethrough(pages[i:j])
+            i = j
+        return lats
+
+    # classification codes, mirroring the scalar read's resolution order
+    _CLS_LOCAL, _CLS_REMOTE, _CLS_HOST, _CLS_COLD = 0, 1, 2, 3
+
+    def _snapshot_classes(self, pages: np.ndarray) -> np.ndarray:
+        """Vectorized read classification against the current table state."""
+        n = pages.size
+        l_slot, r_tier, r_peer = self.gpt.lookup_raw(pages)
+        is_local = l_slot >= 0
+        is_peer = ~is_local & (r_tier == int(Tier.PEER))
+        remote_hit = is_peer
+        if is_peer.any():
+            failed = np.fromiter((p.failed for p in self.peers), bool,
+                                 count=len(self.peers))
+            if failed.any():
+                remote_hit = is_peer.copy()
+                pi = np.flatnonzero(is_peer)
+                remote_hit[pi] = ~failed[r_peer[pi]]
+        rest = ~is_local & ~remote_hit
+        host_hit = np.zeros(n, bool)
+        if rest.any():
+            ri = np.flatnonzero(rest)
+            hp = self.host_pages
+            if hp:
+                memb = np.fromiter((int(p) in hp for p in pages[ri]), bool,
+                                   count=ri.size)
+                host_hit[ri] = (r_tier[ri] == int(Tier.HOST)) | memb
+            else:
+                host_hit[ri] = r_tier[ri] == int(Tier.HOST)
+        cls = np.full(n, self._CLS_COLD, np.int8)
+        cls[is_local] = self._CLS_LOCAL
+        cls[remote_hit] = self._CLS_REMOTE
+        cls[host_hit] = self._CLS_HOST
+        return cls
+
+    def _cost_lut(self) -> np.ndarray:
+        """Per-class cost table; entry 4 is the write cost so a single fancy
+        index prices a mixed batch (writes carry class 4 in ``eff``).
+        Cached — ``CostModel`` and ``Policy`` are frozen."""
+        lut = getattr(self, "_lut_cache", None)
+        if lut is None:
+            c = self.costs
+            rr = c.remote_read
+            if self.policy.receiver_side_cpu:
+                rr = rr + c.receiver_cpu
+            lut = np.array([c.local_read, rr, c.host_read, c.cold_read,
+                            c.local_write], np.float64)
+            self._lut_cache = lut
+        return lut
+
+    @staticmethod
+    def _accumulate_time(t: float, costs: np.ndarray) -> float:
+        """Left-to-right float accumulation of ``t + c0 + c1 + ...`` — the
+        same double-add sequence as the scalar loop's ``time_us += lat``
+        (cumsum is sequential in C), so totals stay bitwise identical."""
+        tmp = np.empty(costs.size + 1, np.float64)
+        tmp[0] = t
+        tmp[1:] = costs
+        return float(np.add.accumulate(tmp)[-1])
+
+    def _access_prefix(self, pages: np.ndarray, iw: np.ndarray,
+                       out_lats: np.ndarray) -> int:
+        """Process the largest safe prefix of a mixed batch in bulk, plus one
+        scalar op if the prefix stopped early.  Returns ops consumed."""
+        n = pages.size
+        cls = self._snapshot_classes(pages)
+        fillable = (cls == self._CLS_REMOTE) | (cls == self._CLS_HOST)
+        lut = self._cost_lut()
+
+        if not iw.any() and not fillable.any():
+            # pure local/cold reads: no state change, no dependencies —
+            # straight group accounting, no per-page work at all
+            st = self.stats
+            counts4 = np.bincount(cls, minlength=4)
+            st.local_hits += int(counts4[0])
+            st.cold_hits += int(counts4[3])
+            costs = lut[cls]
+            st.time_us = self._accumulate_time(st.time_us, costs)
+            st.ops += n
+            out_lats[:n] = costs
+            self.step += n
+            return n
+
+        # group ops by page (argsort stable ⇒ op order within each group) to
+        # resolve dependencies: a read behind a write to the same page is a
+        # LOCAL hit; the first read of a remote/host page (with no write
+        # before it) cache-fills, turning that page's later reads LOCAL too.
+        order = np.argsort(pages, kind="stable")
+        pg_s = pages[order]
+        iw_s = iw[order]
+        new_grp = np.empty(n, bool)
+        new_grp[0] = True
+        np.not_equal(pg_s[1:], pg_s[:-1], out=new_grp[1:])
+        starts = np.flatnonzero(new_grp)
+        sizes = np.diff(np.append(starts, n))
+        cw = np.cumsum(iw_s)                       # writes, cumulative
+        wr_before_s = cw - np.repeat(cw[starts] - iw_s[starts], sizes) - iw_s
+        cand_s = ~iw_s & (wr_before_s == 0)        # reads seeing table state
+        cs = np.cumsum(cand_s)
+        first_cand_s = cand_s & \
+            (cs - np.repeat(cs[starts] - cand_s[starts], sizes) == 1)
+        has_ew = np.empty(n, bool)                 # same-page write earlier
+        cand = np.empty(n, bool)
+        decider = np.empty(n, bool)                # first such read per page
+        has_ew[order] = wr_before_s > 0
+        cand[order] = cand_s
+        decider[order] = first_cand_s
+
+        fill = decider & fillable
+        eff = cls.copy()                           # effective per-op class
+        # LOCAL for reads behind a same-page write, and for reads of a
+        # remote/host page behind its cache-filling first read; writes carry
+        # the sentinel class 4 (prices + counts them in one pass)
+        eff[~iw & (has_ew | (cand & ~decider & fillable))] = self._CLS_LOCAL
+        eff[iw] = 4
+
+        # safe-prefix bound: allocations (writes + fills) must fit the free
+        # list (no reclaim may run mid-prefix — it unmaps local pages) and
+        # writes must fit the staging queue (no stall may run mid-prefix)
+        m = n
+        alloc_mask = iw | fill
+        cum_alloc = np.cumsum(alloc_mask)
+        free = self.pool.free_count()
+        if cum_alloc[-1] > free:
+            m = int(np.searchsorted(cum_alloc, free, side="right"))
+        room = self.pipeline.staging.max_entries - len(self.pipeline.staging)
+        n_writes = int(cw[-1])
+        if n_writes > room:
+            cum_wr = np.cumsum(iw)
+            if cum_wr[-1] > room:
+                m = min(m, int(np.searchsorted(cum_wr, room, side="right")))
+
+        if m:
+            # bulk allocation in op order: identical free-list pops and
+            # growth triggers as the scalar sequence of write/fill allocs
+            alloc_idx = np.flatnonzero(alloc_mask[:m])
+            step0 = self.step
+            if alloc_idx.size:
+                apages = pages[alloc_idx].tolist()
+                asteps = (alloc_idx + (step0 + 1)).tolist()
+                slots = self.pool.alloc_batch(apages, asteps)
+                assert slots is not None
+                self.gpt.map_local_batch(pages[alloc_idx],
+                                         np.asarray(slots, np.int64))
+                w_alloc = iw[alloc_idx]
+                if w_alloc.all():
+                    self.pipeline.stage_batch(apages, slots)
+                else:
+                    wsel = np.flatnonzero(w_alloc)
+                    if wsel.size:
+                        self.pipeline.stage_batch([apages[k] for k in wsel],
+                                                  [slots[k] for k in wsel])
+                    mark = self.pool.mark_reclaimable
+                    push = self.pipeline.reclaimable.push
+                    for k in np.flatnonzero(~w_alloc):
+                        # filled slots are clean (a remote copy exists):
+                        # immediately reclaimable, no send needed
+                        mark(slots[k])
+                        push(WriteSet(-1, (apages[k],), (slots[k],)))
+                if self.data_plane is not None:
+                    for pg, s in zip(apages, slots):
+                        self.data_plane.local_write(pg, s)
+
+            st = self.stats
+            effm = eff[:m]
+            counts5 = np.bincount(effm, minlength=5)
+            st.writes += int(counts5[4])
+            st.ops += m
+            st.local_hits += int(counts5[0])
+            st.remote_hits += int(counts5[1])
+            st.host_hits += int(counts5[2])
+            st.cold_hits += int(counts5[3])
+            costs = lut[effm]
+            st.time_us = self._accumulate_time(st.time_us, costs)
+            out_lats[:m] = costs
+            self.step += m
+        if m < n:
+            # the op that would overrun pool/staging: the scalar reference
+            # path performs the reclaim / flush stall exactly as the scalar
+            # loop would, then a fresh prefix restarts after it
+            pg = int(pages[m])
+            out_lats[m] = self.write(pg) if iw[m] else self.read(pg)
+            return m + 1
+        return n
+
+    def _read_run_writethrough(self, pages: np.ndarray) -> np.ndarray:
+        """All-reads run for pool-less policies: reads never mutate state
+        (no pool to cache-fill), so one snapshot classification is exact for
+        the whole run, duplicates included."""
+        cls = self._snapshot_classes(pages)
+        st = self.stats
+        counts4 = np.bincount(cls, minlength=4)
+        st.local_hits += int(counts4[0])
+        st.remote_hits += int(counts4[1])
+        st.host_hits += int(counts4[2])
+        st.cold_hits += int(counts4[3])
+        lats = self._cost_lut()[cls]
+        st.time_us = self._accumulate_time(st.time_us, lats)
+        st.ops += pages.size
+        self.step += pages.size
+        return lats
+
     def _cache_fill(self, page: int):
         """Read miss fills the local mempool (it is a cache for remote data,
         §3.2/§3.3; LRU replacement via the reclaimable queue).  The filled
@@ -296,22 +572,45 @@ class TieredPageStore:
         return len(freed)
 
     def _flush(self, n: int, in_critical_path: bool = False) -> float:
-        """Remote Sender Thread: send staged write-sets to peers."""
+        """Remote Sender Thread: send staged write-sets to peers.
+
+        Page-table updates for the whole flush batch are buffered and
+        applied with one ``map_remote_batch`` scatter at the end (nothing
+        reads the table mid-flush, and last-writer-wins matches sequential
+        ``map_remote`` for pages flushed twice in one batch)."""
         cost = 0.0
+        mp: List[int] = []
+        mt: List[int] = []
+        mpe: List[int] = []
+        ms: List[int] = []
+        mreps: List[Tuple] = []
+        peer_tier = int(Tier.PEER)
+        host_tier = int(Tier.HOST)
 
         def send(ws):
             nonlocal cost
             for pg in ws.pages:
-                loc = self._place_remote(pg)
-                if loc is None:
+                placed = self._place_remote_raw(pg)
+                if placed is None:
                     self.host_pages[pg] = True
-                    self.gpt.map_remote(pg, Location(Tier.HOST))
+                    mp.append(pg)
+                    mt.append(host_tier)
+                    mpe.append(-1)
+                    ms.append(-1)
+                    mreps.append(())
                     cost += self.costs.host_write
                 else:
-                    self.gpt.map_remote(pg, loc)
+                    peer, slot, reps = placed
+                    mp.append(pg)
+                    mt.append(peer_tier)
+                    mpe.append(peer)
+                    ms.append(slot)
+                    mreps.append(reps)
                     cost += self.costs.remote_write
 
         self.pipeline.flush(n, send)
+        if mp:
+            self.gpt.map_remote_batch(mp, mt, mpe, ms, mreps)
         if in_critical_path:
             self.stats.write_stall_us += cost
             return cost

@@ -353,9 +353,12 @@ class ValetServeEngine:
 
     def _step_active(self, active: List[Request], greedy: bool):
         self.step_counter += 1
+        # one device->host transfer for every sequence length this step
+        # (instead of one blocking scalar read per request)
+        lengths = np.asarray(self.caches["lengths"])
         # grow pages where the next token crosses a page boundary
         for r in active:
-            pos = int(self.caches["lengths"][r.slot])
+            pos = int(lengths[r.slot])
             if pos % self.page == 0 and self._pages_for(pos + 1) > len(r.pages):
                 if self._alloc_page(r) is None:
                     self._preempt(r)
@@ -368,18 +371,34 @@ class ValetServeEngine:
         app_off = np.zeros((self.max_batch,), np.int32)
         toks = np.zeros((self.max_batch,), np.int64)
         act = np.zeros((self.max_batch,), bool)
+        # one batched KV-page table resolution for the whole decode step:
+        # every active request's pages through a single vectorized gather
+        flat_pages = np.concatenate(
+            [np.asarray(r.pages[: self.max_pages], np.int64)
+             for r in active]) if active else np.empty(0, np.int64)
+        flat_slots = self.gpt.local_slots_batch(flat_pages)
+        step_pages = []
+        off = 0
         for r in active:
             b = r.slot
-            bt[b] = self._block_table_row(r)
-            pos = int(self.caches["lengths"][b])
-            pg = r.pages[pos // self.page]
-            app_slot[b] = self.gpt.local_slot(pg)
+            npg = min(len(r.pages), self.max_pages)
+            bt[b, :npg] = flat_slots[off:off + npg]
+            pos = int(lengths[b])
+            pidx = pos // self.page
+            pg = r.pages[pidx]
+            # pidx can pass max_pages when a sequence outgrows the block
+            # table (nothing caps submit length); resolve those the scalar
+            # way instead of reading past this request's gather window
+            app_slot[b] = flat_slots[off + pidx] if pidx < npg \
+                else self.gpt.local_slot(pg)
             app_off[b] = pos % self.page
             toks[b] = (r.tokens_out[-1] if r.tokens_out
                        else r.prompt[-1])
             act[b] = True
-            self.tracker.on_write([pg], self.step_counter)
+            step_pages.append(pg)
             r.last_active_step = self.step_counter
+            off += npg
+        self.tracker.on_write(step_pages, self.step_counter)
 
         logits, self.caches = self._decode_jit(
             self.params, self.caches, jnp.asarray(toks), jnp.asarray(bt),

@@ -1,0 +1,293 @@
+"""Batched vs scalar orchestration parity (the access_batch contract).
+
+``TieredPageStore.access_batch`` must be indistinguishable from the scalar
+``write()``/``read()`` loop: identical ``Stats`` (counts AND bitwise-equal
+accumulated microseconds), identical per-op latencies, identical pool/table
+state — across policies, pool pressure, peer pressure, and peer failure.
+
+These are property-style tests over randomized traces; randomness comes
+from seeded numpy generators so the suite needs no extra dependencies.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (TieredPageStore, POLICIES, PAPER_COSTS, WriteSet)
+from repro.core.page_table import GlobalPageTable, Location, Tier
+from repro.core.pool import SlotState, ValetMempool
+from repro.core.queues import WritePipeline
+from repro.data.pipeline import TraceConfig, generate_trace
+
+ALL_POLICIES = ("valet", "valet-mass", "infiniswap", "nbdx", "os-swap")
+
+
+def make_store(policy, pool=128, *, dynamic=False, n_peers=4, blocks=64,
+               seed=0):
+    return TieredPageStore(
+        POLICIES[policy], PAPER_COSTS, pool_capacity=pool,
+        min_pool=max(pool // 8, 8) if dynamic else pool, max_pool=pool,
+        n_peers=n_peers, peer_capacity_blocks=blocks, pages_per_block=16,
+        seed=seed)
+
+
+def random_trace(rng, n_pages, n_ops, write_frac=0.3):
+    pages = np.clip(rng.zipf(1.3, n_ops), 1, n_pages) - 1
+    is_write = rng.random(n_ops) < write_frac
+    return pages.astype(np.int64), is_write
+
+
+def drive_scalar(store, pages, is_write, tick_every=32, events=None):
+    lats = []
+    for i in range(len(pages)):
+        if is_write[i]:
+            lats.append(store.write(int(pages[i])))
+        else:
+            lats.append(store.read(int(pages[i])))
+        if i % tick_every == 0:
+            store.background_tick()
+        if events and i in events:
+            events[i](store)
+    return np.asarray(lats)
+
+
+def drive_batched(store, pages, is_write, tick_every=32, batch=256,
+                  events=None):
+    """Chunks end exactly at the scalar driver's tick/event boundaries."""
+    n = len(pages)
+    lats = np.empty(n, np.float64)
+    ev = sorted(events) if events else []
+    i = 0
+    while i < n:
+        nxt_tick = i if i % tick_every == 0 \
+            else (i // tick_every + 1) * tick_every
+        nxt_ev = min([e for e in ev if e >= i], default=n)
+        end = min(n, i + batch, nxt_tick + 1, nxt_ev + 1)
+        lats[i:end] = store.access_batch(pages[i:end], is_write[i:end])
+        if (end - 1) % tick_every == 0:
+            store.background_tick()
+        if events and (end - 1) in events:
+            events[end - 1](store)
+        i = end
+    return lats
+
+
+def assert_parity(a, b, la, lb):
+    assert a.stats == b.stats, f"\nscalar : {a.stats}\nbatched: {b.stats}"
+    assert np.array_equal(la, lb), "per-op latencies diverged"
+    assert a.step == b.step
+    assert len(a.gpt) == len(b.gpt)
+    assert a.pool.free_count() == b.pool.free_count()
+    assert a.pool.n_alloc_from_pool == b.pool.n_alloc_from_pool
+    assert a.pool.n_reclaimed == b.pool.n_reclaimed
+    assert len(a.pipeline.staging) == len(b.pipeline.staging)
+    a.pipeline.check_invariants()
+    b.pipeline.check_invariants()
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("pool", [32, 256])
+def test_random_trace_parity(policy, pool):
+    rng = np.random.default_rng(pool)
+    for seed in range(3):
+        pages, is_write = random_trace(np.random.default_rng(seed), 400, 3000)
+        a = make_store(policy, pool, seed=seed)
+        b = make_store(policy, pool, seed=seed)
+        la = drive_scalar(a, pages, is_write)
+        lb = drive_batched(b, pages, is_write,
+                           batch=int(rng.integers(16, 300)))
+        assert_parity(a, b, la, lb)
+
+
+def test_parity_under_dynamic_pool():
+    pages, is_write = random_trace(np.random.default_rng(7), 500, 4000)
+    a = make_store("valet", 256, dynamic=True)
+    b = make_store("valet", 256, dynamic=True)
+    assert_parity(a, b, drive_scalar(a, pages, is_write),
+                  drive_batched(b, pages, is_write))
+
+
+def test_parity_under_eviction_pressure_and_peer_failure():
+    """Peer pressure (migrate/delete), hard peer failure, and local pool
+    pressure fired at identical op indices in both drivers."""
+    for policy in ("valet", "infiniswap"):
+        pages, is_write = random_trace(np.random.default_rng(3), 600, 5000,
+                                       write_frac=0.4)
+        events = {
+            1000: lambda s: s.peer_pressure(0, 4),
+            2500: lambda s: s.fail_peer(1),
+            4000: lambda s: s.local_pressure(64),
+        }
+        a = make_store(policy, 64, seed=1)
+        b = make_store(policy, 64, seed=1)
+        la = drive_scalar(a, pages, is_write, events=events)
+        lb = drive_batched(b, pages, is_write, events=events)
+        assert_parity(a, b, la, lb)
+
+
+def test_parity_intra_batch_dependencies():
+    """Write->read, duplicate reads, and read-then-write of the same page
+    inside one batch must match the scalar order of operations."""
+    a = make_store("valet", 64)
+    b = make_store("valet", 64)
+    pages = np.array([5, 5, 5, 9, 5, 9, 9, 5, 2, 2, 2, 9], np.int64)
+    is_write = np.array([1, 0, 0, 1, 0, 0, 1, 1, 0, 1, 0, 0], bool)
+    la = np.array([a.write(int(p)) if w else a.read(int(p))
+                   for p, w in zip(pages, is_write)])
+    lb = b.access_batch(pages, is_write)
+    assert_parity(a, b, la, lb)
+
+
+def test_parity_duplicate_reads_after_remote_spill():
+    """First read of a spilled page cache-fills; later duplicates hit
+    local — in one batch, exactly as the scalar loop."""
+    a = make_store("valet", 32)
+    b = make_store("valet", 32)
+    for s in (a, b):
+        for p in range(200):                 # overflow the pool: spills
+            s.write(p)
+        s.drain()
+    pages = np.array([0, 0, 1, 0, 1, 2, 2, 0], np.int64)
+    la = np.array([a.read(int(p)) for p in pages])
+    lb = b.access_batch(pages, False)
+    assert_parity(a, b, la, lb)
+
+
+def test_access_batch_scalar_is_write_broadcasts():
+    a = make_store("valet", 64)
+    b = make_store("valet", 64)
+    pages = np.arange(40, dtype=np.int64)
+    la = np.array([a.write(int(p)) for p in pages])
+    lb = b.access_batch(pages, True)
+    assert_parity(a, b, la, lb)
+    la2 = np.array([a.read(int(p)) for p in pages])
+    lb2 = b.access_batch(pages, False)
+    assert_parity(a, b, la2, lb2)
+
+
+# -- building blocks ---------------------------------------------------------
+
+def test_alloc_batch_matches_sequential_allocs():
+    for free_mem in (1 << 20, 100):
+        p1 = ValetMempool(256, min_pages=32, max_pages=256,
+                          free_memory_fn=lambda: free_mem)
+        p2 = ValetMempool(256, min_pages=32, max_pages=256,
+                          free_memory_fn=lambda: free_mem)
+        seq = [p1.alloc(pg, step=pg) for pg in range(30)]
+        bat = p2.alloc_batch(list(range(30)), steps=range(30))
+        assert seq == bat
+        assert p1.size == p2.size and p1.n_grow == p2.n_grow
+        assert p1.used() == p2.used()
+        assert p1.free_count() == p2.free_count()
+        p1.check_invariants()
+        p2.check_invariants()
+
+
+def test_alloc_batch_refuses_overcommit():
+    pool = ValetMempool(16, min_pages=16, max_pages=16)
+    before = pool.free_count()
+    assert pool.alloc_batch(list(range(17)), steps=range(17)) is None
+    assert pool.free_count() == before       # no partial effects
+
+
+def test_used_counter_stays_exact_through_resizes():
+    pool = ValetMempool(64, min_pages=8, max_pages=64,
+                        free_memory_fn=lambda: 64)
+    slots = [pool.alloc(p, 0) for p in range(6)]
+    pool.maybe_grow()
+    pool.check_invariants()
+    for s in slots[:3]:
+        pool.release(s)
+    pool.shrink_for_pressure()
+    pool.check_invariants()
+    assert pool.used() == 3
+
+
+def test_stage_batch_sets_update_flags_on_duplicates():
+    pool = ValetMempool(64, min_pages=64, max_pages=64)
+    wp = WritePipeline(pool, queue_len=128)
+    slots = pool.alloc_batch([1, 2, 1], steps=range(3))
+    wss = wp.stage_batch([1, 2, 1], slots)
+    assert [ws.seq for ws in wss] == [0, 1, 2]
+    assert pool.slots[slots[0]].update_flag      # superseded by the 3rd
+    assert not pool.slots[slots[2]].update_flag
+    wp.check_invariants()
+
+
+def test_flush_releases_superseded_slots():
+    """§5.2 both halves: the older slot survives until the newer write-set
+    is sent, then becomes reclaimable (no leak)."""
+    pool = ValetMempool(64, min_pages=64, max_pages=64)
+    wp = WritePipeline(pool, queue_len=128)
+    ws1 = wp.write((7,), step=1)
+    ws2 = wp.write((7,), step=2)
+    wp.flush(1, lambda ws: None)                 # sends ws1 only
+    assert pool.slots[ws1.slots[0]].state == SlotState.IN_USE   # deferred
+    wp.flush(1, lambda ws: None)                 # sends ws2
+    assert pool.slots[ws1.slots[0]].state == SlotState.RECLAIMABLE
+    assert pool.slots[ws2.slots[0]].state == SlotState.RECLAIMABLE
+    freed = wp.reclaim(4)
+    assert sorted(s for s, _ in freed) == sorted(ws1.slots + ws2.slots)
+    wp.check_invariants()
+
+
+def test_page_table_batch_matches_scalar():
+    gpt = GlobalPageTable(initial_pages=4)       # force growth
+    gpt.map_local(3, 30)
+    gpt.map_remote(5, Location(Tier.PEER, peer=1, slot=11))
+    gpt.map_remote(9, Location(Tier.HOST))
+    gpt.map_local(9, 90)                         # local overrides remote
+    gpt.map_remote(700, Location(Tier.COLD))
+    pages = np.array([3, 5, 9, 700, 12345], np.int64)
+    tier, peer, slot = gpt.lookup_batch(pages)
+    for i, pg in enumerate(pages):
+        loc = gpt.lookup(int(pg))
+        assert tier[i] == int(loc.tier)
+        if loc.tier == Tier.PEER:
+            assert peer[i] == loc.peer
+        assert slot[i] == loc.slot
+    assert np.array_equal(gpt.local_slots_batch(pages),
+                          [30, -1, 90, -1, -1])
+    gpt.unmap_local_batch(np.array([3, 9]))
+    assert gpt.local_slot(3) is None and gpt.local_slot(9) is None
+    assert len(gpt) == 3                         # 5, 9(host), 700
+
+
+def test_map_remote_batch_last_writer_wins():
+    g1, g2 = GlobalPageTable(), GlobalPageTable()
+    updates = [(4, Tier.PEER, 0, 1, ((2, 5),)),
+               (4, Tier.PEER, 3, 7, ()),
+               (6, Tier.HOST, -1, -1, ())]
+    for pg, t, pe, sl, reps in updates:
+        g1.map_remote(pg, Location(t, peer=pe, slot=sl, replicas=reps))
+    g2.map_remote_batch([u[0] for u in updates],
+                        [int(u[1]) for u in updates],
+                        [u[2] for u in updates],
+                        [u[3] for u in updates],
+                        [u[4] for u in updates])
+    for pg in (4, 6):
+        assert g1.remote_location(pg) == g2.remote_location(pg)
+    assert g2.remote_location(4).peer == 3
+    assert g2.remote_location(4).replicas == ()
+
+
+def test_benchmark_drive_helpers_match_scalar_reference():
+    """The batched benchmark driver reproduces the old per-op loop bit for
+    bit (same tick cadence)."""
+    from benchmarks.paper_tables import _drive, _populate
+    trace = list(generate_trace(TraceConfig(300, 2000, 0.75, seed=11)))
+    a = make_store("valet", 64)
+    b = make_store("valet", 64)
+    for p in range(300):
+        a.write(p)
+        if p % 32 == 0:
+            a.background_tick()
+    _populate(b, 300)
+    assert a.stats == b.stats
+    la = []
+    for i, (op, page) in enumerate(trace):
+        la.append(a.write(page) if op == "write" else a.read(page))
+        if i % 32 == 0:
+            a.background_tick()
+    a.background_tick()
+    lb = _drive(b, trace)
+    assert a.stats == b.stats
+    assert np.array_equal(np.asarray(la), lb)

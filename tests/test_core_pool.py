@@ -1,5 +1,8 @@
 """ValetMempool unit + property tests (paper §3.4, §4.1, Table 2)."""
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis is a soft dependency (requirements.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pool import ValetMempool, SlotState

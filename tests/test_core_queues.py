@@ -1,4 +1,8 @@
 """Staging/Reclaimable queue + §5.2 consistency property tests."""
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis is a soft dependency (requirements.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pool import ValetMempool, SlotState

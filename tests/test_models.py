@@ -2,6 +2,9 @@
 hypothesis properties)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis is a soft dependency (requirements.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax
