@@ -1,0 +1,112 @@
+"""CI perf-regression gate for the tracked speedup benchmarks.
+
+Compares the freshly produced ``bench_results.json`` against the committed
+``bench_baseline.json`` and exits non-zero when a tracked metric regresses
+more than ``--tolerance`` (default 20%).  The tracked metrics are wall-clock
+*ratios* (scalar / batched on the same machine), so they transfer across
+runner hardware far better than absolute microseconds.
+
+Usage:
+    python -m benchmarks.check_regression              # gate (CI)
+    python -m benchmarks.check_regression --refresh    # rewrite the baseline
+                                                       # from current results
+
+Refreshing the baseline is the intended workflow after a change that
+legitimately shifts a tracked metric — run the smoke benchmarks locally,
+eyeball the numbers, then commit the refreshed file (see ROADMAP.md, CI
+section).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+
+# (benchmark key in bench_results.json, metric key) — all tracked metrics
+# are higher-is-better speedup ratios; current < baseline*(1-tol) fails
+TRACKED = [
+    ("batch_speedup", "speedup"),
+    ("reclaim_speedup", "speedup"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=os.path.join(ART,
+                                                      "bench_results.json"))
+    ap.add_argument("--baseline", default=os.path.join(ART,
+                                                       "bench_baseline.json"))
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional regression (0.2 = 20%%)")
+    ap.add_argument("--refresh", action="store_true",
+                    help="write the baseline from current results and exit")
+    args = ap.parse_args()
+
+    with open(args.results) as f:
+        results = json.load(f)
+
+    if args.refresh:
+        baseline = {}
+        for bench, metric in TRACKED:
+            if bench not in results:
+                print(f"refresh: {bench} missing from results "
+                      f"(run `python -m benchmarks.run --only "
+                      f"{','.join(b for b, _ in TRACKED)}` first)")
+                return 2
+            baseline.setdefault(bench, {})[metric] = results[bench][metric]
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2)
+            f.write("\n")
+        print(f"baseline refreshed -> {args.baseline}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    lines = ["| benchmark | metric | baseline | current | floor | status |",
+             "|---|---|---|---|---|---|"]
+    failed = False
+    for bench, metric in TRACKED:
+        base = baseline.get(bench, {}).get(metric)
+        if base is None:
+            print(f"warning: {bench}/{metric} not in baseline — skipped")
+            continue
+        if bench not in results or metric not in results[bench]:
+            print(f"FAIL: {bench}/{metric} missing from results "
+                  f"(benchmark did not run?)")
+            failed = True
+            lines.append(f"| {bench} | {metric} | {base:.2f} | MISSING | "
+                         f"- | ❌ |")
+            continue
+        cur = float(results[bench][metric])
+        floor = base * (1.0 - args.tolerance)
+        ok = cur >= floor
+        status = "✅" if ok else "❌"
+        lines.append(f"| {bench} | {metric} | {base:.2f} | {cur:.2f} | "
+                     f"{floor:.2f} | {status} |")
+        print(f"{bench}/{metric}: current={cur:.2f} baseline={base:.2f} "
+              f"floor={floor:.2f} -> {'OK' if ok else 'REGRESSION'}")
+        if not ok:
+            failed = True
+
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("## Benchmark regression gate\n\n")
+            f.write("\n".join(lines) + "\n")
+
+    if failed:
+        print(f"benchmark regression gate FAILED "
+              f"(tolerance {args.tolerance:.0%}); if the shift is expected, "
+              f"refresh the baseline: python -m benchmarks.check_regression "
+              f"--refresh")
+        return 1
+    print("benchmark regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

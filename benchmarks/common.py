@@ -17,9 +17,20 @@ def emit(rows, name, us_per_call, **derived):
 
 
 def save_json(name, obj):
+    """Merge-update the artifact JSON: a partial run (``--only fig23``)
+    refreshes only the benchmarks it ran instead of clobbering the rest
+    (the regression gate reads tracked entries from this file)."""
     path = os.path.join(ART, f"{name}.json")
+    merged = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            merged = {}
+    merged.update(obj)
     with open(path, "w") as f:
-        json.dump(obj, f, indent=2, default=float)
+        json.dump(merged, f, indent=2, default=float)
     return path
 
 

@@ -6,8 +6,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import ART
-from benchmarks import roofline_table as RT
+from benchmarks.common import ART  # noqa: E402
+from benchmarks import roofline_table as RT  # noqa: E402
 
 
 def main():
@@ -22,7 +22,6 @@ def main():
     if os.path.isdir(base):
         out.append("")
         out.append("## Baseline (paper-faithful first compile, archived)")
-        orig = RT.load_cells.__defaults__
         import benchmarks.roofline_table as rt
         import glob, json
 

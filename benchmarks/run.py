@@ -12,7 +12,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: table1,fig8,fig9,fig10,fig19,fig22,"
-                         "fig23,batch_speedup,roofline")
+                         "fig23,batch_speedup,reclaim_speedup,roofline")
     args = ap.parse_args()
     only = None if args.only == "all" else set(args.only.split(","))
 
@@ -29,6 +29,7 @@ def main() -> None:
         ("fig22", PT.fig22_scalability),
         ("fig23", PT.fig23_eviction),
         ("batch_speedup", PT.batch_speedup),
+        ("reclaim_speedup", PT.reclaim_speedup),
         ("victim", PT.victim_quality),
         ("roofline", RT.run),
     ]

@@ -6,7 +6,6 @@ corruption, elastic-recovery planning, and peer-failure page recovery.
 import os
 import tempfile
 
-import numpy as np
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ produce identical tokens; they differ in what memory pressure costs.
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, reduced
 from repro.core.policies import POLICIES

@@ -7,7 +7,7 @@ they are hashable (usable as jit static args) and serializable.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

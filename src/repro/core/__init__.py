@@ -5,7 +5,7 @@ from repro.core.queues import WritePipeline, StagingQueue, ReclaimableQueue, Wri
 from repro.core.page_table import GlobalPageTable, Location, Tier
 from repro.core.activity import (ActivityTracker, select_victims_nad,
                                  select_victims_mass, select_victims_random,
-                                 power_of_two_choices)
+                                 select_victims_topk, power_of_two_choices)
 from repro.core.migration import MigrationEngine, Migration, Phase
 from repro.core.replication import ReplicaPlacer, FaultConfig, fail_peer
 from repro.core.policies import (Policy, CostModel, POLICIES, VALET,

@@ -11,7 +11,6 @@ the oracle + CPU path.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax

@@ -24,7 +24,7 @@ from typing import Callable, List, Optional, Sequence
 import numpy as np
 
 from repro.core.activity import ActivityTracker, power_of_two_choices, \
-    select_victims_nad
+    select_victims_nad, select_victims_topk
 from repro.core.page_table import GlobalPageTable, Location, Tier
 
 
@@ -88,9 +88,19 @@ class MigrationEngine:
 
     def handle_pressure(self, src_peer: int, blocks_to_free: int,
                         block_pages: Callable[[int], List[int]],
-                        candidate_blocks: Sequence[int], step: int
-                        ) -> List[Migration]:
-        """Select least-active victims on ``src_peer`` and migrate them."""
+                        candidate_blocks: Sequence[int], step: int,
+                        batched: bool = False) -> List[Migration]:
+        """Select least-active victims on ``src_peer`` and migrate them.
+
+        ``batched=True`` takes the vectorized path: one dense top-k over the
+        ``ActivityTracker`` arrays picks all victims in one shot and
+        ``migrate_batch`` repoints every affected page with a single
+        ``GlobalPageTable`` scatter.  The result (page table, peer state,
+        counters, victim order) is identical to the scalar loop."""
+        if batched:
+            victims = select_victims_topk(self.tracker, candidate_blocks,
+                                          blocks_to_free, step)
+            return self.migrate_batch(src_peer, victims, block_pages)
         victims = select_victims_nad(self.tracker, candidate_blocks,
                                      blocks_to_free, step)
         out = []
@@ -98,6 +108,23 @@ class MigrationEngine:
             mig = self.migrate_block(src_peer, blk, block_pages(blk))
             out.append(mig)
         return out
+
+    # -- destination selection --------------------------------------------------
+
+    def _choose_destination(self, src_peer: int,
+                            free: Sequence[int]) -> Optional[int]:
+        """p2c over free counts; if both sampled peers are pressured, fall
+        back to a full scan (freest peer wins, lowest id breaks ties) before
+        giving up — repeated pressure no longer aborts into eviction while a
+        free peer exists."""
+        dst = power_of_two_choices(free, self.rng, exclude=[src_peer])
+        if dst is not None and free[dst] > 0:
+            return dst
+        best, best_free = None, 0
+        for i, f in enumerate(free):
+            if i != src_peer and f > best_free:
+                best, best_free = i, f
+        return best
 
     # -- one block migration ---------------------------------------------------
 
@@ -108,8 +135,8 @@ class MigrationEngine:
 
         # 2. destination: power-of-two-choices over free counts, != source
         free = list(self.free_counts_fn())
-        dst = power_of_two_choices(free, self.rng, exclude=[src_peer])
-        if dst is None or free[dst] <= 0:
+        dst = self._choose_destination(src_peer, free)
+        if dst is None:
             mig.phase = Phase.ABORTED
             mig.log.append(Message("sender", "sender", "NO_DESTINATION"))
             self.aborted.append(mig)
@@ -157,3 +184,78 @@ class MigrationEngine:
         self.n_migrated_blocks += 1
         self.n_migrated_pages += len(mig.pages)
         return mig
+
+    # -- batched migration (vectorized reclaim pipeline) ------------------------
+
+    def migrate_batch(self, src_peer: int, blocks: Sequence[int],
+                      block_pages: Callable[[int], List[int]]
+                      ) -> List[Migration]:
+        """Migrate several victim blocks with ONE page-table scatter.
+
+        Per victim, the control decisions stay sequential and identical to
+        ``migrate_block`` — destination choice consumes the same rng stream
+        against the same free counts (each victim's alloc/free lands before
+        the next victim's p2c draw) — but the per-page work is hoisted out:
+        writes are parked/unparked with two staging-queue scans instead of
+        two per block, and every affected page is repointed by a single
+        ``map_remote_batch`` scatter (victim order preserved, so duplicate
+        pages keep last-writer-wins parity with the scalar loop).  The
+        Figure-14 protocol message log is elided on this path (the scalar
+        reference keeps it); abort reasons are still logged."""
+        infos = [(blk, list(block_pages(blk))) for blk in blocks]
+        all_pages = [pg for _, pgs in infos for pg in pgs]
+        # 3. park once for the whole batch; reads keep hitting the sources
+        self.park_fn(all_pages, True)
+
+        migs: List[Migration] = []
+        done: List[Migration] = []
+        # free counts tracked incrementally: each dst alloc is -1, each src
+        # free is +1 — exactly the transitions ``free_counts_fn`` would
+        # report between victims (the src entry may drift for a failed src,
+        # but the source is never a destination candidate)
+        free = list(self.free_counts_fn())
+        for blk, pages in infos:
+            mig = Migration(block=blk, pages=pages, src_peer=src_peer,
+                            dst_peer=-1)
+            migs.append(mig)
+            dst = self._choose_destination(src_peer, free)
+            if dst is None:
+                mig.phase = Phase.ABORTED
+                mig.log.append(Message("sender", "sender", "NO_DESTINATION"))
+                self.aborted.append(mig)
+                continue
+            mig.dst_peer = dst
+            slot = self.alloc_fn(dst)
+            if slot is None:
+                mig.phase = Phase.ABORTED
+                mig.log.append(Message(f"peer{dst}", "sender", "ALLOC_FAIL"))
+                self.aborted.append(mig)
+                continue
+            mig.dst_slot = slot
+            free[dst] -= 1
+            # 4. data-plane copy; source freed before the next victim's p2c
+            # so destination choices see the same free counts as the scalar
+            # loop (which completes each migration before starting the next)
+            mig.phase = Phase.COPYING
+            self.copy_fn(src_peer, blk, dst, slot)
+            self.free_fn(src_peer, blk)
+            free[src_peer] += 1
+            done.append(mig)
+
+        # 5. cutover: ONE scatter repoints every migrated page (replicas are
+        # preserved, fetched in bulk), then unpark with one scan
+        if done:
+            mv_pages = [pg for mig in done for pg in mig.pages]
+            mv_peers = [mig.dst_peer for mig in done for _ in mig.pages]
+            mv_slots = [mig.dst_slot for mig in done for _ in mig.pages]
+            reps = self.gpt.replicas_batch(mv_pages)
+            self.gpt.map_remote_batch(
+                mv_pages, [int(Tier.PEER)] * len(mv_pages), mv_peers,
+                mv_slots, reps)
+        self.park_fn(all_pages, False)
+        for mig in done:
+            mig.phase = Phase.DONE
+            self.completed.append(mig)
+            self.n_migrated_blocks += 1
+            self.n_migrated_pages += len(mig.pages)
+        return migs

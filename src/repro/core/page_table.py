@@ -20,7 +20,7 @@ COLD (recompute / disk analogue).
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -189,6 +189,29 @@ class GlobalPageTable:
             self._ensure(int(pages.max()))
         return self._l_slot[pages], self._r_tier[pages], self._r_peer[pages]
 
+    def remote_raw_batch(self, pages: np.ndarray
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                    np.ndarray]:
+        """Vectorized ``remote_location`` essentials: ``(tier, peer, slot,
+        mapped)`` arrays — ``mapped`` False where no remote entry exists."""
+        pages = np.asarray(pages, np.int64)
+        if pages.size:
+            self._ensure(int(pages.max()))
+        return (self._r_tier[pages], self._r_peer[pages],
+                self._r_slot[pages], self._r_mapped[pages])
+
+    def replicas_batch(self, pages) -> List[Tuple[Tuple[int, int], ...]]:
+        """Replica tuples per page (``()`` where none) — bulk counterpart of
+        reading ``remote_location(pg).replicas``."""
+        rd = self._replicas
+        if not rd:
+            return [()] * len(pages)
+        return [rd.get(int(pg), ()) for pg in pages]
+
+    def has_replicas(self) -> bool:
+        """True if any page currently carries replica copies."""
+        return bool(self._replicas)
+
     def map_remote_batch(self, pages, tiers, peers, slots, replicas=None):
         """Bulk ``map_remote``: arrays of tier/peer/slot per page, plus an
         optional parallel sequence of replica tuples.  Duplicate pages keep
@@ -208,7 +231,7 @@ class GlobalPageTable:
         else:
             for pg, reps in zip(parr.tolist(), replicas):
                 if reps:
-                    rd[pg] = tuple(reps)
+                    rd[pg] = reps if type(reps) is tuple else tuple(reps)
                 elif rd:
                     rd.pop(pg, None)
 
@@ -230,6 +253,21 @@ class GlobalPageTable:
         if pages.size:
             self._ensure(int(pages.max()))
         self._l_slot[pages] = -1
+
+    def drop_remote_batch(self, pages):
+        """Bulk ``drop_remote``: clear remote entries for a page array."""
+        parr = np.asarray(pages, np.int64)
+        if not parr.size:
+            return
+        self._ensure(int(parr.max()))
+        self._r_mapped[parr] = False
+        self._r_tier[parr] = 0
+        self._r_peer[parr] = -1
+        self._r_slot[parr] = -1
+        if self._replicas:
+            rd = self._replicas
+            for pg in parr.tolist():
+                rd.pop(pg, None)
 
     # -- dense device-facing view ---------------------------------------------
 

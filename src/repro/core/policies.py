@@ -12,8 +12,7 @@ for a 64KiB page — the hardware-adaptation step documented in DESIGN.md §2.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -21,7 +21,7 @@ Paper-faithful rules (Table 2 + §4.1):
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, List, Optional, Set
 
 
@@ -250,6 +250,26 @@ class ValetMempool:
         if slot < self.size:
             self._used -= 1
         self._free.append(slot)
+
+    def release_batch(self, slots):
+        """Bulk ``release``: same per-slot transitions with the attribute
+        lookups hoisted (spill/free paths release whole page runs)."""
+        meta = self.slots
+        free = self._free
+        size = self.size
+        used = self._used
+        for slot in slots:
+            slot = int(slot)
+            m = meta[slot]
+            assert m.state == SlotState.IN_USE, m.state
+            m.state = SlotState.FREE
+            m.logical_page = -1
+            m.update_flag = False
+            m.reclaim_flag = False
+            if slot < size:
+                used -= 1
+            free.append(slot)
+        self._used = used
 
     def free_count(self) -> int:
         return len(self._free)

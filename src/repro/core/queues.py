@@ -15,10 +15,10 @@ skip; both orderings (distance larger/smaller than queue size) are safe.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Tuple
 
-from repro.core.pool import ValetMempool
+from repro.core.pool import SlotState, ValetMempool
 
 
 @dataclass(slots=True)
@@ -107,9 +107,41 @@ class ReclaimableQueue:
             ws = self._q.popleft()
             for slot, pg in zip(ws.slots, ws.pages):
                 m = pool.slots[slot]
-                if m.state.name == "RECLAIMABLE" and m.logical_page == pg:
+                if m.state is SlotState.RECLAIMABLE and m.logical_page == pg:
                     pool.reclaim(slot)
                     freed.append((slot, pg))
+        return freed
+
+    def reclaim_bulk(self, n_slots: int, pool: ValetMempool
+                     ) -> List[Tuple[int, int]]:
+        """``reclaim_up_to`` with the per-slot pool transition inlined —
+        identical state changes and counters, none of the per-slot method
+        dispatch (reclaim runs in pool-sized bursts on the batched path)."""
+        q = self._q
+        meta = pool.slots
+        free_list = pool._free
+        size = pool.size
+        used = pool._used
+        n_rec = pool.n_reclaimed
+        reclaimable = SlotState.RECLAIMABLE
+        free_state = SlotState.FREE
+        freed: List[Tuple[int, int]] = []
+        while q and len(freed) < n_slots:
+            ws = q.popleft()
+            for slot, pg in zip(ws.slots, ws.pages):
+                m = meta[slot]
+                if m.state is reclaimable and m.logical_page == pg:
+                    m.state = free_state
+                    m.logical_page = -1
+                    m.update_flag = False
+                    m.reclaim_flag = False
+                    if slot < size:
+                        used -= 1
+                    free_list.append(slot)
+                    n_rec += 1
+                    freed.append((slot, pg))
+        pool._used = used
+        pool.n_reclaimed = n_rec
         return freed
 
 
@@ -214,8 +246,53 @@ class WritePipeline:
             self.reclaimable.push(ws)
         return batch
 
+    def take_flush_batch(self, n: int) -> List[WriteSet]:
+        """Dequeue up to ``n`` sendable write-sets (the batched flush's first
+        half; ``complete_flush`` is the second)."""
+        return self.staging.take_batch(n)
+
+    def complete_flush(self, batch: List[WriteSet]):
+        """Post-send bookkeeping for a taken flush batch, in bulk.
+
+        Identical state transitions to the per-write-set tail of ``flush``
+        (pending-slot retirement, §5.2 deferred-release handling, the
+        reclaimable pushes) with the method-call and attribute overhead
+        hoisted out of the loop.  The caller performs the "send" (placement)
+        itself — placement touches peers/blocks/page-table only, this loop
+        touches pool/queues only, so running them back to back instead of
+        interleaved per write-set reaches the same state."""
+        pend = self._pending_slot
+        deferred = self._deferred
+        slots_meta = self.pool.slots
+        push = self.reclaimable.push
+        reclaimable = SlotState.RECLAIMABLE
+        for ws in batch:
+            for pg, slot in zip(ws.pages, ws.slots):
+                if pend.get(pg) == slot:
+                    del pend[pg]
+                d = deferred.pop(pg, None)
+                if d is not None:
+                    m = slots_meta[d]
+                    if m.update_flag:
+                        m.update_flag = False
+                    else:
+                        m.state = reclaimable
+                        m.reclaim_flag = True
+                        push(WriteSet(-1, (pg,), (d,)))
+                m = slots_meta[slot]
+                if m.update_flag:
+                    m.update_flag = False
+                    deferred[pg] = slot
+                else:
+                    m.state = reclaimable
+                    m.reclaim_flag = True
+            push(ws)
+
     def reclaim(self, n_slots: int) -> List[Tuple[int, int]]:
         return self.reclaimable.reclaim_up_to(n_slots, self.pool)
+
+    def reclaim_bulk(self, n_slots: int) -> List[Tuple[int, int]]:
+        return self.reclaimable.reclaim_bulk(n_slots, self.pool)
 
     # -- invariants ----------------------------------------------------------
 

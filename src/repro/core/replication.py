@@ -11,7 +11,7 @@ measurements); disk backup maps to our COLD tier.  The four Table-3 modes:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 

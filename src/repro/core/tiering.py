@@ -15,19 +15,18 @@ Policy knobs (``policies.py``) select between Valet and the baseline systems
 """
 from __future__ import annotations
 
-from collections import defaultdict
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.activity import (ActivityTracker, PairSampler,
-                                 select_victims_mass, select_victims_nad,
-                                 select_victims_random, power_of_two_choices)
+from repro.core.activity import (ActivityTracker,
+                                 PairSampler,
+                                 select_victims_random)
 from repro.core.migration import MigrationEngine
 from repro.core.page_table import GlobalPageTable, Location, Tier
 from repro.core.policies import CostModel, Policy
-from repro.core.pool import SlotState, ValetMempool
+from repro.core.pool import ValetMempool
 from repro.core.queues import WritePipeline, WriteSet
 from repro.core.replication import ReplicaPlacer, fail_peer
 
@@ -84,7 +83,8 @@ class TieredPageStore:
                  host_capacity: int = 1 << 30,
                  free_memory_fn: Optional[Callable[[], int]] = None,
                  seed: int = 0,
-                 data_plane=None):
+                 data_plane=None,
+                 batch_reclaim: bool = True):
         self.policy = policy
         self.costs = costs
         self.pages_per_block = pages_per_block
@@ -92,6 +92,9 @@ class TieredPageStore:
         self.stats = Stats()
         self.step = 0
         self.data_plane = data_plane
+        # vectorized off-critical-path pipeline (flush placement, victim
+        # selection/migration, delete eviction); False = scalar reference
+        self.batch_reclaim = batch_reclaim
 
         max_pool = max_pool or pool_capacity
         if not policy.dynamic_pool:
@@ -108,8 +111,16 @@ class TieredPageStore:
         self.block_replicas: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
         self._next_block_slot = [0] * n_peers
         self._open_block: Dict[int, Tuple[int, int]] = {}   # peer -> block key
-        self.tracker = ActivityTracker(n_peers * peer_capacity_blocks * 2)
-        self._pairs = PairSampler(n_peers, self.rng) if n_peers >= 2 else None
+        # sized to cover the block-id stride (peer << 20 | slot) upfront so
+        # the dense activity arrays never re-grow mid-run (calloc is lazy —
+        # untouched pages cost nothing)
+        self.tracker = ActivityTracker(max(n_peers, 1) << 20)
+        # the pair stream gets its own child generator so bulk pre-drawing
+        # (draw_batch) never shifts the replica-placement / migration draws
+        # that stay on self.rng — scalar and batched paths consume identical
+        # streams from both generators
+        self._pairs = PairSampler(n_peers, self.rng.spawn(1)[0]) \
+            if n_peers >= 2 else None
         self.placer = ReplicaPlacer(self.rng)
         self.host_pages: Dict[int, bool] = {}
         self.host_capacity = host_capacity
@@ -156,7 +167,7 @@ class TieredPageStore:
     def _copy_block(self, src_peer, src_slot, dst_peer, dst_slot):
         pages = self.blocks.get((src_peer, src_slot), [])
         self.blocks[(dst_peer, dst_slot)] = list(pages)
-        self.tracker.on_write([self._block_id(dst_peer, dst_slot)], self.step)
+        self.tracker.touch(self._block_id(dst_peer, dst_slot), self.step)
         # migration copy cost lands on peers, NOT the sender critical path
         if self.data_plane is not None:
             self.data_plane.copy_block(src_peer, src_slot, dst_peer, dst_slot)
@@ -207,7 +218,7 @@ class TieredPageStore:
                         reps.append((rp, rslot))
             self.block_replicas[blk] = reps
         self.blocks[blk].append(page)
-        self.tracker.last_activity[self._block_id(*blk)] = self.step
+        self.tracker.touch(self._block_id(*blk), self.step)
         reps = self.block_replicas.get(blk, ())
         for rp, rs in reps:
             self.blocks[(rp, rs)].append(page)
@@ -219,6 +230,184 @@ class TieredPageStore:
             return None
         peer, slot, reps = placed
         return Location(Tier.PEER, peer=peer, slot=slot, replicas=reps)
+
+    def _place_pages_bulk(self, pages, *, flush: bool):
+        """Bulk ``_place_remote_raw`` over a page sequence.
+
+        One ``PairSampler.draw_batch`` pre-draws every p2c pair, peer
+        capacity/usage and the open-block fill state are tracked in local
+        scalars, and activity tags are scattered once at the end — the
+        placement *decisions* (peer choice, block boundaries, replica
+        placement, spill fallbacks, rng consumption) are identical to
+        calling the scalar helper once per page.
+
+        ``flush=True`` (lazy-send path): failed placements spill to the HOST
+        tier (``host_pages`` updated) and each page costs host/remote write;
+        no critical-path time is charged here.  ``flush=False``
+        (write-through write run): failed placements fall to COLD, per-page
+        latency plus block connect/map costs accumulate into
+        ``stats.time_us`` in exactly the scalar interleaving, and the
+        activity tag carries the per-op step.
+
+        Returns ``(tiers, peers, slots, replicas, costs)`` parallel lists,
+        ready for one ``map_remote_batch`` scatter.
+        """
+        n = len(pages)
+        pol = self.policy
+        c = self.costs
+        peer_tier = int(Tier.PEER)
+        if flush:
+            spill_tier, spill_cost = int(Tier.HOST), c.host_write
+            hit_cost = c.remote_write
+        else:
+            spill_tier, spill_cost = int(Tier.COLD), c.cold_write
+            hit_cost = c.remote_write
+            if pol.receiver_side_cpu:
+                hit_cost = hit_cost + c.receiver_cpu
+        tiers = [spill_tier] * n
+        peers_out = [-1] * n
+        slots_out = [-1] * n
+        reps_out: List[Tuple] = [()] * n
+        costs = [spill_cost] * n
+
+        st = self.stats
+        peers = self.peers
+        if not pol.use_remote or not peers:
+            if flush:
+                hp = self.host_pages
+                for pg in pages:
+                    hp[pg] = True
+            else:
+                st.time_us = self._accumulate_time(
+                    st.time_us, np.full(n, spill_cost, np.float64))
+            return tiers, peers_out, slots_out, reps_out, costs
+
+        pairs = self._pairs
+        if pairs is not None:
+            pa, pb = pairs.draw_batch(n)
+            pa_l, pb_l = pa.tolist(), pb.tolist()
+        n_peers = len(peers)
+        cap = [p.capacity for p in peers]
+        used = [p.used for p in peers]
+        failed = [p.failed for p in peers]
+        connected = [p.connected for p in peers]
+        mapped = [p.mapped_blocks for p in peers]
+        next_slot = list(self._next_block_slot)
+        blocks = self.blocks
+        block_replicas = self.block_replicas
+        open_block = self._open_block
+        ppb = self.pages_per_block
+        repl = pol.replication
+        place_reps = self.placer.place
+        use_local_pool = pol.use_local_pool
+        step = self.step
+        hp = self.host_pages
+        connects = st.connects
+        maps = st.maps
+        t = st.time_us
+        touch: Dict[int, int] = {}          # block id -> last-writer step
+        # per-peer open-block cache: [slot, page_list, replicas, rep_lists]
+        open_cache: Dict[int, list] = {}
+
+        def load_open(peer):
+            blk = open_block.get(peer)
+            if blk is None:
+                return None
+            lst = blocks[blk]
+            reps = tuple(block_replicas.get(blk, ()))
+            entry = [blk[1], lst, reps, [blocks[r] for r in reps]]
+            open_cache[peer] = entry
+            return entry
+
+        def alloc_slot(peer):
+            nonlocal connects, maps, t
+            if failed[peer] or cap[peer] - used[peer] <= 0:
+                return None
+            slot = next_slot[peer]
+            next_slot[peer] = slot + 1
+            used[peer] += 1
+            mapped[peer] += 1
+            lst: List[int] = []
+            blocks[(peer, slot)] = lst
+            if not connected[peer]:
+                connected[peer] = True
+                connects += 1
+                if not use_local_pool:
+                    t += c.connect
+            maps += 1
+            if not use_local_pool:
+                t += c.map_block
+            return slot, lst
+
+        for i, pg in enumerate(pages):
+            if not flush:
+                step += 1                    # scalar write() bumps per op
+            if pairs is not None:
+                a = pa_l[i]
+                b = pb_l[i]
+                fa = 0 if failed[a] else cap[a] - used[a]
+                fb = 0 if failed[b] else cap[b] - used[b]
+                if fa >= fb:
+                    peer, best_free = a, fa
+                else:
+                    peer, best_free = b, fb
+            else:
+                peer = 0
+                best_free = 0 if failed[0] else cap[0] - used[0]
+            placed = False
+            if best_free > 0:
+                entry = open_cache.get(peer)
+                if entry is None:
+                    entry = load_open(peer)
+                if entry is None or len(entry[1]) >= ppb:
+                    res = alloc_slot(peer)
+                    if res is None:
+                        entry = None
+                    else:
+                        slot, lst = res
+                        open_block[peer] = (peer, slot)
+                        reps: List[Tuple[int, int]] = []
+                        rep_lists: List[list] = []
+                        if repl > 0:
+                            free_now = [0 if failed[j] else cap[j] - used[j]
+                                        for j in range(n_peers)]
+                            for rp in place_reps(peer, free_now, repl):
+                                r = alloc_slot(rp)
+                                if r is not None:
+                                    reps.append((rp, r[0]))
+                                    rep_lists.append(r[1])
+                        entry = [slot, lst, tuple(reps), rep_lists]
+                        block_replicas[(peer, slot)] = entry[2]
+                        open_cache[peer] = entry
+                if entry is not None:
+                    entry[1].append(pg)
+                    touch[peer * (1 << 20) + entry[0]] = step
+                    for rl in entry[3]:
+                        rl.append(pg)
+                    tiers[i] = peer_tier
+                    peers_out[i] = peer
+                    slots_out[i] = entry[0]
+                    reps_out[i] = entry[2]
+                    costs[i] = hit_cost
+                    placed = True
+            if not placed and flush:
+                hp[pg] = True
+            if not flush:
+                t += costs[i]
+
+        for j in range(n_peers):
+            p = peers[j]
+            p.used = used[j]
+            p.mapped_blocks = mapped[j]
+            p.connected = connected[j]
+        self._next_block_slot = next_slot
+        if touch:
+            self.tracker.on_write_at(list(touch.keys()), list(touch.values()))
+        st.connects = connects
+        st.maps = maps
+        if not flush:
+            st.time_us = t
+        return tiers, peers_out, slots_out, reps_out, costs
 
     # -- the two critical-path operations ---------------------------------------
 
@@ -311,10 +500,12 @@ class TieredPageStore:
         reference path (performing the reclaim / stall exactly as the scalar
         loop would) and a fresh prefix starts after it.
 
-        Write-through policies place every page via sequential
-        power-of-two-choices rng draws, so their writes keep the scalar
-        reference loop; their reads (which never mutate state — there is no
-        local pool to fill) are vectorized per homogeneous run.
+        Write-through policies run per homogeneous run: reads (which never
+        mutate state — there is no local pool to fill) are classified with
+        one snapshot gather, and writes go through the bulk placement engine
+        (``_place_pages_bulk``) with pre-drawn power-of-two-choices pairs and
+        one ``map_remote_batch`` scatter — unless ``batch_reclaim`` is off,
+        in which case writes keep the scalar reference loop.
         """
         pages = np.asarray(pages, np.int64)
         n = pages.size
@@ -333,8 +524,11 @@ class TieredPageStore:
             while j < n and iw[j] == w:
                 j += 1
             if w:
-                for k in range(i, j):
-                    lats[k] = self.write(int(pages[k]))
+                if self.batch_reclaim:
+                    lats[i:j] = self._write_run_writethrough(pages[i:j])
+                else:
+                    for k in range(i, j):
+                        lats[k] = self.write(int(pages[k]))
             else:
                 lats[i:j] = self._read_run_writethrough(pages[i:j])
             i = j
@@ -541,6 +735,22 @@ class TieredPageStore:
         self.step += pages.size
         return lats
 
+    def _write_run_writethrough(self, pages: np.ndarray) -> np.ndarray:
+        """All-writes run for pool-less policies: bulk placement (pre-drawn
+        p2c pairs) + one page-table scatter, with per-op latencies and
+        Stats bitwise identical to the scalar ``write`` loop."""
+        pages_l = pages.tolist()
+        tiers, peers_out, slots_out, reps_out, costs = \
+            self._place_pages_bulk(pages_l, flush=False)
+        self.gpt.map_remote_batch(pages_l, tiers, peers_out, slots_out,
+                                  reps_out)
+        n = pages.size
+        st = self.stats
+        st.writes += n
+        st.ops += n
+        self.step += n
+        return np.asarray(costs, np.float64)
+
     def _cache_fill(self, page: int):
         """Read miss fills the local mempool (it is a cache for remote data,
         §3.2/§3.3; LRU replacement via the reclaimable queue).  The filled
@@ -564,7 +774,23 @@ class TieredPageStore:
     # -- background machinery ----------------------------------------------------
 
     def _reclaim(self, n: int) -> int:
-        """Reclaim pool slots; drop local mappings that pointed at them."""
+        """Reclaim pool slots; drop local mappings that pointed at them.
+
+        Batched path: one inlined queue drain (``reclaim_bulk``) and one
+        gather/scatter drops every stale local mapping — a page freed twice
+        in one burst matches at most one of its slots, exactly like the
+        sequential check-then-unmap."""
+        if self.batch_reclaim:
+            freed = self.pipeline.reclaim_bulk(n)
+            if freed:
+                slots = np.fromiter((s for s, _ in freed), np.int64,
+                                    len(freed))
+                pages = np.fromiter((p for _, p in freed), np.int64,
+                                    len(freed))
+                live = pages[self.gpt.local_slots_batch(pages) == slots]
+                if live.size:
+                    self.gpt.unmap_local_batch(live)
+            return len(freed)
         freed = self.pipeline.reclaim(n)
         for slot, pg in freed:
             if self.gpt.local_slot(pg) == slot:
@@ -573,6 +799,39 @@ class TieredPageStore:
 
     def _flush(self, n: int, in_critical_path: bool = False) -> float:
         """Remote Sender Thread: send staged write-sets to peers.
+
+        Dispatches to the vectorized single-pass placement
+        (``_flush_batched``) unless ``batch_reclaim`` is off, in which case
+        the scalar per-write-set reference runs — both reach bitwise
+        identical state."""
+        if self.batch_reclaim:
+            return self._flush_batched(n, in_critical_path)
+        return self._flush_scalar(n, in_critical_path)
+
+    def _flush_batched(self, n: int, in_critical_path: bool = False) -> float:
+        """One bulk placement pass over the whole flush batch: pre-drawn p2c
+        pairs, grouped slot release / reclaimable-queue bookkeeping
+        (``complete_flush``), and a single ``map_remote_batch`` scatter —
+        no per-write-set Python loop."""
+        batch = self.pipeline.take_flush_batch(n)
+        if not batch:
+            return 0.0
+        pages = [pg for ws in batch for pg in ws.pages]
+        tiers, peers_out, slots_out, reps_out, costs = \
+            self._place_pages_bulk(pages, flush=True)
+        self.pipeline.complete_flush(batch)
+        if pages:
+            self.gpt.map_remote_batch(pages, tiers, peers_out, slots_out,
+                                      reps_out)
+        if in_critical_path:
+            cost = self._accumulate_time(0.0, np.asarray(costs, np.float64))
+            self.stats.write_stall_us += cost
+            return cost
+        return 0.0                      # lazy send: off the critical path
+
+    def _flush_scalar(self, n: int, in_critical_path: bool = False) -> float:
+        """Scalar flush reference (per-write-set loop; parity-tested against
+        ``_flush_batched``).
 
         Page-table updates for the whole flush batch are buffered and
         applied with one ``map_remote_batch`` scatter at the end (nothing
@@ -647,7 +906,8 @@ class TieredPageStore:
                 peer, blocks_to_free,
                 block_pages=lambda bid: list(
                     self.blocks.get(id_to_key[bid], [])),
-                candidate_blocks=cand_ids, step=self.step)
+                candidate_blocks=cand_ids, step=self.step,
+                batched=self.batch_reclaim)
             done = 0
             for mig in migs:
                 if mig.phase.name == "DONE":
@@ -662,6 +922,8 @@ class TieredPageStore:
             victims = select_victims_random(self.rng, cand_ids, blocks_to_free)
         else:
             victims = cand_ids[:blocks_to_free]
+        if self.batch_reclaim:
+            return self._evict_delete_batched(victims, id_to_key, peer)
         for bid in victims:
             key = id_to_key[bid]
             for pg in self.blocks.get(key, []):
@@ -673,6 +935,39 @@ class TieredPageStore:
                     else:
                         self.gpt.map_remote(pg, Location(tier))
             self._free_block(*key)
+            self._open_block.pop(peer, None)
+            self.stats.evictions += 1
+        return len(victims)
+
+    def _evict_delete_batched(self, victims, id_to_key, peer: int) -> int:
+        """Delete-style eviction in bulk: one gather classifies every victim
+        page, non-replicated pages drop to backup/cold with one
+        ``map_remote_batch`` scatter.  Replicated pages (rare on the
+        delete-policy baselines, which run replication=0) keep the scalar
+        per-occurrence walk — a promoted replica may land back on the
+        pressured peer and must be re-checked in order."""
+        tier = Tier.COLD if self.policy.cold_backup else Tier.NONE
+        pages: List[int] = []
+        for bid in victims:
+            pages.extend(self.blocks.get(id_to_key[bid], []))
+        if pages:
+            if self.gpt.has_replicas():
+                for pg in pages:
+                    if self.gpt.remote_location(pg) and \
+                            self.gpt.remote_location(pg).peer == peer:
+                        if not self.gpt.repoint_replica(pg):
+                            self.gpt.map_remote(pg, Location(tier))
+            else:
+                parr = np.asarray(pages, np.int64)
+                _t, r_peer, _s, mapped = self.gpt.remote_raw_batch(parr)
+                hit = parr[mapped & (r_peer == peer)]
+                if hit.size:
+                    # duplicates are idempotent here (same scatter value)
+                    m = hit.size
+                    self.gpt.map_remote_batch(hit, [int(tier)] * m,
+                                              [-1] * m, [-1] * m, None)
+        for bid in victims:
+            self._free_block(*id_to_key[bid])
             self._open_block.pop(peer, None)
             self.stats.evictions += 1
         return len(victims)

@@ -13,12 +13,10 @@ the TieredPageStore by the benchmarks.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, Tuple
 
 import numpy as np
 
-import jax
-import jax.numpy as jnp
 
 
 @dataclass(frozen=True)

@@ -6,7 +6,6 @@ math the framework executes on the jnp path.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.models.attention import (reference_attention, decode_partial,

@@ -12,15 +12,15 @@ Artifacts: benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json
 (incremental: existing artifacts are skipped unless --force).
 """
 
-import argparse
-import json
-import time
-import traceback
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
 
-import jax
+import jax  # noqa: E402
 
-from repro.configs import ARCHS, SHAPES, shape_applicable, get_arch, get_shape
-from repro.launch.mesh import make_production_mesh
+from repro.configs import ARCHS, SHAPES, shape_applicable, get_arch, get_shape  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
 
 
 def _artifact_dir():

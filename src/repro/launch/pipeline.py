@@ -20,8 +20,6 @@ Uniform dense archs only (stages need identical layer structure).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +29,6 @@ from repro import optim
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import transformer as T
 from repro.models.layers import rms_norm
-from repro.models.moe import _shard_map
 from repro.train import trainer
 
 
@@ -69,14 +66,12 @@ def make_pp_train_step(cfg: ArchConfig, shape: ShapeConfig, mesh,
                         remat=True, compute_dtype=jnp.bfloat16,
                         loss_chunk=256)
 
-    dp = mesh.shape["data"]
     b, s = shape.global_batch, shape.seq_len
     mb = b // n_micro
 
     def loss_tail(params, h, labels_mb):
         h = rms_norm(params["final_ln"], h, cfg.norm_eps)
         w = T.unembed_matrix(params, cfg).astype(h.dtype)
-        logits_ok = T.lm_loss  # reuse chunked machinery via a local closure
         # chunked NLL (dense path to keep the pod-manual region simple)
         chunk = min(ctx.loss_chunk, s)
         nc = s // chunk

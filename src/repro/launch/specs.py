@@ -5,7 +5,6 @@ Used by the dry-run (lower+compile only) and by the real launchers.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Tuple
 

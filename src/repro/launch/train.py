@@ -36,7 +36,7 @@ def main():
     import jax
     import jax.numpy as jnp
     from repro import optim
-    from repro.configs import get_arch, reduced, TRAIN_4K
+    from repro.configs import get_arch, reduced
     from repro.data import DataConfig, TrainDataset
     from repro.models import transformer as T
     from repro.train import (TrainConfig, ValetCheckpointer, fit)

@@ -18,7 +18,6 @@ Three implementations:
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
@@ -114,8 +113,6 @@ def _blockwise_padded(q, k, v, *, causal, window, q_block, kv_block,
     scale = 1.0 / math.sqrt(d)
     qf = _fold_gqa(q, n_kv)                             # (B,Sq,K,G,D)
     g = hq // n_kv
-
-    kpos_all = jnp.arange(sk)
 
     if window > 0 and causal:
         # Static band: ceil(window / kv_block) blocks behind + the q block.

@@ -17,9 +17,8 @@ spans every paged layer (slot i of each layer's pool).
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +30,12 @@ from repro.models.attention import (blockwise_attention, decode_partial,
                                     combine_partials)
 from repro.models.layers import apply_rope, rms_norm, swiglu, gelu_mlp
 from repro.models.moe import moe_ffn
-from repro.models.transformer import (ParallelCtx, Segment, segments,
-                                      encoder_segments, unembed_matrix,
-                                      mask_vocab_pad, _sinusoidal)
+from repro.models.transformer import (ParallelCtx,
+                                      segments,
+                                      encoder_segments,
+                                      unembed_matrix,
+                                      mask_vocab_pad,
+                                      _sinusoidal)
 
 
 @dataclass(frozen=True)

@@ -15,8 +15,6 @@ shard_map region; GSPMD shards them over d_ff like a dense FFN.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,10 +12,9 @@ activation constraints at segment boundaries.
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Any, List, Optional, Tuple
+from typing import Any, List, Tuple
 
 import jax
 import jax.ad_checkpoint

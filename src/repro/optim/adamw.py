@@ -8,9 +8,8 @@ DESIGN.md §5).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,7 @@ ICI.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12          # bf16 / chip

@@ -33,10 +33,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core import device_ops as dev
-from repro.core.activity import ActivityTracker, select_victims_nad
-from repro.core.page_table import GlobalPageTable, Location, Tier
+from repro.core.activity import ActivityTracker
+from repro.core.page_table import GlobalPageTable, Tier
 from repro.core.policies import Policy, CostModel, VALET, TPU_COSTS
-from repro.core.pool import ValetMempool, SlotState
+from repro.core.pool import ValetMempool
 from repro.models import decode as D
 from repro.models.transformer import ParallelCtx
 
@@ -171,15 +171,37 @@ class ValetServeEngine:
         req.pages.append(pg)
         return pg
 
+    def _alloc_pages(self, req: Request, n: int) -> bool:
+        """Allocate ``n`` logical pages backed by pool slots, in bulk (one
+        ``alloc_batch`` + one local-map scatter instead of a per-page loop)."""
+        if n <= 0:
+            return True
+        if self.pool.free_count() < n and not self._make_room(n):
+            return False
+        pgs = list(range(self._next_page_id, self._next_page_id + n))
+        slots = self.pool.alloc_batch(pgs, [self.step_counter] * n)
+        if slots is None:           # cannot happen: free_count checked above
+            raise RuntimeError(f"pool refused batch of {n} pages")
+        self._next_page_id += n
+        self.gpt.map_local_batch(np.asarray(pgs, np.int64),
+                                 np.asarray(slots, np.int64))
+        self.tracker.on_write(pgs, self.step_counter)
+        req.pages.extend(pgs)
+        return True
+
     def _free_pages(self, req: Request, delete_host=True):
-        for pg in req.pages:
-            slot = self.gpt.local_slot(pg)
-            if slot is not None:
-                self.pool.release(slot)
-                self.gpt.unmap_local(pg)
+        if req.pages:
+            parr = np.asarray(req.pages, np.int64)
+            lslots = self.gpt.local_slots_batch(parr)
+            mask = lslots >= 0
+            if mask.any():
+                self.pool.release_batch(lslots[mask].tolist())
+                self.gpt.unmap_local_batch(parr[mask])
             if delete_host:
-                self.host_store.pop(pg, None)
-            self.gpt.drop_remote(pg)
+                hs = self.host_store
+                for pg in req.pages:
+                    hs.pop(pg, None)
+            self.gpt.drop_remote_batch(parr)
         req.pages = []
 
     def _make_room(self, n_pages: int) -> bool:
@@ -200,26 +222,40 @@ class ValetServeEngine:
         return self.pool.free_count() >= n_pages
 
     def _restore(self, req: Request) -> bool:
-        """Bring a paused sequence's pages back into the pool."""
-        needed = [pg for pg in req.pages
-                  if self.gpt.local_slot(pg) is None]
-        if self.pool.free_count() < len(needed):
-            if not self._make_room(len(needed)):
+        """Bring a paused sequence's pages back into the pool, in bulk.
+
+        One ``local_slots_batch`` gather finds the missing pages, one
+        ``alloc_batch`` claims their slots, and the KV data lands with a
+        single scatter per paged layer instead of one device update per
+        (page, layer) pair.  The restored bytes are bit-identical to the
+        per-page path."""
+        if not req.pages:
+            return True
+        parr = np.asarray(req.pages, np.int64)
+        needed = parr[self.gpt.local_slots_batch(parr) < 0]
+        n = needed.size
+        if self.pool.free_count() < n:
+            if not self._make_room(n):
                 return False
-        for pg in needed:
-            slot = self.pool.alloc(pg, self.step_counter)
-            assert slot is not None
-            blob = self.host_store.pop(pg)
-            for li, (kb, vb) in blob.items():
-                pool = self.caches["layers"][li]["pool"]
-                self.caches["layers"][li]["pool"] = dev.KVPool(
-                    pool.k.at[slot].set(jnp.asarray(kb)),
-                    pool.v.at[slot].set(jnp.asarray(vb)))
-            self.gpt.map_local(pg, slot)
-            self.gpt.drop_remote(pg)
-            self.tracker.on_write([pg], self.step_counter)
-            self.stats.restored_pages += 1
-            self.stats.sim_time_us += self.costs.host_read
+        if n == 0:
+            return True
+        needed_l = needed.tolist()
+        slots = self.pool.alloc_batch(needed_l, [self.step_counter] * n)
+        if slots is None:           # cannot happen: free_count checked above
+            raise RuntimeError(f"pool refused batch of {n} restore pages")
+        blobs = [self.host_store.pop(pg) for pg in needed_l]
+        idx = jnp.asarray(np.asarray(slots, np.int32))
+        for li in self.paged_layers:
+            ks = jnp.asarray(np.stack([np.asarray(b[li][0]) for b in blobs]))
+            vs = jnp.asarray(np.stack([np.asarray(b[li][1]) for b in blobs]))
+            pool = self.caches["layers"][li]["pool"]
+            self.caches["layers"][li]["pool"] = dev.KVPool(
+                pool.k.at[idx].set(ks), pool.v.at[idx].set(vs))
+        self.gpt.map_local_batch(needed, np.asarray(slots, np.int64))
+        self.gpt.drop_remote_batch(needed)
+        self.tracker.on_write(needed_l, self.step_counter)
+        self.stats.restored_pages += n
+        self.stats.sim_time_us += self.costs.host_read * n
         return True
 
     # ------------------------------------------------------------ scheduling
@@ -239,8 +275,8 @@ class ValetServeEngine:
         if self.pool.free_count() < need and not self._make_room(need):
             return False
         req.slot = self._slots_free.pop()
-        for _ in range(need):
-            assert self._alloc_page(req) is not None
+        if not self._alloc_pages(req, need):
+            raise RuntimeError(f"admit: failed to allocate {need} pages")
         bt = self._block_table_row(req)
         logits = self._prefill_one(req.prompt, req.slot, bt)
         # the prompt's last position yields the first generated token
@@ -268,8 +304,8 @@ class ValetServeEngine:
             if self.pool.free_count() < need and not self._make_room(need):
                 return False
             req.slot = self._slots_free.pop()
-            for _ in range(need):
-                assert self._alloc_page(req) is not None
+            if not self._alloc_pages(req, need):
+                raise RuntimeError(f"resume: failed to allocate {need} pages")
             self._prefill_one(full, req.slot, self._block_table_row(req))
             self.stats.recomputes += 1
             self.stats.sim_time_us += self.costs.cold_read * need
@@ -320,9 +356,10 @@ class ValetServeEngine:
 
     def _block_table_row(self, req: Request) -> np.ndarray:
         row = np.full((self.max_pages,), -1, np.int32)
-        for j, pg in enumerate(req.pages[: self.max_pages]):
-            slot = self.gpt.local_slot(pg)
-            row[j] = -1 if slot is None else slot
+        pgs = req.pages[: self.max_pages]
+        if pgs:
+            row[:len(pgs)] = self.gpt.local_slots_batch(
+                np.asarray(pgs, np.int64)).astype(np.int32)
         return row
 
     # ----------------------------------------------------------------- run
@@ -432,21 +469,33 @@ class ValetServeEngine:
             self.stats.deleted_pages += n
             self._seq_blobs.pop(req.rid, None)
             return n
-        for pg in req.pages:
-            slot = self.gpt.local_slot(pg)
-            if slot is None:
-                continue
-            blob = {}
+        # bulk spill: one gather + host transfer per paged layer (instead of
+        # one per (page, layer)), then grouped release / unmap / remote-map
+        live = np.empty(0, np.int64)
+        if req.pages:
+            parr = np.asarray(req.pages, np.int64)
+            lslots = self.gpt.local_slots_batch(parr)
+            mask = lslots >= 0
+            live = parr[mask]
+            live_slots = lslots[mask]
+        if live.size:
+            idx = jnp.asarray(live_slots.astype(np.int32))
+            layer_kv = {}
             for li in self.paged_layers:
                 pool = self.caches["layers"][li]["pool"]
-                blob[li] = (dev.to_host_tier(pool.k[slot]),
-                            dev.to_host_tier(pool.v[slot]))
-            self.host_store[pg] = blob
-            self.pool.release(slot)
-            self.gpt.unmap_local(pg)
-            self.gpt.map_remote(pg, Location(Tier.HOST))
-            self.stats.spilled_pages += 1
-            cost = self.costs.host_write
+                layer_kv[li] = (dev.to_host_tier(pool.k[idx]),
+                                dev.to_host_tier(pool.v[idx]))
+            hs = self.host_store
+            for i, pg in enumerate(live.tolist()):
+                hs[pg] = {li: (kv[0][i], kv[1][i])
+                          for li, kv in layer_kv.items()}
+            self.pool.release_batch(live_slots.tolist())
+            self.gpt.unmap_local_batch(live)
+            m = int(live.size)
+            self.gpt.map_remote_batch(live, [int(Tier.HOST)] * m,
+                                      [-1] * m, [-1] * m, None)
+            self.stats.spilled_pages += m
+            cost = self.costs.host_write * m
             if self.policy.lazy_send:
                 self.stats.bg_time_us += cost
             else:

@@ -13,9 +13,8 @@ sharding story:
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

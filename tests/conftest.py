@@ -4,8 +4,8 @@ import sys
 # keep smoke tests on 1 device — only launch/dryrun sets 512 fake devices
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import pytest
+import jax  # noqa: E402
+import pytest  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
 

@@ -11,7 +11,7 @@ from seeded numpy generators so the suite needs no extra dependencies.
 import numpy as np
 import pytest
 
-from repro.core import (TieredPageStore, POLICIES, PAPER_COSTS, WriteSet)
+from repro.core import TieredPageStore, POLICIES, PAPER_COSTS
 from repro.core.page_table import GlobalPageTable, Location, Tier
 from repro.core.pool import SlotState, ValetMempool
 from repro.core.queues import WritePipeline

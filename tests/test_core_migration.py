@@ -1,6 +1,5 @@
 """Migration protocol + activity-based victim selection (paper §3.5)."""
 import numpy as np
-import pytest
 
 from repro.core import (ActivityTracker, TieredPageStore, POLICIES,
                         PAPER_COSTS, select_victims_nad, select_victims_mass,
@@ -86,7 +85,6 @@ def test_delete_eviction_causes_cold_hits():
 
 def test_migration_destination_not_source():
     store = populated_store()
-    migs = store.migrator.completed
     store.peer_pressure(2, 4)
     for mig in store.migrator.completed:
         if mig.src_peer == 2:

@@ -3,9 +3,9 @@ import pytest
 
 pytest.importorskip("hypothesis",
                     reason="hypothesis is a soft dependency (requirements.txt)")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.pool import ValetMempool, SlotState
+from repro.core.pool import ValetMempool, SlotState  # noqa: E402
 
 
 def make_pool(capacity=64, min_pages=8, max_pages=64, free=64):
@@ -16,7 +16,6 @@ def make_pool(capacity=64, min_pages=8, max_pages=64, free=64):
 def test_use_pool_first():
     """Valet allocates from pre-allocated slots first (Table 2)."""
     pool = make_pool()
-    before = pool.size
     s = pool.alloc(0, step=1)
     assert s is not None
     assert pool.slots[s].state == SlotState.IN_USE
@@ -82,7 +81,6 @@ def test_pool_invariants_hold(ops, min_pages, capacity):
     pool = ValetMempool(capacity, min_pages=min_pages, max_pages=capacity,
                         free_memory_fn=lambda: free)
     live = []
-    reclaimable = []
     page = 0
     for i, op in enumerate(ops):
         if op == "alloc":

@@ -3,10 +3,10 @@ import pytest
 
 pytest.importorskip("hypothesis",
                     reason="hypothesis is a soft dependency (requirements.txt)")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.pool import ValetMempool, SlotState
-from repro.core.queues import WritePipeline
+from repro.core.pool import ValetMempool, SlotState  # noqa: E402
+from repro.core.queues import WritePipeline  # noqa: E402
 
 
 def make_pipeline(capacity=128):

@@ -1,9 +1,7 @@
 """Replication & fault tolerance (paper §5.1, Table 3)."""
-import numpy as np
 
 from repro.core import TieredPageStore, POLICIES, PAPER_COSTS
 from repro.core.page_table import GlobalPageTable, Location, Tier
-from repro.core.replication import fail_peer
 
 
 def test_repoint_replica():

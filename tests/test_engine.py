@@ -64,6 +64,46 @@ def test_unconstrained_pool_never_preempts(setup):
     assert stats.spilled_pages == 0
 
 
+def test_preempt_restore_roundtrips_kv_exactly(setup):
+    """Bulk spill (_preempt) then bulk restore (_restore) must return every
+    KV page to the pool bit-identically, with host blobs fully drained."""
+    cfg, params, prompts, _ = setup
+    eng = ValetServeEngine(params, cfg, CTX, max_batch=2, max_seq=64,
+                           page=4, pool_slots=32, policy=POLICIES["valet"])
+    rid = eng.submit(prompts[0], max_new=8)
+    req = eng._requests[rid]
+    assert eng._admit(req) and req.status == "active"
+    assert req.pages
+
+    slots = {pg: eng.gpt.local_slot(pg) for pg in req.pages}
+    before = {}
+    for li in eng.paged_layers:
+        pool = eng.caches["layers"][li]["pool"]
+        before[li] = {pg: (np.asarray(pool.k[s]), np.asarray(pool.v[s]))
+                      for pg, s in slots.items()}
+
+    eng._preempt(req)
+    assert req.status == "paused"
+    assert eng.stats.spilled_pages == len(req.pages)
+    for pg in req.pages:
+        assert eng.gpt.local_slot(pg) is None
+        assert pg in eng.host_store                # spilled, not deleted
+
+    assert eng._resume(req) and req.status == "active"
+    for li in eng.paged_layers:
+        pool = eng.caches["layers"][li]["pool"]
+        for pg in req.pages:
+            s = eng.gpt.local_slot(pg)
+            assert s is not None
+            np.testing.assert_array_equal(np.asarray(pool.k[s]),
+                                          before[li][pg][0])
+            np.testing.assert_array_equal(np.asarray(pool.v[s]),
+                                          before[li][pg][1])
+    for pg in req.pages:
+        assert pg not in eng.host_store            # blobs drained on restore
+    assert eng.stats.restored_pages == eng.stats.spilled_pages
+
+
 def test_engine_hybrid_arch_with_rings():
     """Engine also serves SWA/hybrid archs (ring + paged mixtures)."""
     cfg = reduced(ARCHS["gemma3-4b"])

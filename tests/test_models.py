@@ -5,17 +5,17 @@ import pytest
 
 pytest.importorskip("hypothesis",
                     reason="hypothesis is a soft dependency (requirements.txt)")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-import jax
-import jax.numpy as jnp
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
-from repro.configs.base import MoEConfig
-from repro.models.attention import (blockwise_attention, reference_attention,
+from repro.configs.base import MoEConfig  # noqa: E402
+from repro.models.attention import (blockwise_attention, reference_attention,  # noqa: E402
                                     decode_partial, combine_partials)
-from repro.models.layers import apply_rope, rms_norm, KeyGen
-from repro.models.moe import init_moe, moe_ffn, moe_ffn_reference
-from repro.models.ssm import ssd_chunked
+from repro.models.layers import apply_rope, rms_norm, KeyGen  # noqa: E402
+from repro.models.moe import init_moe, moe_ffn, moe_ffn_reference  # noqa: E402
+from repro.models.ssm import ssd_chunked  # noqa: E402
 
 
 def test_blockwise_matches_reference_all_modes():

@@ -1,0 +1,261 @@
+"""Batched vs scalar reclaim/flush/migration parity (the PR-2 contract).
+
+``batch_reclaim=True`` (the default) routes ``_flush`` placement, victim
+selection + migration, and delete-style eviction through the vectorized
+pipeline; ``batch_reclaim=False`` keeps the scalar reference.  Both must
+reach bitwise-identical state: ``Stats`` (including ``evictions`` and
+``migrations`` counters and the accumulated microseconds), per-op latencies,
+pool/page-table/block state, and the activity-tracker timestamps.
+
+Randomness comes from seeded numpy generators so the suite needs no extra
+dependencies.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (TieredPageStore, POLICIES, PAPER_COSTS,
+                        ActivityTracker, select_victims_nad,
+                        select_victims_topk)
+from repro.core.migration import MigrationEngine, Phase
+from repro.core.page_table import GlobalPageTable, Location, Tier
+
+ALL_POLICIES = ("valet", "valet-mass", "infiniswap", "nbdx", "os-swap")
+
+
+def make_store(policy, pool=128, *, batched, n_peers=4, blocks=64, seed=0,
+               dynamic=False):
+    return TieredPageStore(
+        POLICIES[policy], PAPER_COSTS, pool_capacity=pool,
+        min_pool=max(pool // 8, 8) if dynamic else pool, max_pool=pool,
+        n_peers=n_peers, peer_capacity_blocks=blocks, pages_per_block=16,
+        seed=seed, batch_reclaim=batched)
+
+
+def random_trace(rng, n_pages, n_ops, write_frac=0.4):
+    pages = np.clip(rng.zipf(1.3, n_ops), 1, n_pages) - 1
+    return pages.astype(np.int64), rng.random(n_ops) < write_frac
+
+
+def drive(store, pages, is_write, tick_every=32, events=None):
+    """Scalar op loop with background ticks + injected pressure events —
+    both stores see the identical op/tick/event sequence."""
+    lats = []
+    for i in range(len(pages)):
+        if is_write[i]:
+            lats.append(store.write(int(pages[i])))
+        else:
+            lats.append(store.read(int(pages[i])))
+        if i % tick_every == 0:
+            store.background_tick()
+        if events and i in events:
+            events[i](store)
+    return np.asarray(lats)
+
+
+def assert_full_parity(a, b, la=None, lb=None):
+    assert a.stats == b.stats, f"\nscalar : {a.stats}\nbatched: {b.stats}"
+    if la is not None:
+        assert np.array_equal(la, lb), "per-op latencies diverged"
+    assert a.step == b.step
+    assert a.pool.free_count() == b.pool.free_count()
+    assert a.pool.n_alloc_from_pool == b.pool.n_alloc_from_pool
+    assert a.pool.n_reclaimed == b.pool.n_reclaimed
+    assert len(a.pipeline.staging) == len(b.pipeline.staging)
+    assert len(a.pipeline.reclaimable) == len(b.pipeline.reclaimable)
+    # block state: same MR blocks with the same page lists
+    assert set(a.blocks.keys()) == set(b.blocks.keys())
+    for k in a.blocks:
+        assert a.blocks[k] == b.blocks[k], f"block {k} diverged"
+    for pa, pb in zip(a.peers, b.peers):
+        assert (pa.used, pa.connected, pa.mapped_blocks, pa.failed) == \
+            (pb.used, pb.connected, pb.mapped_blocks, pb.failed)
+    # page table: every page resolves identically
+    n = max(len(a.gpt), len(b.gpt), 1)
+    for pg in range(2 * n):
+        assert a.gpt.lookup(pg) == b.gpt.lookup(pg), f"page {pg} diverged"
+    # activity tags on all live blocks
+    for k in a.blocks:
+        bid = a._block_id(*k)
+        assert a.tracker.last(bid) == b.tracker.last(bid)
+    a.pipeline.check_invariants()
+    b.pipeline.check_invariants()
+
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("pool", [32, 128])
+def test_reclaim_parity_random_traces(policy, pool):
+    """Randomized mixed traces with periodic peer pressure, a hard peer
+    failure, and local pool pressure — scalar vs batched reclaim."""
+    for seed in range(2):
+        pages, is_write = random_trace(np.random.default_rng(seed), 500, 4000)
+        events = {
+            800: lambda s: s.peer_pressure(0, 4),
+            1600: lambda s: s.peer_pressure(1, 8),
+            2500: lambda s: s.fail_peer(2),
+            3200: lambda s: s.local_pressure(64),
+        }
+        a = make_store(policy, pool, batched=False, seed=seed)
+        b = make_store(policy, pool, batched=True, seed=seed)
+        la = drive(a, pages, is_write, events=events)
+        lb = drive(b, pages, is_write, events=events)
+        assert_full_parity(a, b, la, lb)
+
+
+def test_reclaim_parity_under_dynamic_pool():
+    pages, is_write = random_trace(np.random.default_rng(9), 600, 5000)
+    a = make_store("valet", 256, batched=False, dynamic=True)
+    b = make_store("valet", 256, batched=True, dynamic=True)
+    la = drive(a, pages, is_write)
+    lb = drive(b, pages, is_write)
+    assert_full_parity(a, b, la, lb)
+
+
+def test_flush_parity_drain_and_stall():
+    """Bulk ``_flush`` placement: lazy drain AND in-critical-path stalls
+    (tiny pool forces synchronous flushes; write_stall_us must match)."""
+    a = make_store("valet", 16, batched=False)
+    b = make_store("valet", 16, batched=True)
+    pages = np.arange(400, dtype=np.int64)
+    la = np.array([a.write(int(p)) for p in pages])
+    lb = np.array([b.write(int(p)) for p in pages])
+    assert a.stats.write_stall_us > 0          # stalls actually happened
+    assert_full_parity(a, b, la, lb)
+    a.drain()
+    b.drain()
+    assert_full_parity(a, b)
+
+
+def test_access_batch_rides_batched_reclaim():
+    """The access_batch driver with batch_reclaim on vs the scalar-everything
+    reference: full pipeline (critical path + flush + pressure) parity."""
+    for policy in ("valet", "infiniswap"):
+        pages, is_write = random_trace(np.random.default_rng(4), 500, 4000)
+        events = {1000: lambda s: s.peer_pressure(0, 6),
+                  3000: lambda s: s.peer_pressure(1, 6)}
+        a = make_store(policy, 64, batched=False, seed=1)
+        b = make_store(policy, 64, batched=True, seed=1)
+        la = drive(a, pages, is_write, events=events)
+        n = len(pages)
+        lb = np.empty(n, np.float64)
+        i = 0
+        while i < n:
+            nxt = i if i % 32 == 0 else (i // 32 + 1) * 32
+            nxt_ev = min([e for e in events if e >= i], default=n)
+            end = min(n, i + 256, nxt + 1, nxt_ev + 1)
+            lb[i:end] = b.access_batch(pages[i:end], is_write[i:end])
+            if (end - 1) % 32 == 0:
+                b.background_tick()
+            if (end - 1) in events:
+                events[end - 1](b)
+            i = end
+        assert_full_parity(a, b, la, lb)
+
+
+def test_migrate_batch_matches_scalar_loop():
+    """Direct migration parity: identical victims (order included), rng
+    stream, page repoints, and Stats.migrations under repeated pressure."""
+    def populated(batched):
+        s = make_store("valet", 256, batched=batched, n_peers=6, blocks=128)
+        for p in range(1500):
+            s.write(p)
+            if p % 32 == 0:
+                s.background_tick()
+        s.drain()
+        return s
+
+    a, b = populated(False), populated(True)
+    for peer in (0, 1, 0, 2):
+        fa = a.peer_pressure(peer, 8)
+        fb = b.peer_pressure(peer, 8)
+        assert fa == fb
+    assert a.stats.migrations == b.stats.migrations > 0
+    assert [m.block for m in a.migrator.completed] == \
+        [m.block for m in b.migrator.completed]
+    assert [m.dst_peer for m in a.migrator.completed] == \
+        [m.dst_peer for m in b.migrator.completed]
+    assert_full_parity(a, b)
+
+
+def test_delete_eviction_batched_parity():
+    """Infiniswap/nbdX delete-style eviction: bulk scatter vs per-page."""
+    for policy in ("infiniswap", "nbdx"):
+        def populated(batched):
+            s = make_store(policy, 64, batched=batched, n_peers=4, blocks=32)
+            for p in range(900):
+                s.write(p)
+            return s
+        a, b = populated(False), populated(True)
+        for peer in (0, 1, 0):
+            assert a.peer_pressure(peer, 6) == b.peer_pressure(peer, 6)
+        assert a.stats.evictions == b.stats.evictions > 0
+        assert_full_parity(a, b)
+
+
+def test_topk_matches_nad_selection():
+    """Dense top-k must equal the stable-argsort reference, ties included."""
+    rng = np.random.default_rng(0)
+    t = ActivityTracker()
+    blocks = list(range(300))
+    # heavy ties: timestamps drawn from a tiny range
+    t.on_write_at(blocks, rng.integers(0, 8, size=300))
+    for n in (0, 1, 7, 64, 299, 300, 500):
+        assert select_victims_topk(t, blocks, n, step=100) == \
+            select_victims_nad(t, blocks, n, step=100), f"n={n}"
+    # and on a permuted candidate order
+    perm = rng.permutation(blocks).tolist()
+    assert select_victims_topk(t, perm, 50, step=100) == \
+        select_victims_nad(t, perm, 50, step=100)
+
+
+class _ScriptedRng:
+    """Deterministic stand-in: returns scripted ``integers`` draws."""
+
+    def __init__(self, vals):
+        self.vals = list(vals)
+
+    def integers(self, *a, **k):
+        return self.vals.pop(0)
+
+
+def test_destination_fallback_scans_all_peers():
+    """When p2c samples two pressured peers, the engine must fall back to a
+    full scan (freest peer) instead of aborting into eviction."""
+    gpt = GlobalPageTable()
+    gpt.map_remote(7, Location(Tier.PEER, peer=3, slot=0))
+    allocs = []
+    eng = MigrationEngine(
+        gpt, ActivityTracker(),
+        free_counts_fn=lambda: [0, 0, 5, 0],      # only peer 2 has room
+        copy_fn=lambda *a: None,
+        alloc_fn=lambda p: (allocs.append(p), 0)[1],
+        free_fn=lambda p, b: None,
+        park_fn=lambda pages, hold: None,
+        rng=_ScriptedRng([0, 0]))                 # p2c pair -> (0, 1), both full
+    mig = eng.migrate_block(3, block=123, pages=[7])
+    assert mig.phase == Phase.DONE
+    assert mig.dst_peer == 2
+    assert allocs == [2]
+    assert gpt.remote_location(7).peer == 2
+
+
+def test_destination_fallback_aborts_when_truly_full():
+    eng = MigrationEngine(
+        GlobalPageTable(), ActivityTracker(),
+        free_counts_fn=lambda: [0, 0, 0, 4],      # only the SOURCE has room
+        copy_fn=lambda *a: None, alloc_fn=lambda p: 0,
+        free_fn=lambda p, b: None, park_fn=lambda pages, hold: None,
+        rng=_ScriptedRng([0, 0]))
+    mig = eng.migrate_block(3, block=1, pages=[9])
+    assert mig.phase == Phase.ABORTED
+    assert mig.log[-1].kind == "NO_DESTINATION"
+
+
+def test_pair_sampler_draw_batch_matches_sequential():
+    from repro.core.activity import PairSampler
+    s1 = PairSampler(6, np.random.default_rng(3), buf=64)
+    s2 = PairSampler(6, np.random.default_rng(3), buf=64)
+    seq = [s1.draw() for _ in range(200)]          # crosses refill boundaries
+    a, b = s2.draw_batch(150)
+    rest = [s2.draw() for _ in range(50)]
+    got = list(zip(a.tolist(), b.tolist())) + rest
+    assert seq == got

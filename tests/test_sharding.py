@@ -144,14 +144,17 @@ SCRIPT = textwrap.dedent("""
     from repro.launch.serve_step import _quantize_token
     pk_q = np.zeros((dp, kvr, slots, page, Hkv, D), np.int8)
     sk_q = np.zeros((dp, kvr, slots, page, Hkv), np.float32)
-    pv_q = np.zeros_like(pk_q); sv_q = np.zeros_like(sk_q)
+    pv_q = np.zeros_like(pk_q)
+    sv_q = np.zeros_like(sk_q)
     for di in range(dp):
         for r in range(kvr):
             for s_ in range(slots):
                 kq, ks = _quantize_token(pool_k[di, r, s_])
                 vq, vs = _quantize_token(pool_v[di, r, s_])
-                pk_q[di, r, s_] = np.asarray(kq); sk_q[di, r, s_] = np.asarray(ks)
-                pv_q[di, r, s_] = np.asarray(vq); sv_q[di, r, s_] = np.asarray(vs)
+                pk_q[di, r, s_] = np.asarray(kq)
+                sk_q[di, r, s_] = np.asarray(ks)
+                pv_q[di, r, s_] = np.asarray(vq)
+                sv_q[di, r, s_] = np.asarray(vs)
     with mesh:
         cache8 = {"pool_k": jnp.asarray(pk_q), "pool_v": jnp.asarray(pv_q),
                   "scale_k": jnp.asarray(sk_q), "scale_v": jnp.asarray(sv_q)}

@@ -2,7 +2,6 @@
 through the Valet engine under memory pressure, and confirm the generated
 text is identical to a pressure-free run while baselines pay their costs."""
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp

@@ -1,10 +1,8 @@
 """Training substrate: loss decreases, checkpoint fault tolerance,
 deterministic data, elastic recovery plans."""
 import os
-import shutil
 
 import numpy as np
-import pytest
 
 import jax
 import jax.numpy as jnp
