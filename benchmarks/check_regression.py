@@ -26,11 +26,49 @@ import sys
 ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
 
 # (benchmark key in bench_results.json, metric key) — all tracked metrics
-# are higher-is-better speedup ratios; current < baseline*(1-tol) fails
+# are higher-is-better speedup ratios; current < baseline*(1-tol) fails.
+# multi_tenant/speedup is the coordinated-vs-static-partitioning ratio
+# (simulated us, deterministic — see paper_tables.multi_tenant).
 TRACKED = [
     ("batch_speedup", "speedup"),
     ("reclaim_speedup", "speedup"),
+    ("multi_tenant", "speedup"),
 ]
+
+
+def load_json(path: str, what: str):
+    """Load a JSON file with a clear diagnostic instead of a traceback."""
+    if not os.path.exists(path):
+        print(f"FAIL: {what} file not found: {path} "
+              f"(run `python -m benchmarks.run --only "
+              f"{','.join(b for b, _ in TRACKED)}` first)")
+        return None
+    try:
+        with open(path) as f:
+            obj = json.load(f)
+    except ValueError as e:
+        print(f"FAIL: {what} file {path} is not valid JSON: {e}")
+        return None
+    if not isinstance(obj, dict):
+        print(f"FAIL: {what} file {path} must hold a JSON object, "
+              f"got {type(obj).__name__}")
+        return None
+    return obj
+
+
+def lookup(results: dict, bench: str, metric: str):
+    """Fetch results[bench][metric] tolerating absent/malformed entries.
+
+    Non-numeric values count as missing (a string or list here must FAIL
+    with the clear message, not crash float()/format, and must never be
+    written into a refreshed baseline)."""
+    entry = results.get(bench)
+    if not isinstance(entry, dict):
+        return None
+    val = entry.get(metric)
+    if isinstance(val, bool) or not isinstance(val, (int, float)):
+        return None
+    return val
 
 
 def main() -> int:
@@ -45,43 +83,54 @@ def main() -> int:
                     help="write the baseline from current results and exit")
     args = ap.parse_args()
 
-    with open(args.results) as f:
-        results = json.load(f)
+    results = load_json(args.results, "results")
+    if results is None:
+        return 2
 
     if args.refresh:
+        # refuse a partial refresh: a baseline written from incomplete
+        # results would silently drop gates for the missing benchmarks
         baseline = {}
+        missing = []
         for bench, metric in TRACKED:
-            if bench not in results:
-                print(f"refresh: {bench} missing from results "
-                      f"(run `python -m benchmarks.run --only "
-                      f"{','.join(b for b, _ in TRACKED)}` first)")
-                return 2
-            baseline.setdefault(bench, {})[metric] = results[bench][metric]
+            val = lookup(results, bench, metric)
+            if val is None:
+                missing.append(f"{bench}/{metric}")
+                continue
+            baseline.setdefault(bench, {})[metric] = val
+        if missing:
+            print(f"refresh REFUSED: {', '.join(missing)} missing from "
+                  f"{args.results} (run `python -m benchmarks.run --only "
+                  f"{','.join(b for b, _ in TRACKED)}` first)")
+            return 2
         with open(args.baseline, "w") as f:
             json.dump(baseline, f, indent=2)
             f.write("\n")
         print(f"baseline refreshed -> {args.baseline}")
         return 0
 
-    with open(args.baseline) as f:
-        baseline = json.load(f)
+    baseline = load_json(args.baseline, "baseline")
+    if baseline is None:
+        return 2
 
     lines = ["| benchmark | metric | baseline | current | floor | status |",
              "|---|---|---|---|---|---|"]
     failed = False
     for bench, metric in TRACKED:
-        base = baseline.get(bench, {}).get(metric)
+        base = lookup(baseline, bench, metric)
         if base is None:
-            print(f"warning: {bench}/{metric} not in baseline — skipped")
+            print(f"warning: {bench}/{metric} not in baseline — skipped "
+                  f"(refresh the baseline to start gating it)")
             continue
-        if bench not in results or metric not in results[bench]:
+        cur = lookup(results, bench, metric)
+        if cur is None:
             print(f"FAIL: {bench}/{metric} missing from results "
                   f"(benchmark did not run?)")
             failed = True
             lines.append(f"| {bench} | {metric} | {base:.2f} | MISSING | "
                          f"- | ❌ |")
             continue
-        cur = float(results[bench][metric])
+        cur = float(cur)
         floor = base * (1.0 - args.tolerance)
         ok = cur >= floor
         status = "✅" if ok else "❌"

@@ -12,7 +12,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: table1,fig8,fig9,fig10,fig19,fig22,"
-                         "fig23,batch_speedup,reclaim_speedup,roofline")
+                         "fig23,batch_speedup,reclaim_speedup,multi_tenant,"
+                         "roofline")
     args = ap.parse_args()
     only = None if args.only == "all" else set(args.only.split(","))
 
@@ -30,6 +31,7 @@ def main() -> None:
         ("fig23", PT.fig23_eviction),
         ("batch_speedup", PT.batch_speedup),
         ("reclaim_speedup", PT.reclaim_speedup),
+        ("multi_tenant", PT.multi_tenant),
         ("victim", PT.victim_quality),
         ("roofline", RT.run),
     ]

@@ -1,6 +1,8 @@
 """Valet core: host/remote shared-memory orchestration (the paper's
 contribution), adapted to the TPU memory hierarchy.  See DESIGN.md §2-§4."""
 from repro.core.pool import ValetMempool, SlotState
+from repro.core.coordinator import (HostMemoryCoordinator, LeaseClient,
+                                    ContainerRecord, CoordinatorStats)
 from repro.core.queues import WritePipeline, StagingQueue, ReclaimableQueue, WriteSet
 from repro.core.page_table import GlobalPageTable, Location, Tier
 from repro.core.activity import (ActivityTracker, select_victims_nad,

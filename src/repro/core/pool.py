@@ -55,11 +55,20 @@ class ValetMempool:
 
     def __init__(self, capacity: int, *, min_pages: int, max_pages: int,
                  free_memory_fn: Optional[Callable[[], int]] = None,
-                 grow_step: Optional[int] = None):
+                 grow_step: Optional[int] = None,
+                 lease=None):
         assert 0 < min_pages <= max_pages <= capacity
         self.capacity = capacity
         self.min_pages = min_pages
         self.max_pages = max_pages
+        # coordinator-backed pools (``lease`` is a coordinator LeaseClient
+        # whose registration already reserved ``min_pages``) probe the
+        # coordinator's free slab instead of a synthetic host-free callable;
+        # every grow must then be granted via ``lease.lease`` and every
+        # shrink returns pages via ``lease.release``
+        self.lease = lease
+        if lease is not None:
+            free_memory_fn = lease.available
         self.free_memory_fn = free_memory_fn or (lambda: capacity)
         self.grow_step = grow_step or max(min_pages // 2, 1)
         self.slots: List[SlotMeta] = [SlotMeta() for _ in range(capacity)]
@@ -80,9 +89,16 @@ class ValetMempool:
         new_size = max(self.min_pages, min(new_size, self.max_pages,
                                            self.capacity))
         if new_size > self.size:
+            # only back slots that are actually UNBACKED: a previous shrink
+            # can strand non-FREE slots beyond the effective size (they keep
+            # live data and simply return under the size here), and a
+            # stranded slot released in the meantime is already on the free
+            # list — blindly marking the range FREE would clobber both
             for i in range(self.size, new_size):
-                self.slots[i].state = SlotState.FREE
-                self._free.append(i)
+                m = self.slots[i]
+                if m.state == SlotState.UNBACKED:
+                    m.state = SlotState.FREE
+                    self._free.append(i)
         elif new_size < self.size:
             # release only FREE slots from the tail of the pool
             keep = []
@@ -119,11 +135,46 @@ class ValetMempool:
                      max(host_cap, self.min_pages))
         if target <= self.size:
             return False
+        if self.lease is not None:
+            # coordinator-backed: the grow must be granted (one batched
+            # lease per grow step); a partial grant grows partially
+            granted = self.lease.lease(target - self.size)
+            if granted <= 0:
+                return False
+            target = self.size + granted
         old = self.size
         self._resize_to(target)
         grew = self.size > old
         self.n_grow += int(grew)
         return grew
+
+    def ensure_free(self, n: int) -> bool:
+        """Grow (leasing if coordinator-backed) until ``n`` slots are FREE.
+
+        Unlike ``maybe_grow`` this is demand-sized rather than step-sized:
+        callers that need a known burst (engine admission/restore) reserve
+        it up front instead of discovering mid-burst that growth stalled.
+        Respects the same max/host-free caps; returns False when they bind
+        first (static pools return False immediately, without side effects).
+        """
+        while len(self._free) < n:
+            host_cap = int(self.free_memory_fn() * self.HOST_FREE_FRACTION)
+            want = max(self.grow_step, n - len(self._free))
+            target = min(self.size + want, self.max_pages,
+                         max(host_cap, self.min_pages))
+            if target <= self.size:
+                return False
+            if self.lease is not None:
+                granted = self.lease.lease(target - self.size)
+                if granted <= 0:
+                    return False
+                target = self.size + granted
+            old = self.size
+            self._resize_to(target)
+            self.n_grow += int(self.size > old)
+            if self.size <= old:
+                return False
+        return True
 
     def shrink_for_pressure(self):
         """Shrink toward host free memory, never below min_pages."""
@@ -132,9 +183,27 @@ class ValetMempool:
         if target < self.size:
             old = self.size
             self._resize_to(target)
+            released = old - self.size
+            if released and self.lease is not None:
+                self.lease.release(released)
             self.n_shrink += int(self.size < old)
             return True
         return False
+
+    def shrink_by(self, n: int) -> int:
+        """Donate up to ``n`` pages back to the host (coordinator pressure
+        path): releases FREE slots only, never below ``min_pages``, and
+        returns the pages actually shed (already released to the lease)."""
+        if n <= 0:
+            return 0
+        old = self.size
+        self._resize_to(self.size - n)
+        released = old - self.size
+        if released:
+            if self.lease is not None:
+                self.lease.release(released)
+            self.n_shrink += 1
+        return released
 
     # -- allocation ---------------------------------------------------------
 

@@ -26,7 +26,7 @@ from repro.core.activity import (ActivityTracker,
 from repro.core.migration import MigrationEngine
 from repro.core.page_table import GlobalPageTable, Location, Tier
 from repro.core.policies import CostModel, Policy
-from repro.core.pool import ValetMempool
+from repro.core.pool import SlotState, ValetMempool
 from repro.core.queues import WritePipeline, WriteSet
 from repro.core.replication import ReplicaPlacer, fail_peer
 
@@ -84,7 +84,11 @@ class TieredPageStore:
                  free_memory_fn: Optional[Callable[[], int]] = None,
                  seed: int = 0,
                  data_plane=None,
-                 batch_reclaim: bool = True):
+                 batch_reclaim: bool = True,
+                 grow_step: Optional[int] = None,
+                 coordinator=None,
+                 container_name: Optional[str] = None,
+                 container_weight: float = 1.0):
         self.policy = policy
         self.costs = costs
         self.pages_per_block = pages_per_block
@@ -99,9 +103,24 @@ class TieredPageStore:
         max_pool = max_pool or pool_capacity
         if not policy.dynamic_pool:
             min_pool = max_pool
+        # §3.4 multi-container mode: the pool leases its pages from a shared
+        # HostMemoryCoordinator instead of probing a synthetic host-free
+        # callable — growth is granted (possibly reclaiming idle containers'
+        # memory) and every shrink returns pages to the shared slab
+        self.coordinator = coordinator
+        self._lease = None
+        if coordinator is not None:
+            self._lease = coordinator.register(
+                min_pages=min_pool, max_pages=max_pool,
+                weight=container_weight, name=container_name)
         self.pool = ValetMempool(pool_capacity, min_pages=min_pool,
                                  max_pages=max_pool,
-                                 free_memory_fn=free_memory_fn)
+                                 free_memory_fn=free_memory_fn,
+                                 grow_step=grow_step,
+                                 lease=self._lease)
+        if coordinator is not None:
+            coordinator.set_donor(self._lease.cid, self.host_donate,
+                                  size_fn=lambda: self.pool.size)
         self.pipeline = WritePipeline(self.pool, queue_len=1 << 16)
         self.gpt = GlobalPageTable()
         self.peers = [PeerState(capacity=peer_capacity_blocks)
@@ -109,6 +128,11 @@ class TieredPageStore:
         # remote blocks: (peer, block_slot) -> list of logical pages
         self.blocks: Dict[Tuple[int, int], List[int]] = {}
         self.block_replicas: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
+        # reverse index: replica block -> its primary.  Replica blocks are
+        # not independent victims (migrating one would leave the primary's
+        # replica list and the page table dangling), so pressure paths skip
+        # them and ``_free_block`` keeps both directions consistent.
+        self._replica_of: Dict[Tuple[int, int], Tuple[int, int]] = {}
         self._next_block_slot = [0] * n_peers
         self._open_block: Dict[int, Tuple[int, int]] = {}   # peer -> block key
         # sized to cover the block-id stride (peer << 20 | slot) upfront so
@@ -162,7 +186,20 @@ class TieredPageStore:
 
     def _free_block(self, peer: int, slot: int):
         self.peers[peer].used -= 1
-        self.blocks.pop((peer, slot), None)
+        key = (peer, slot)
+        self.blocks.pop(key, None)
+        if self._open_block.get(peer) == key:
+            self._open_block.pop(peer)
+        prim = self._replica_of.pop(key, None)
+        if prim is not None:
+            reps = self.block_replicas.get(prim)
+            if reps:
+                self.block_replicas[prim] = tuple(r for r in reps
+                                                  if r != key)
+        for r in self.block_replicas.pop(key, ()):
+            # freeing a primary orphans its replicas: they stop being
+            # replicas (and become ordinary eviction candidates)
+            self._replica_of.pop(r, None)
 
     def _copy_block(self, src_peer, src_slot, dst_peer, dst_slot):
         pages = self.blocks.get((src_peer, src_slot), [])
@@ -216,6 +253,7 @@ class TieredPageStore:
                     rslot = self._alloc_block_slot(rp)
                     if rslot is not None:
                         reps.append((rp, rslot))
+                        self._replica_of[(rp, rslot)] = blk
             self.block_replicas[blk] = reps
         self.blocks[blk].append(page)
         self.tracker.touch(self._block_id(*blk), self.step)
@@ -376,6 +414,8 @@ class TieredPageStore:
                                 if r is not None:
                                     reps.append((rp, r[0]))
                                     rep_lists.append(r[1])
+                                    self._replica_of[(rp, r[0])] = \
+                                        (peer, slot)
                         entry = [slot, lst, tuple(reps), rep_lists]
                         block_replicas[(peer, slot)] = entry[2]
                         open_cache[peer] = entry
@@ -511,6 +551,11 @@ class TieredPageStore:
         n = pages.size
         lats = np.empty(n, np.float64)
         iw = np.broadcast_to(np.asarray(is_write, bool), (n,))
+        if self._lease is not None:
+            # per-container demand signal (§3.4): recently busy containers
+            # are reclaimed from last under host pressure.  Accounting only —
+            # never changes classification, rng draws, or Stats.
+            self.coordinator.note_activity(self._lease.cid, n)
         if self.policy.use_local_pool:
             start = 0
             while start < n:
@@ -894,8 +939,13 @@ class TieredPageStore:
     # -- remote pressure: eviction or migration -----------------------------------
 
     def peer_pressure(self, peer: int, blocks_to_free: int) -> int:
-        """A peer's native applications claimed memory; free MR blocks."""
-        keys = [k for k in self.blocks if k[0] == peer]
+        """A peer's native applications claimed memory; free MR blocks.
+
+        Replica blocks are skipped as victims — they only move or die with
+        their primary (victimizing one independently would dangle the
+        primary's replica list and the page-table replica tuples)."""
+        keys = [k for k in self.blocks
+                if k[0] == peer and k not in self._replica_of]
         if not keys:
             return 0
         cand_ids = [self._block_id(*k) for k in keys]
@@ -987,3 +1037,31 @@ class TieredPageStore:
         n = self._reclaim(reclaim_pages)
         self.pool.shrink_for_pressure()
         return n
+
+    def host_donate(self, n_pages: int) -> int:
+        """Coordinator-requested donation (§3.4 weighted-fair reclamation).
+
+        The pool can only shed its *tail* slots (the effective size is a
+        prefix of the slot array), so donation targets them directly: flush
+        everything staged (slots can't leave while they hold the only copy),
+        then reclaim the RECLAIMABLE slots inside the shrink window
+        out-of-FIFO-order — §5.2 safety comes from the slot state, not the
+        queue order; their stale queue entries are skipped later by the
+        (slot, page) match guard.  Returns pages actually donated — fewer
+        than asked when live (IN_USE) data pins the tail."""
+        pool = self.pool
+        target = max(pool.size - n_pages, pool.min_pages)
+        if target >= pool.size:
+            return 0
+        if self.policy.lazy_send:
+            self._flush(len(self.pipeline.staging))
+        slots_meta = pool.slots
+        stale = []
+        for slot in range(target, pool.size):
+            if slots_meta[slot].state is SlotState.RECLAIMABLE:
+                pg = pool.reclaim(slot)
+                if self.gpt.local_slot(pg) == slot:
+                    stale.append(pg)
+        if stale:
+            self.gpt.unmap_local_batch(np.asarray(stale, np.int64))
+        return pool.shrink_by(n_pages)

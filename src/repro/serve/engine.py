@@ -74,7 +74,9 @@ class ValetServeEngine:
                  max_batch: int, max_seq: int, page: int = 16,
                  pool_slots: int, min_pool: Optional[int] = None,
                  policy: Policy = VALET, costs: CostModel = TPU_COSTS,
-                 step_cost_us: float = 0.0, seed: int = 0):
+                 step_cost_us: float = 0.0, seed: int = 0,
+                 coordinator=None, container_name: Optional[str] = None,
+                 container_weight: float = 1.0):
         self.params = params
         self.cfg = cfg
         self.ctx = ctx
@@ -91,10 +93,25 @@ class ValetServeEngine:
                              if inf.uses_paged]
         self.caches = D.init_caches(cfg, max_batch, pool_slots=pool_slots,
                                     page=page)
+        # multi-tenant serving (§3.4): K engines register with one
+        # HostMemoryCoordinator, each leasing KV-pool pages on demand and
+        # donating FREE slots back when a co-located engine is under
+        # pressure.  The slot array (HBM reservation) stays ``pool_slots``;
+        # the *effective* pool size is what gets coordinated.
+        self.coordinator = coordinator
+        self._lease = None
+        if coordinator is not None:
+            self._lease = coordinator.register(
+                min_pages=min_pool or pool_slots, max_pages=pool_slots,
+                weight=container_weight, name=container_name)
         self.pool = ValetMempool(
             pool_slots,
             min_pages=min_pool or pool_slots,
-            max_pages=pool_slots)
+            max_pages=pool_slots,
+            lease=self._lease)
+        if coordinator is not None:
+            coordinator.set_donor(self._lease.cid, self._host_donate,
+                                  size_fn=lambda: self.pool.size)
         self.gpt = GlobalPageTable()
         self.tracker = ActivityTracker()
         self.host_store: Dict[int, Dict[int, Tuple[np.ndarray, np.ndarray]]] = {}
@@ -171,12 +188,24 @@ class ValetServeEngine:
         req.pages.append(pg)
         return pg
 
+    def _reserve(self, n: int) -> bool:
+        """Secure ``n`` FREE pool slots: grow first (leasing from the
+        coordinator when attached — possibly pulling idle co-tenants'
+        memory), and only preempt residents when growth is exhausted."""
+        return self.pool.ensure_free(n) or self._make_room(n)
+
+    def _host_donate(self, n_pages: int) -> int:
+        """Coordinator-requested donation: shed FREE slots back to the
+        shared slab (an idle engine's drained sequences are exactly the
+        unused memory §3.4 wants to hand to a busy co-tenant)."""
+        return self.pool.shrink_by(n_pages)
+
     def _alloc_pages(self, req: Request, n: int) -> bool:
         """Allocate ``n`` logical pages backed by pool slots, in bulk (one
         ``alloc_batch`` + one local-map scatter instead of a per-page loop)."""
         if n <= 0:
             return True
-        if self.pool.free_count() < n and not self._make_room(n):
+        if self.pool.free_count() < n and not self._reserve(n):
             return False
         pgs = list(range(self._next_page_id, self._next_page_id + n))
         slots = self.pool.alloc_batch(pgs, [self.step_counter] * n)
@@ -235,7 +264,7 @@ class ValetServeEngine:
         needed = parr[self.gpt.local_slots_batch(parr) < 0]
         n = needed.size
         if self.pool.free_count() < n:
-            if not self._make_room(n):
+            if not self._reserve(n):
                 return False
         if n == 0:
             return True
@@ -272,7 +301,7 @@ class ValetServeEngine:
         if not self._slots_free:
             return False
         need = self._pages_for(len(req.prompt) + 1)
-        if self.pool.free_count() < need and not self._make_room(need):
+        if self.pool.free_count() < need and not self._reserve(need):
             return False
         req.slot = self._slots_free.pop()
         if not self._alloc_pages(req, need):
@@ -301,7 +330,7 @@ class ValetServeEngine:
             full = np.concatenate([req.prompt,
                                    np.asarray(req.tokens_out[:-1], np.int64)])
             need = self._pages_for(len(full) + 1)
-            if self.pool.free_count() < need and not self._make_room(need):
+            if self.pool.free_count() < need and not self._reserve(need):
                 return False
             req.slot = self._slots_free.pop()
             if not self._alloc_pages(req, need):
@@ -390,6 +419,9 @@ class ValetServeEngine:
 
     def _step_active(self, active: List[Request], greedy: bool):
         self.step_counter += 1
+        if self._lease is not None:
+            # demand signal: busy engines are reclaimed from last (§3.4)
+            self.coordinator.note_activity(self._lease.cid, len(active))
         # one device->host transfer for every sequence length this step
         # (instead of one blocking scalar read per request)
         lengths = np.asarray(self.caches["lengths"])

@@ -1,0 +1,99 @@
+"""CLI contract of the benchmark regression gate: graceful failures for
+missing/malformed inputs, refresh refusal on incomplete results."""
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+FULL = {"batch_speedup": {"speedup": 4.0},
+        "reclaim_speedup": {"speedup": 3.6},
+        "multi_tenant": {"speedup": 1.3}}
+
+
+def run_gate(tmp_path, results, baseline, *extra):
+    tmp_path.mkdir(parents=True, exist_ok=True)
+    rp = tmp_path / "results.json"
+    bp = tmp_path / "baseline.json"
+    if results is not None:
+        rp.write_text(results if isinstance(results, str)
+                      else json.dumps(results))
+    if baseline is not None:
+        bp.write_text(json.dumps(baseline))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.check_regression",
+         "--results", str(rp), "--baseline", str(bp), *extra],
+        cwd=REPO, capture_output=True, text=True)
+    return proc, bp
+
+
+def test_gate_passes_on_matching_results(tmp_path):
+    proc, _ = run_gate(tmp_path, FULL, FULL)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "passed" in proc.stdout
+
+
+def test_gate_fails_on_regression(tmp_path):
+    bad = {k: {"speedup": v["speedup"] * 0.5} for k, v in FULL.items()}
+    proc, _ = run_gate(tmp_path, bad, FULL)
+    assert proc.returncode == 1
+    assert "REGRESSION" in proc.stdout
+
+
+def test_missing_tracked_key_fails_clearly(tmp_path):
+    partial = {k: v for k, v in FULL.items() if k != "multi_tenant"}
+    proc, _ = run_gate(tmp_path, partial, FULL)
+    assert proc.returncode == 1
+    assert "multi_tenant/speedup missing from results" in proc.stdout
+    assert "Traceback" not in proc.stderr
+
+
+def test_missing_results_file_fails_clearly(tmp_path):
+    proc, _ = run_gate(tmp_path, None, FULL)
+    assert proc.returncode == 2
+    assert "not found" in proc.stdout
+    assert "Traceback" not in proc.stderr
+
+
+def test_corrupt_results_file_fails_clearly(tmp_path):
+    proc, _ = run_gate(tmp_path, "{not json", FULL)
+    assert proc.returncode == 2
+    assert "not valid JSON" in proc.stdout
+    assert "Traceback" not in proc.stderr
+
+
+def test_malformed_entry_fails_clearly(tmp_path):
+    bad = dict(FULL, multi_tenant=[1, 2, 3])     # entry is not an object
+    proc, _ = run_gate(tmp_path, bad, FULL)
+    assert proc.returncode == 1
+    assert "multi_tenant/speedup missing from results" in proc.stdout
+    assert "Traceback" not in proc.stderr
+
+
+def test_non_numeric_metric_fails_clearly(tmp_path):
+    bad = dict(FULL, multi_tenant={"speedup": "1.3x"})
+    proc, _ = run_gate(tmp_path / "gate", bad, FULL)
+    assert proc.returncode == 1
+    assert "multi_tenant/speedup missing from results" in proc.stdout
+    assert "Traceback" not in proc.stderr
+    # and --refresh must refuse to persist it into the baseline
+    proc, bp = run_gate(tmp_path / "refresh", bad, None, "--refresh")
+    assert proc.returncode == 2
+    assert "REFUSED" in proc.stdout
+    assert not bp.exists()
+
+
+def test_refresh_writes_complete_baseline(tmp_path):
+    proc, bp = run_gate(tmp_path, FULL, None, "--refresh")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    written = json.loads(bp.read_text())
+    assert written == FULL
+
+
+def test_refresh_refuses_incomplete_results(tmp_path):
+    partial = {k: v for k, v in FULL.items() if k != "reclaim_speedup"}
+    proc, bp = run_gate(tmp_path, partial, None, "--refresh")
+    assert proc.returncode == 2
+    assert "REFUSED" in proc.stdout
+    assert not bp.exists(), "refused refresh must not write a baseline"

@@ -1,0 +1,268 @@
+"""HostMemoryCoordinator: cross-container slab arbitration (§3.4).
+
+Three contracts are pinned here:
+
+* **Conservation** — leased + free always equals the slab, every
+  container's lease mirrors its pool size exactly, and no container is
+  ever pushed below its ``min_pages`` floor, under randomized interleaved
+  traffic with pressure events and forced donations.
+* **N=1 parity** — a coordinator with a single container is *bitwise
+  identical* to a plain pool whose ``free_memory_fn`` reports the slab
+  size: same Stats, same per-op latencies, same pool sizing decisions.
+* **Arbitration direction** — under skew the idle container donates and
+  the busy one expands (idle-first, weighted-fair, floors respected).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (TieredPageStore, POLICIES, PAPER_COSTS,
+                        HostMemoryCoordinator, Tier)
+
+
+def make_store(*, coordinator=None, free_memory_fn=None, capacity=384,
+               min_pool=32, max_pool=320, seed=0, peers=4, blocks=256,
+               name=None, weight=1.0, grow_step=None):
+    return TieredPageStore(
+        POLICIES["valet"], PAPER_COSTS, pool_capacity=capacity,
+        min_pool=min_pool, max_pool=max_pool, n_peers=peers,
+        peer_capacity_blocks=blocks, pages_per_block=16, seed=seed,
+        free_memory_fn=free_memory_fn, grow_step=grow_step,
+        coordinator=coordinator, container_name=name,
+        container_weight=weight)
+
+
+# -- N=1 bitwise parity --------------------------------------------------------
+
+
+def drive_chunks(store, pages, is_write, chunk=64, events=None):
+    lats = []
+    for i in range(0, len(pages), chunk):
+        lats.append(store.access_batch(pages[i:i + chunk],
+                                       is_write[i:i + chunk]))
+        store.background_tick()
+        if events and i in events:
+            events[i](store)
+    return np.concatenate(lats)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_single_container_bitwise_parity(seed):
+    """A 1-container coordinator must be invisible: identical Stats,
+    latencies, pool sizing and slot states vs. the plain free_memory_fn
+    pool over a mixed trace with ticks, pool pressure and peer pressure."""
+    slab = 1024
+    rng = np.random.default_rng(seed)
+    n_ops = 4000
+    pages = np.clip(rng.zipf(1.2, n_ops), 1, 700) - 1
+    is_write = rng.random(n_ops) < 0.35
+    events = {
+        1024: lambda s: s.local_pressure(48),
+        2048: lambda s: s.peer_pressure(0, 4),
+        3072: lambda s: s.local_pressure(16),
+    }
+
+    plain = make_store(free_memory_fn=lambda: slab, seed=seed)
+    coord = HostMemoryCoordinator(slab)
+    managed = make_store(coordinator=coord, seed=seed, name="only")
+
+    la = drive_chunks(plain, pages, is_write, events=events)
+    lb = drive_chunks(managed, pages, is_write, events=events)
+
+    assert np.array_equal(la, lb), "per-op latencies diverged"
+    assert plain.stats == managed.stats
+    assert plain.step == managed.step
+    p, m = plain.pool, managed.pool
+    assert p.size == m.size
+    assert (p.n_grow, p.n_shrink, p.n_alloc_from_pool, p.n_reclaimed,
+            p.n_alloc_failed) == \
+        (m.n_grow, m.n_shrink, m.n_alloc_from_pool, m.n_reclaimed,
+         m.n_alloc_failed)
+    assert p._free == m._free, "free-list (slot assignment order) diverged"
+    assert [(s.state, s.logical_page) for s in p.slots] == \
+        [(s.state, s.logical_page) for s in m.slots]
+    # the page table resolves every page identically
+    hi = 700
+    for pg in range(hi):
+        assert plain.gpt.lookup(pg) == managed.gpt.lookup(pg), pg
+    # and the coordinator's books close: one lease covering the pool
+    coord.check_invariants()
+    assert coord.containers()[0].leased == m.size
+    assert coord.free() == slab - m.size
+
+
+# -- conservation + floors under randomized interleaving -----------------------
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_slab_conservation_randomized(seed):
+    """Random interleaved traffic across 3 containers with pressure events:
+    after every slice the slab is conserved, leases mirror pool sizes, and
+    nobody sits below its floor."""
+    total = 512
+    mins = [32, 48, 16]
+    coord = HostMemoryCoordinator(total)
+    stores = [make_store(coordinator=coord, capacity=total, min_pool=mins[c],
+                         max_pool=total - sum(mins) + mins[c], seed=seed + c,
+                         name=f"c{c}", grow_step=32)
+              for c in range(3)]
+    rng = np.random.default_rng(seed)
+    for step in range(120):
+        c = int(rng.integers(3))
+        st = stores[c]
+        kind = rng.random()
+        if kind < 0.70:
+            n = int(rng.integers(8, 96))
+            pages = rng.integers(0, 400, size=n)
+            st.access_batch(pages, rng.random(n) < 0.5)
+        elif kind < 0.80:
+            st.background_tick()
+        elif kind < 0.88:
+            st.peer_pressure(int(rng.integers(4)), int(rng.integers(1, 4)))
+        elif kind < 0.96:
+            st.local_pressure(int(rng.integers(8, 64)))
+        else:
+            st.drain()
+        coord.check_invariants()
+        for c2, s2 in enumerate(stores):
+            assert s2.pool.size >= mins[c2]
+            s2.pool.check_invariants()
+    # the tight slab must actually have exercised arbitration
+    assert coord.stats.n_lease_calls > 0
+    total_leased = sum(r.leased for r in coord.containers())
+    assert total_leased + coord.free() == total
+
+
+def test_min_pages_floor_survives_extreme_skew():
+    """One container hammers an oversized working set; the idle ones must
+    donate down to — but never through — their floors."""
+    total = 320
+    coord = HostMemoryCoordinator(total)
+    idle = [make_store(coordinator=coord, capacity=total, min_pool=32,
+                       max_pool=256, seed=c, name=f"idle{c}")
+            for c in range(2)]
+    hog = make_store(coordinator=coord, capacity=total, min_pool=32,
+                     max_pool=256, seed=9, name="hog", grow_step=64)
+    # idle containers build up some pool, then go quiet
+    for c, st in enumerate(idle):
+        st.access_batch(np.arange(150) + 1000 * c, True)
+        st.background_tick()
+        st.drain()
+        st.background_tick()
+    for r in range(30):
+        hog.access_batch(np.arange(r * 100, r * 100 + 100), True)
+        hog.background_tick()
+    coord.check_invariants()
+    for st in idle:
+        assert st.pool.size >= 32
+    assert hog.pool.size > 32, "hog never expanded"
+    assert coord.stats.pages_reclaimed > 0, "arbitration never fired"
+
+
+def test_idle_donates_before_busy():
+    """Weighted-fair reclamation is idle-first: with one busy and one idle
+    donor holding equal leases, the idle one donates (more)."""
+    total = 384
+    coord = HostMemoryCoordinator(total)
+    busy = make_store(coordinator=coord, capacity=total, min_pool=32,
+                      max_pool=320, seed=0, name="busy")
+    quiet = make_store(coordinator=coord, capacity=total, min_pool=32,
+                       max_pool=320, seed=1, name="quiet")
+    grower = make_store(coordinator=coord, capacity=total, min_pool=32,
+                        max_pool=320, seed=2, name="grower", grow_step=64)
+    for st in (busy, quiet):
+        st.access_batch(np.arange(120), True)
+        st.background_tick()
+        st.drain()
+        st.background_tick()
+    # only the busy one keeps producing demand signal
+    for r in range(6):
+        busy.access_batch(np.arange(80), False)
+    for r in range(12):
+        grower.access_batch(np.arange(r * 80, r * 80 + 80) + 5000, True)
+        grower.background_tick()
+    recs = {r.name: r for r in coord.containers()}
+    assert recs["quiet"].pages_donated_total >= \
+        recs["busy"].pages_donated_total
+    assert recs["quiet"].pages_donated_total > 0
+    coord.check_invariants()
+
+
+def test_registration_admission_control():
+    """Floors are reserved at admission; an overflowing floor is rejected."""
+    coord = HostMemoryCoordinator(100)
+    coord.register(min_pages=60, max_pages=100)
+    with pytest.raises(ValueError):
+        coord.register(min_pages=60, max_pages=100)
+    # a fitting one is fine afterwards
+    coord.register(min_pages=40, max_pages=80)
+    coord.check_invariants()
+
+
+def test_donation_respects_live_data():
+    """A donor whose tail slots hold live (IN_USE, staged) data donates only
+    what is actually free — never fabricates pages."""
+    total = 256
+    coord = HostMemoryCoordinator(total)
+    donor = make_store(coordinator=coord, capacity=total, min_pool=32,
+                       max_pool=224, seed=0, name="donor")
+    # fill the donor with unflushed writes (staging holds the only copy)
+    donor.access_batch(np.arange(100), True)
+    leased_before = donor.pool.size
+    got = donor.host_donate(500)
+    coord.check_invariants()
+    assert donor.pool.size == leased_before - got
+    assert donor.pool.size >= 32
+    # donation must not lose data: every written page still resolves to a
+    # live tier (donation flushes before it sheds, §5.2-safely)
+    for pg in range(100):
+        loc = donor.gpt.lookup(pg)
+        assert loc.tier in (Tier.LOCAL, Tier.PEER, Tier.HOST), (pg, loc)
+    donor.pipeline.check_invariants()
+
+
+# -- K serving engines against one coordinator ---------------------------------
+
+
+@pytest.mark.slow
+def test_two_engines_share_one_coordinator():
+    """Two ValetServeEngines lease KV pool pages from one coordinator under
+    an oversubscribed slab; outputs stay exact and the books close."""
+    import jax
+    from repro.configs import ARCHS, reduced
+    from repro.models import transformer as T
+    from repro.serve import ValetServeEngine
+
+    cfg = reduced(ARCHS["granite-3-8b"])
+    ctx = T.ParallelCtx(remat=False, q_block=8, kv_block=8, loss_chunk=8)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab, size=8) for _ in range(4)]
+
+    def run_pair(coordinated):
+        coord = HostMemoryCoordinator(40) if coordinated else None
+        engines = []
+        for e in range(2):
+            kw = dict(max_batch=2, max_seq=64, page=4, pool_slots=32,
+                      policy=POLICIES["valet"])
+            if coordinated:
+                kw.update(min_pool=8, coordinator=coord,
+                          container_name=f"eng{e}")
+            engines.append(ValetServeEngine(params, cfg, ctx, **kw))
+        outs = []
+        for e, eng in enumerate(engines):
+            for p in prompts[e * 2:(e + 1) * 2]:
+                eng.submit(p, max_new=8)
+        for eng in engines:
+            reqs = eng.run(max_steps=300)
+            assert all(r.status == "done" for r in reqs)
+            outs.append([r.tokens_out
+                         for r in sorted(reqs, key=lambda r: r.rid)])
+        return outs, coord, engines
+
+    ref, _, _ = run_pair(coordinated=False)
+    got, coord, engines = run_pair(coordinated=True)
+    assert got == ref, "coordinated engines diverged from reference decode"
+    coord.check_invariants()
+    for eng, rec in zip(engines, coord.containers()):
+        assert rec.leased == eng.pool.size
+        assert rec.leased >= 8

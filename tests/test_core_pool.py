@@ -71,6 +71,85 @@ def test_update_flag_blocks_reclaim():
     assert pool.slots[s].state == SlotState.RECLAIMABLE
 
 
+# -- grow/shrink boundary properties ------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(8, 24), st.integers(1, 80), st.integers(1, 512))
+def test_shrink_floor_holds_while_slots_in_use(min_pages, n_live, ask):
+    """Shrinking — pressure- or donation-driven — never drops below
+    ``min_pages`` and never releases a non-FREE slot, no matter how many
+    IN_USE slots exist or how large the shrink request is."""
+    pool = ValetMempool(128, min_pages=min_pages, max_pages=128,
+                        free_memory_fn=lambda: 256)
+    live = [s for s in (pool.alloc(pg, step=pg) for pg in range(n_live))
+            if s is not None]
+    pool.free_memory_fn = lambda: 0        # host pressure: shrink target = 0
+    pool.shrink_for_pressure()
+    pool.shrink_by(ask)
+    assert pool.size >= min_pages
+    assert pool.size >= len(live), "a live slot was shed"
+    for s in live:
+        assert pool.slots[s].state == SlotState.IN_USE
+    pool.check_invariants()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(8, 32), st.integers(16, 96), st.integers(100, 10_000))
+def test_maybe_grow_respects_max_pages(min_pages, max_pages, host_free):
+    """Growth never exceeds ``max_pages`` even with unbounded host memory,
+    and ``maybe_grow`` reports False once the cap binds."""
+    max_pages = max(max_pages, min_pages)
+    pool = ValetMempool(96, min_pages=min_pages, max_pages=max_pages,
+                        free_memory_fn=lambda: host_free)
+    for pg in range(3 * max_pages):
+        pool.alloc(pg, step=pg)
+        assert pool.size <= max_pages
+    if pool.size == max_pages:
+        assert not pool.maybe_grow()
+    pool.check_invariants()
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "release", "shrink_by",
+                                           "pressure", "grow"]),
+                          st.integers(1, 48)),
+                min_size=1, max_size=120),
+       st.integers(8, 24))
+def test_n_shrink_accounting_exact_interleaved(ops, min_pages):
+    """``n_shrink`` counts exactly the shrink calls that reduced the size
+    (and ``shrink_by`` returns exactly the released delta), under
+    interleaved alloc/release traffic."""
+    host_free = 96
+    pool = ValetMempool(96, min_pages=min_pages, max_pages=96,
+                        free_memory_fn=lambda: host_free)
+    live = []
+    expect_shrinks = 0
+    page = 0
+    for op, arg in ops:
+        before = pool.size
+        if op == "alloc":
+            s = pool.alloc(page, step=page)
+            if s is not None:
+                live.append(s)
+                page += 1
+        elif op == "release" and live:
+            pool.release(live.pop())
+        elif op == "shrink_by":
+            got = pool.shrink_by(arg)
+            assert got == before - pool.size
+            expect_shrinks += int(got > 0)
+        elif op == "pressure":
+            host_free = arg
+            pool.shrink_for_pressure()
+            expect_shrinks += int(pool.size < before)
+            host_free = 96
+        elif op == "grow":
+            pool.maybe_grow()
+        pool.check_invariants()
+    assert pool.n_shrink == expect_shrinks
+
+
 @settings(max_examples=50, deadline=None)
 @given(st.lists(st.sampled_from(["alloc", "reclaim", "grow", "shrink",
                                  "release"]), min_size=1, max_size=200),
