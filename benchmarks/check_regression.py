@@ -31,6 +31,7 @@ ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
 # (simulated us, deterministic — see paper_tables.multi_tenant).
 TRACKED = [
     ("batch_speedup", "speedup"),
+    ("pressure_speedup", "speedup"),
     ("reclaim_speedup", "speedup"),
     ("multi_tenant", "speedup"),
 ]

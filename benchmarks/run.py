@@ -12,8 +12,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     help="comma list: table1,fig8,fig9,fig10,fig19,fig22,"
-                         "fig23,batch_speedup,reclaim_speedup,multi_tenant,"
-                         "roofline")
+                         "fig23,batch_speedup,pressure_speedup,"
+                         "reclaim_speedup,multi_tenant,roofline")
     args = ap.parse_args()
     only = None if args.only == "all" else set(args.only.split(","))
 
@@ -30,6 +30,7 @@ def main() -> None:
         ("fig22", PT.fig22_scalability),
         ("fig23", PT.fig23_eviction),
         ("batch_speedup", PT.batch_speedup),
+        ("pressure_speedup", PT.pressure_speedup),
         ("reclaim_speedup", PT.reclaim_speedup),
         ("multi_tenant", PT.multi_tenant),
         ("victim", PT.victim_quality),

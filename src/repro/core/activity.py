@@ -78,6 +78,17 @@ class ActivityTracker:
         self._ensure(int(b.max()))
         self._last[b] = np.asarray(steps, np.int64)
 
+    def on_write_map(self, touch) -> None:
+        """``on_write_at`` from a ``{block id: step}`` dict — the shape the
+        bulk placement pass accumulates — without materializing two
+        intermediate Python lists (one ``fromiter`` per array instead)."""
+        n = len(touch)
+        if not n:
+            return
+        b = np.fromiter(touch.keys(), np.int64, count=n)
+        self._ensure(int(b.max()))
+        self._last[b] = np.fromiter(touch.values(), np.int64, count=n)
+
     def on_read_mass(self, blocks: Sequence[int], mass: Sequence[float]):
         """Accumulate attention-mass observations (beyond-paper activity).
 

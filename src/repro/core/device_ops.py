@@ -71,6 +71,24 @@ def write_prefill_pages(pool: KVPool, k_pages, v_pages, slots) -> KVPool:
     )
 
 
+def local_write_batch(pool: KVPool, k_pages, v_pages, slots) -> KVPool:
+    """Bulk local-pool write: scatter ``n`` whole pages into their slots.
+
+    k_pages/v_pages: (n, page, n_kv, hd); slots: (n,) int32.  This is the
+    device-side primitive behind a ``TieredPageStore`` data plane's
+    ``local_write_batch(pages, slots)`` hook: the adapter resolves its
+    logical page ids to page data, then lands the whole alloc run with one
+    ``.at[slots].set`` scatter instead of one device update per page (the
+    critical-path contract is unchanged: the write completes into the
+    local pool, no remote traffic).  ``slots`` must be distinct — an alloc
+    run pops each pool slot at most once, and XLA scatter-set does not
+    define an update order for duplicate indices."""
+    return KVPool(
+        pool.k.at[slots].set(k_pages),
+        pool.v.at[slots].set(v_pages),
+    )
+
+
 def copy_block(pool: KVPool, src_slot: jax.Array, dst_slot: jax.Array) -> KVPool:
     """Migration data plane: copy one slot's page (same pool or after a
     cross-device transfer).  Functional; a few HBM reads+writes."""

@@ -189,6 +189,15 @@ class GlobalPageTable:
             self._ensure(int(pages.max()))
         return self._l_slot[pages], self._r_tier[pages], self._r_peer[pages]
 
+    def lookup_raw_known(self, pages: np.ndarray
+                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """``lookup_raw`` minus the growth check, for pages the caller has
+        already resolved this batch (the tables cannot have shrunk since).
+        This is the targeted re-gather used after a boundary reclaim: only
+        the invalidated pages are re-classified, so the gather is a handful
+        of rows instead of the whole remaining batch."""
+        return self._l_slot[pages], self._r_tier[pages], self._r_peer[pages]
+
     def remote_raw_batch(self, pages: np.ndarray
                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
                                     np.ndarray]:
@@ -247,6 +256,24 @@ class GlobalPageTable:
         if pages.size:
             self._ensure(int(pages.max()))
         self._l_slot[pages] = slots
+
+    def unmap_if_current(self, pairs) -> List[int]:
+        """Drop local mappings that still point at their paired slot.
+
+        ``pairs`` is ``[(slot, page), ...]`` (a reclaim burst); a mapping is
+        dropped only when the page still resolves to that exact slot — the
+        sequential check-then-unmap semantics.  Returns the pages actually
+        unmapped.  This is the small-burst python path of the reclaim
+        unmapper: for ``pages_per_block``-sized bursts a tight loop over
+        array scalars beats the ~10-kernel gather/scatter pipeline.  Pages
+        must already be covered by the tables (they were mapped once)."""
+        l_slot = self._l_slot
+        out: List[int] = []
+        for slot, pg in pairs:
+            if l_slot[pg] == slot:
+                l_slot[pg] = -1
+                out.append(pg)
+        return out
 
     def unmap_local_batch(self, pages: np.ndarray):
         pages = np.asarray(pages, np.int64)

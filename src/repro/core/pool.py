@@ -128,6 +128,11 @@ class ValetMempool:
 
     def maybe_grow(self):
         """Paper: grow on demand at 80% usage, capped by max and host-free."""
+        if self.size >= self.max_pages:
+            # static pool (or already at max): growth is provably futile, so
+            # skip the usage/host-free probes — the alloc path calls this on
+            # every high-usage alloc (free_memory_fn is pure in this repo)
+            return False
         if self.usage_fraction() < self.GROW_THRESHOLD:
             return False
         host_cap = int(self.free_memory_fn() * self.HOST_FREE_FRACTION)
@@ -205,6 +210,72 @@ class ValetMempool:
             self.n_shrink += 1
         return released
 
+    # -- overrun prediction (plan-once batch engine) -------------------------
+
+    def alloc_prefix_capacity(self, n: int) -> int:
+        """How many of ``n`` upcoming single-slot allocations would succeed
+        back to back without a reclaim, counting the growth the alloc path
+        itself would trigger (the pre-alloc grow at an empty free list and
+        the 80%-usage opportunistic grow).
+
+        This is the free-deficit predictor behind the plan-once
+        ``access_batch`` engine: a batch segment is sized to exactly the
+        allocations that fit, so the first op that would overrun the pool
+        becomes an inline boundary event instead of a mid-bulk surprise.
+
+        The prediction is a LOWER bound by construction — callers feed it to
+        ``alloc_batch(..., allow_deficit=True)``, which asserts every alloc
+        lands.  It is exact (simulating the same growth arithmetic against
+        the same pure ``free_memory_fn``) except in two conservative
+        fallbacks where growth bookkeeping is state-dependent: pools with
+        coordinator leases (a grant cannot be probed without mutating the
+        coordinator) and pools with stranded non-UNBACKED slots beyond the
+        effective size (a prior shrink pinned live data in the tail) — both
+        fall back to the current FREE count, which is always safe."""
+        free = len(self._free)
+        if free >= n or n <= 0:
+            return min(free, n) if n > 0 else 0
+        size = self.size
+        if size >= self.max_pages or self.lease is not None:
+            return free
+        slots = self.slots
+        for i in range(size, min(self.max_pages, self.capacity)):
+            if slots[i].state is not SlotState.UNBACKED:
+                return free            # stranded tail: growth not predictable
+        grow_step = self.grow_step
+        max_pages = self.max_pages
+        min_pages = self.min_pages
+        thresh = self.GROW_THRESHOLD
+        host_frac = self.HOST_FREE_FRACTION
+        free_fn = self.free_memory_fn
+        used = self._used
+        count = 0
+
+        def sim_grow():
+            # mirrors maybe_grow for a clean (no-lease, clean-tail) pool;
+            # the usage precondition is checked by the callers below
+            nonlocal size, free
+            host_cap = int(free_fn() * host_frac)
+            target = min(size + grow_step, max_pages,
+                         max(host_cap, min_pages))
+            if target <= size:
+                return False
+            free += target - size
+            size = target
+            return True
+
+        while count < n:
+            if free == 0:
+                # scalar alloc's pre-grow: free list empty => usage is 1.0
+                if not sim_grow():
+                    break
+            free -= 1
+            used += 1
+            count += 1
+            if size < max_pages and used / max(size, 1) >= thresh:
+                sim_grow()
+        return count
+
     # -- allocation ---------------------------------------------------------
 
     def alloc(self, logical_page: int, step: int) -> Optional[int]:
@@ -229,7 +300,8 @@ class ValetMempool:
             self.maybe_grow()
         return slot
 
-    def alloc_batch(self, logical_pages, steps) -> Optional[List[int]]:
+    def alloc_batch(self, logical_pages, steps,
+                    allow_deficit: bool = False) -> Optional[List[int]]:
         """Bulk use-pool-first allocation: one slot per page, in order.
 
         Semantically identical to calling ``alloc`` once per page (same free-
@@ -242,22 +314,54 @@ class ValetMempool:
 
         Requires ``free_count() >= len(logical_pages)`` (the caller's batch
         guard); returns None without side effects otherwise.
+
+        ``allow_deficit=True`` lifts the up-front guard for callers that
+        pre-sized the batch with ``alloc_prefix_capacity``: the loop then
+        also replicates the scalar alloc's pre-grow (grow when the free list
+        is empty, before popping), and a pop that still cannot be served is
+        an assertion failure — the predictor promised it would land.
         """
         pages = list(logical_pages)
         n = len(pages)
-        if len(self._free) < n:
-            return None
         free = self._free
+        if len(free) < n and not allow_deficit:
+            return None
         slots_meta = self.slots
         thresh = self.GROW_THRESHOLD
         can_grow = self.size < self.max_pages
         size = self.size
         used = self._used
         out: List[int] = []
+        in_use = SlotState.IN_USE
+        if not can_grow:
+            # static-size pool (or already at max): no growth trigger can
+            # fire, so the per-alloc usage arithmetic drops out entirely
+            for pg, stp in zip(pages, steps):
+                slot = free.pop()
+                m = slots_meta[slot]
+                m.state = in_use
+                m.logical_page = pg
+                m.last_activity = stp
+                m.update_flag = False
+                m.reclaim_flag = False
+                out.append(slot)
+                if slot < size:
+                    used += 1
+            self._used = used
+            self.n_alloc_from_pool += n
+            return out
         for pg, stp in zip(pages, steps):
+            if not free:
+                # scalar alloc's pre-grow: only reachable in deficit mode
+                # (the guard above keeps the classic path pop-safe)
+                self.maybe_grow()
+                size = self.size
+                used = self._used
+                can_grow = size < self.max_pages
+                assert free, "alloc_batch deficit: predictor overpromised"
             slot = free.pop()
             m = slots_meta[slot]
-            m.state = SlotState.IN_USE
+            m.state = in_use
             m.logical_page = pg
             m.last_activity = stp
             m.update_flag = False

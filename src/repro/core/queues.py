@@ -40,12 +40,17 @@ class StagingQueue:
     def __init__(self, max_entries: int):
         self.max_entries = max_entries
         self._q: Deque[WriteSet] = deque()
+        self._n_held = 0               # entries currently parked (migration)
 
     def __len__(self):
         return len(self._q)
 
     def full(self) -> bool:
         return len(self._q) >= self.max_entries
+
+    def room(self) -> int:
+        """Free staging entries — the batch engine's overrun bound."""
+        return self.max_entries - len(self._q)
 
     def push(self, ws: WriteSet) -> bool:
         if self.full():
@@ -57,25 +62,38 @@ class StagingQueue:
         return self._q[0] if self._q else None
 
     def take_batch(self, n: int, skip_held: bool = True) -> List[WriteSet]:
-        """Dequeue up to n sendable entries (held entries stay, FIFO kept)."""
+        """Dequeue up to n sendable entries (held entries stay, FIFO kept).
+
+        With no held entries (the common case — migrations are rare events)
+        the whole batch pops without inspecting per-entry hold flags."""
+        q = self._q
+        if not self._n_held or not skip_held:
+            take = min(n, len(q))
+            out = [q.popleft() for _ in range(take)]
+            if self._n_held:               # skip_held=False popped held ones
+                self._n_held -= sum(1 for ws in out if ws.migrating_hold)
+            return out
         out: List[WriteSet] = []
         requeue: List[WriteSet] = []
-        while self._q and len(out) < n:
-            ws = self._q.popleft()
-            if skip_held and ws.migrating_hold:
+        while q and len(out) < n:
+            ws = q.popleft()
+            if ws.migrating_hold:
                 requeue.append(ws)
             else:
                 out.append(ws)
         for ws in reversed(requeue):
-            self._q.appendleft(ws)
+            q.appendleft(ws)
         return out
 
     def hold_pages(self, pages, hold: bool):
         """Park/unpark write-sets touching ``pages`` (migration §3.5)."""
         pages = set(pages)
+        held = self._n_held
         for ws in self._q:
-            if pages.intersection(ws.pages):
+            if ws.migrating_hold != hold and pages.intersection(ws.pages):
                 ws.migrating_hold = hold
+                held += 1 if hold else -1
+        self._n_held = held
 
     def entries(self) -> List[WriteSet]:
         return list(self._q)
@@ -126,9 +144,17 @@ class ReclaimableQueue:
         reclaimable = SlotState.RECLAIMABLE
         free_state = SlotState.FREE
         freed: List[Tuple[int, int]] = []
+        append = freed.append
+        free_append = free_list.append
+        popleft = q.popleft
         while q and len(freed) < n_slots:
-            ws = q.popleft()
-            for slot, pg in zip(ws.slots, ws.pages):
+            ws = popleft()
+            slots = ws.slots
+            if len(slots) == 1:
+                # the dominant shape (one write transaction = one page):
+                # no zip machinery, no inner loop
+                slot = slots[0]
+                pg = ws.pages[0]
                 m = meta[slot]
                 if m.state is reclaimable and m.logical_page == pg:
                     m.state = free_state
@@ -137,9 +163,22 @@ class ReclaimableQueue:
                     m.reclaim_flag = False
                     if slot < size:
                         used -= 1
-                    free_list.append(slot)
+                    free_append(slot)
                     n_rec += 1
-                    freed.append((slot, pg))
+                    append((slot, pg))
+                continue
+            for slot, pg in zip(slots, ws.pages):
+                m = meta[slot]
+                if m.state is reclaimable and m.logical_page == pg:
+                    m.state = free_state
+                    m.logical_page = -1
+                    m.update_flag = False
+                    m.reclaim_flag = False
+                    if slot < size:
+                        used -= 1
+                    free_append(slot)
+                    n_rec += 1
+                    append((slot, pg))
         pool._used = used
         pool.n_reclaimed = n_rec
         return freed
@@ -169,28 +208,54 @@ class WritePipeline:
     def write(self, pages: Tuple[int, ...], step: int,
               alloc_fallback=None) -> Optional[WriteSet]:
         """Accept a write transaction into the pool.  Returns the WriteSet
-        (write is complete for the caller) or None if allocation failed."""
+        (write is complete for the caller) or None if allocation failed or
+        the staging queue is full — either way with NO residual effects
+        (slots released, pending-slot map and §5.2 flags restored), so the
+        caller's reclaim/stall retry sequence never strands IN_USE slots."""
         slots = []
+        prevs = []
+        pend = self._pending_slot
         for pg in pages:
             slot = self.pool.alloc(pg, step)
             if slot is None and alloc_fallback is not None:
                 slot = alloc_fallback(pg, step)
             if slot is None:
-                for s in slots:                      # roll back transaction
-                    self.pool.release(s)
+                self._rollback(pages, slots, prevs)
                 return None
-            prev = self._pending_slot.get(pg)
+            prev = pend.get(pg)
             if prev is not None:
                 # §5.2 multiple updates: older slot must not be reclaimed
                 # before this newer write-set is sent.
                 self.pool.slots[prev].update_flag = True
-            self._pending_slot[pg] = slot
+            prevs.append(prev)
+            pend[pg] = slot
             slots.append(slot)
         ws = WriteSet(self._seq, tuple(pages), tuple(slots))
-        self._seq += 1
         if not self.staging.push(ws):
+            # staging overrun: the write did NOT happen — undo everything
+            # (leaking here would pin the slots IN_USE forever: they are
+            # neither staged nor reclaimable)
+            self._rollback(pages, slots, prevs)
             return None
+        self._seq += 1
         return ws
+
+    def _rollback(self, pages, slots, prevs):
+        """Undo a partially accepted write transaction: release the slots
+        and restore each page's previous pending slot + its §5.2 flag (the
+        latest pending slot is never update-flagged, so clearing is exact).
+        """
+        pend = self._pending_slot
+        meta = self.pool.slots
+        # newest-first so duplicate pages in one transaction unwind exactly
+        # (zip truncates to the pages actually processed before the failure)
+        for pg, slot, prev in reversed(list(zip(pages, slots, prevs))):
+            if prev is not None:
+                meta[prev].update_flag = False
+                pend[pg] = prev
+            else:
+                pend.pop(pg, None)
+            self.pool.release(slot)
 
     def stage_batch(self, pages, slots) -> Optional[List[WriteSet]]:
         """Stage one single-page WriteSet per (page, slot) pair in bulk.
@@ -224,6 +289,30 @@ class WritePipeline:
             out.append(ws)
         self._seq = seq
         return out
+
+    def staging_room(self) -> int:
+        """Writes acceptable before the staging queue overruns — the batch
+        engine bounds each bulk segment with this, so the op that would
+        stall lands on the inline boundary path instead."""
+        return self.staging.room()
+
+    def complete_fill_batch(self, pages, slots):
+        """Cache-fill bookkeeping in bulk: each filled slot is clean (a
+        remote copy exists), so it is marked reclaimable and queued as its
+        own single-page write-set — the exact per-slot transitions of the
+        scalar ``_cache_fill`` tail (``mark_reclaimable`` + push), with the
+        method dispatch hoisted out of the loop."""
+        meta = self.pool.slots
+        q = self.reclaimable._q
+        reclaimable = SlotState.RECLAIMABLE
+        for pg, slot in zip(pages, slots):
+            m = meta[slot]
+            if m.update_flag:          # §5.2 deferral, as mark_reclaimable
+                m.update_flag = False
+            else:
+                m.state = reclaimable
+                m.reclaim_flag = True
+            q.append(WriteSet(-1, (pg,), (slot,)))
 
     def flush(self, n: int, send_fn) -> List[WriteSet]:
         """Remote Sender Thread step: coalesce + send + mark reclaimable."""
@@ -267,10 +356,15 @@ class WritePipeline:
         push = self.reclaimable.push
         reclaimable = SlotState.RECLAIMABLE
         for ws in batch:
-            for pg, slot in zip(ws.pages, ws.slots):
+            slots = ws.slots
+            if len(slots) == 1:       # dominant shape: one page per ws
+                pairs = ((ws.pages[0], slots[0]),)
+            else:
+                pairs = zip(ws.pages, slots)
+            for pg, slot in pairs:
                 if pend.get(pg) == slot:
                     del pend[pg]
-                d = deferred.pop(pg, None)
+                d = deferred.pop(pg, None) if deferred else None
                 if d is not None:
                     m = slots_meta[d]
                     if m.update_flag:

@@ -147,6 +147,16 @@ class TieredPageStore:
             if n_peers >= 2 else None
         self.placer = ReplicaPlacer(self.rng)
         self.host_pages: Dict[int, bool] = {}
+        # dense mirror of host_pages membership (append-only): batch
+        # classification gathers it instead of probing the dict per page
+        self._host_mask = np.zeros(1 << 12, bool)
+        # cached peer-failed vector (invalidated by fail_peer) — peers only
+        # ever fail through fail_peer, so the batch paths never rebuild it
+        self._peer_failed = np.zeros(max(n_peers, 1), bool)
+        # boundary events of the plan-once batch engine install a list here;
+        # _reclaim appends every page whose local mapping it drops, so the
+        # engine re-classifies exactly the invalidated pages afterwards
+        self._unmap_log: Optional[list] = None
         self.host_capacity = host_capacity
         # the engine sees encoded block ids (peer<<20|slot); decode for the
         # slot-level data/metadata callbacks
@@ -159,6 +169,21 @@ class TieredPageStore:
             free_fn=lambda p, b: self._free_block(p, dec(b)),
             park_fn=self._park_pages,
             rng=self.rng)
+
+    # -- host-tier membership --------------------------------------------------
+
+    def _host_add(self, page: int):
+        """Record a host-tier spill in both the dict (scalar probes) and the
+        dense membership bitmap (batch classification gathers)."""
+        self.host_pages[page] = True
+        hm = self._host_mask
+        if page >= hm.shape[0]:
+            grown = np.zeros(max(hm.shape[0] * 2, page + 1), bool)
+            grown[:hm.shape[0]] = hm
+            self._host_mask = grown
+            self._host_mask[page] = True
+        else:
+            hm[page] = True
 
     # -- block-id helpers ------------------------------------------------------
 
@@ -184,10 +209,20 @@ class TieredPageStore:
             self.stats.time_us += self.costs.map_block
         return slot
 
-    def _free_block(self, peer: int, slot: int):
+    def _free_block(self, peer: int, slot: int, *,
+                    free_replicas: bool = False):
+        """Release one MR block.
+
+        ``free_replicas=True`` (the delete-eviction paths) additionally
+        garbage-collects the freed primary's replica blocks: a replica that
+        no page references any more — neither as its primary location (a
+        ``repoint_replica`` promotion) nor in its replica tuple — is dead
+        weight on its peer and is freed too.  Migration keeps the default:
+        a migrated primary's pages still carry their replica tuples, so
+        those blocks stay live (they are merely detached here)."""
         self.peers[peer].used -= 1
         key = (peer, slot)
-        self.blocks.pop(key, None)
+        pages = self.blocks.pop(key, None)
         if self._open_block.get(peer) == key:
             self._open_block.pop(peer)
         prim = self._replica_of.pop(key, None)
@@ -198,8 +233,29 @@ class TieredPageStore:
                                                   if r != key)
         for r in self.block_replicas.pop(key, ()):
             # freeing a primary orphans its replicas: they stop being
-            # replicas (and become ordinary eviction candidates)
+            # replicas (and become ordinary eviction candidates) ...
             self._replica_of.pop(r, None)
+            if free_replicas and not self._block_referenced(r):
+                # ... unless nothing references them at all — then the
+                # orphan would leak its peer memory forever (ROADMAP
+                # follow-up): free it symmetrically with its primary
+                self._free_block(*r)
+        return pages
+
+    def _block_referenced(self, key: Tuple[int, int]) -> bool:
+        """True if any page in ``key``'s block still resolves to it — as its
+        remote primary (replica promotion) or inside its replica tuple."""
+        peer, slot = key
+        for pg in self.blocks.get(key, ()):
+            loc = self.gpt.remote_location(pg)
+            if loc is None:
+                continue
+            if loc.tier == Tier.PEER and loc.peer == peer \
+                    and loc.slot == slot:
+                return True
+            if key in loc.replicas:
+                return True
+        return False
 
     def _copy_block(self, src_peer, src_slot, dst_peer, dst_slot):
         pages = self.blocks.get((src_peer, src_slot), [])
@@ -312,9 +368,9 @@ class TieredPageStore:
         peers = self.peers
         if not pol.use_remote or not peers:
             if flush:
-                hp = self.host_pages
+                hadd = self._host_add
                 for pg in pages:
-                    hp[pg] = True
+                    hadd(pg)
             else:
                 st.time_us = self._accumulate_time(
                     st.time_us, np.full(n, spill_cost, np.float64))
@@ -339,12 +395,13 @@ class TieredPageStore:
         place_reps = self.placer.place
         use_local_pool = pol.use_local_pool
         step = self.step
-        hp = self.host_pages
+        hadd = self._host_add
         connects = st.connects
         maps = st.maps
         t = st.time_us
         touch: Dict[int, int] = {}          # block id -> last-writer step
-        # per-peer open-block cache: [slot, page_list, replicas, rep_lists]
+        # per-peer open-block cache:
+        # [slot, page_list, replicas, rep_lists, block id]
         open_cache: Dict[int, list] = {}
 
         def load_open(peer):
@@ -353,7 +410,8 @@ class TieredPageStore:
                 return None
             lst = blocks[blk]
             reps = tuple(block_replicas.get(blk, ()))
-            entry = [blk[1], lst, reps, [blocks[r] for r in reps]]
+            entry = [blk[1], lst, reps, [blocks[r] for r in reps],
+                     peer * (1 << 20) + blk[1]]
             open_cache[peer] = entry
             return entry
 
@@ -416,12 +474,13 @@ class TieredPageStore:
                                     rep_lists.append(r[1])
                                     self._replica_of[(rp, r[0])] = \
                                         (peer, slot)
-                        entry = [slot, lst, tuple(reps), rep_lists]
+                        entry = [slot, lst, tuple(reps), rep_lists,
+                                 peer * (1 << 20) + slot]
                         block_replicas[(peer, slot)] = entry[2]
                         open_cache[peer] = entry
                 if entry is not None:
                     entry[1].append(pg)
-                    touch[peer * (1 << 20) + entry[0]] = step
+                    touch[entry[4]] = step
                     for rl in entry[3]:
                         rl.append(pg)
                     tiers[i] = peer_tier
@@ -431,7 +490,7 @@ class TieredPageStore:
                     costs[i] = hit_cost
                     placed = True
             if not placed and flush:
-                hp[pg] = True
+                hadd(pg)
             if not flush:
                 t += costs[i]
 
@@ -442,7 +501,7 @@ class TieredPageStore:
             p.connected = connected[j]
         self._next_block_slot = next_slot
         if touch:
-            self.tracker.on_write_at(list(touch.keys()), list(touch.values()))
+            self.tracker.on_write_map(touch)
         st.connects = connects
         st.maps = maps
         if not flush:
@@ -475,7 +534,7 @@ class TieredPageStore:
                 lat += self.costs.local_write
             else:
                 lat += self.costs.cold_write       # total pressure: spill cold
-                self.host_pages[page] = True
+                self._host_add(page)
         else:
             # write-through systems: remote send in the critical path
             loc = self._place_remote(page)
@@ -529,16 +588,17 @@ class TieredPageStore:
         sequence — Stats (counts AND accumulated microseconds) are bitwise
         equal to the scalar loop.
 
-        For local-pool policies (Valet) the whole mixed batch is handled in
-        vectorized prefixes: one ``GlobalPageTable.lookup_batch`` gather
-        resolves every location, intra-batch dependencies (read-after-write,
-        duplicate reads after a cache fill) are resolved with grouped
-        cumulative write counts, then pool allocation (writes + cache fills,
-        in op order) and write-set staging happen in bulk and costs
-        accumulate per group.  A prefix ends where the pool free list or the
-        staging queue would be overrun — the next op runs through the scalar
-        reference path (performing the reclaim / stall exactly as the scalar
-        loop would) and a fresh prefix starts after it.
+        For local-pool policies (Valet) the whole mixed batch runs through
+        the plan-once engine (``_access_pooled``): one snapshot gather plus
+        one stable argsort resolve every location and intra-batch dependency
+        (read-after-write, duplicate reads after a cache fill) up front,
+        then the batch executes as bulk segments separated by inline
+        boundary events.  A segment ends where the pool free list (growth
+        included) or the staging queue would be overrun; the overrunning op
+        replays the exact scalar reclaim / flush-stall schedule inline, and
+        only the pages that event invalidated are re-classified — the batch
+        is never re-analyzed, which keeps the tight-pool (high eviction
+        pressure) regime vectorized.
 
         Write-through policies run per homogeneous run: reads (which never
         mutate state — there is no local pool to fill) are classified with
@@ -557,10 +617,7 @@ class TieredPageStore:
             # never changes classification, rng draws, or Stats.
             self.coordinator.note_activity(self._lease.cid, n)
         if self.policy.use_local_pool:
-            start = 0
-            while start < n:
-                start += self._access_prefix(pages[start:], iw[start:],
-                                             lats[start:])
+            self._access_pooled(pages, iw, lats)
             return lats
         i = 0
         while i < n:
@@ -582,16 +639,25 @@ class TieredPageStore:
     # classification codes, mirroring the scalar read's resolution order
     _CLS_LOCAL, _CLS_REMOTE, _CLS_HOST, _CLS_COLD = 0, 1, 2, 3
 
-    def _snapshot_classes(self, pages: np.ndarray) -> np.ndarray:
-        """Vectorized read classification against the current table state."""
+    def _snapshot_classes(self, pages: np.ndarray, *,
+                          known: bool = False) -> np.ndarray:
+        """Vectorized read classification against the current table state.
+
+        Fully gather-based: host-tier membership comes from the dense
+        ``_host_mask`` bitmap and peer liveness from the cached
+        ``_peer_failed`` vector, so there is no per-page Python in here.
+        ``known=True`` skips the page-table growth check (targeted
+        re-gathers over pages already resolved this batch)."""
         n = pages.size
-        l_slot, r_tier, r_peer = self.gpt.lookup_raw(pages)
+        if known:
+            l_slot, r_tier, r_peer = self.gpt.lookup_raw_known(pages)
+        else:
+            l_slot, r_tier, r_peer = self.gpt.lookup_raw(pages)
         is_local = l_slot >= 0
         is_peer = ~is_local & (r_tier == int(Tier.PEER))
         remote_hit = is_peer
         if is_peer.any():
-            failed = np.fromiter((p.failed for p in self.peers), bool,
-                                 count=len(self.peers))
+            failed = self._peer_failed
             if failed.any():
                 remote_hit = is_peer.copy()
                 pi = np.flatnonzero(is_peer)
@@ -600,10 +666,11 @@ class TieredPageStore:
         host_hit = np.zeros(n, bool)
         if rest.any():
             ri = np.flatnonzero(rest)
-            hp = self.host_pages
-            if hp:
-                memb = np.fromiter((int(p) in hp for p in pages[ri]), bool,
-                                   count=ri.size)
+            if self.host_pages:
+                hm = self._host_mask
+                pr = pages[ri]
+                memb = (pr < hm.shape[0]) \
+                    & hm[np.minimum(pr, hm.shape[0] - 1)]
                 host_hit[ri] = (r_tier[ri] == int(Tier.HOST)) | memb
             else:
                 host_hit[ri] = r_tier[ri] == int(Tier.HOST)
@@ -628,6 +695,14 @@ class TieredPageStore:
             self._lut_cache = lut
         return lut
 
+    def _cost_list(self) -> list:
+        """``_cost_lut`` as a plain list (python-loop segment replay)."""
+        ll = getattr(self, "_lut_list", None)
+        if ll is None:
+            ll = self._cost_lut().tolist()
+            self._lut_list = ll
+        return ll
+
     @staticmethod
     def _accumulate_time(t: float, costs: np.ndarray) -> float:
         """Left-to-right float accumulation of ``t + c0 + c1 + ...`` — the
@@ -638,10 +713,25 @@ class TieredPageStore:
         tmp[1:] = costs
         return float(np.add.accumulate(tmp)[-1])
 
-    def _access_prefix(self, pages: np.ndarray, iw: np.ndarray,
-                       out_lats: np.ndarray) -> int:
-        """Process the largest safe prefix of a mixed batch in bulk, plus one
-        scalar op if the prefix stopped early.  Returns ops consumed."""
+    def _access_pooled(self, pages: np.ndarray, iw: np.ndarray,
+                       out_lats: np.ndarray) -> None:
+        """Plan-once batch engine for local-pool policies.
+
+        The dependency analysis — one stable argsort by page, the per-page
+        group structure, the effective per-op classes and the alloc plan —
+        is computed ONCE for the whole batch.  The batch then executes as
+        bulk segments separated by *inline boundary events*: a segment is
+        sized so its allocations fit the pool (``alloc_prefix_capacity``,
+        growth included) and its writes fit the staging queue, and the op
+        that would overrun runs through ``_boundary_write`` /
+        ``_boundary_fill_read``, which replay the exact scalar schedule
+        (same ``_reclaim(pages_per_block)`` sizes, same flush-stall
+        accounting, same rng draw order).  After the event, only the pages
+        the reclaim/fill invalidated are re-classified (one targeted
+        ``lookup_raw`` gather) and their remaining ops re-planned — the
+        batch is never re-sorted or re-snapshotted, so ``Stats`` stay
+        bitwise identical to the scalar loop at a fraction of the old
+        prefix-restart cost under pressure."""
         n = pages.size
         cls = self._snapshot_classes(pages)
         fillable = (cls == self._CLS_REMOTE) | (cls == self._CLS_HOST)
@@ -659,7 +749,7 @@ class TieredPageStore:
             st.ops += n
             out_lats[:n] = costs
             self.step += n
-            return n
+            return
 
         # group ops by page (argsort stable ⇒ op order within each group) to
         # resolve dependencies: a read behind a write to the same page is a
@@ -673,6 +763,7 @@ class TieredPageStore:
         np.not_equal(pg_s[1:], pg_s[:-1], out=new_grp[1:])
         starts = np.flatnonzero(new_grp)
         sizes = np.diff(np.append(starts, n))
+        group_pages = pg_s[starts]                 # unique pages, ascending
         cw = np.cumsum(iw_s)                       # writes, cumulative
         wr_before_s = cw - np.repeat(cw[starts] - iw_s[starts], sizes) - iw_s
         cand_s = ~iw_s & (wr_before_s == 0)        # reads seeing table state
@@ -687,81 +778,404 @@ class TieredPageStore:
         decider[order] = first_cand_s
 
         fill = decider & fillable
-        eff = cls.copy()                           # effective per-op class
+        eff = cls                                  # effective per-op class
         # LOCAL for reads behind a same-page write, and for reads of a
         # remote/host page behind its cache-filling first read; writes carry
         # the sentinel class 4 (prices + counts them in one pass)
         eff[~iw & (has_ew | (cand & ~decider & fillable))] = self._CLS_LOCAL
         eff[iw] = 4
-
-        # safe-prefix bound: allocations (writes + fills) must fit the free
-        # list (no reclaim may run mid-prefix — it unmaps local pages) and
-        # writes must fit the staging queue (no stall may run mid-prefix)
-        m = n
         alloc_mask = iw | fill
-        cum_alloc = np.cumsum(alloc_mask)
-        free = self.pool.free_count()
-        if cum_alloc[-1] > free:
-            m = int(np.searchsorted(cum_alloc, free, side="right"))
-        room = self.pipeline.staging.max_entries - len(self.pipeline.staging)
-        n_writes = int(cw[-1])
-        if n_writes > room:
-            cum_wr = np.cumsum(iw)
-            if cum_wr[-1] > room:
-                m = min(m, int(np.searchsorted(cum_wr, room, side="right")))
+        # last op position per group: a boundary event only re-plans groups
+        # that still have ops after it (vectorized via this gather)
+        glast = order[starts + sizes - 1]
+        pages_l = pages.tolist()        # one materialization for the batch
 
-        if m:
-            # bulk allocation in op order: identical free-list pops and
-            # growth triggers as the scalar sequence of write/fill allocs
-            alloc_idx = np.flatnonzero(alloc_mask[:m])
-            step0 = self.step
-            if alloc_idx.size:
-                apages = pages[alloc_idx].tolist()
-                asteps = (alloc_idx + (step0 + 1)).tolist()
-                slots = self.pool.alloc_batch(apages, asteps)
+        # running-cumulative bounds: the write cumsum is fixed for the batch
+        # (is_write never changes); the alloc cumsum is recomputed only when
+        # a boundary event actually re-planned some group (rare)
+        cum_wr = np.cumsum(iw)
+        total_w = int(cum_wr[-1])
+        cum_alloc = np.cumsum(alloc_mask)
+        total_a = int(cum_alloc[-1])
+
+        # boundary-side lookup structures, built lazily on the first
+        # boundary (pressure-free batches never pay for them)
+        page_group = None
+        glast_l = None
+
+        s = 0
+        while s < n:
+            # segment bound: allocations (writes + fills) must fit what the
+            # pool can serve without a reclaim (growth included) and writes
+            # must fit the staging queue (no stall may run mid-segment)
+            base_a = int(cum_alloc[s - 1]) if s else 0
+            need = total_a - base_a
+            cap = self.pool.alloc_prefix_capacity(need)
+            if cap >= need:
+                m = n - s
+            else:
+                m = int(np.searchsorted(cum_alloc, base_a + cap,
+                                        side="right")) - s
+            room = self.pipeline.staging_room()
+            base_w = int(cum_wr[s - 1]) if s else 0
+            if total_w - base_w > room:
+                mw = int(np.searchsorted(cum_wr, base_w + room,
+                                         side="right")) - s
+                if mw < m:
+                    m = mw
+            if m:
+                self._run_segment(pages, iw, eff, alloc_mask, pages_l,
+                                  s, m, out_lats, lut)
+                s += m
+            if s < n:
+                if page_group is None:
+                    page_group = {p: g for g, p in
+                                  enumerate(group_pages.tolist())}
+                    glast_l = glast.tolist()
+                s, replanned = self._boundary_event(
+                    pages_l, iw, eff, alloc_mask, s, out_lats,
+                    order, starts, sizes, group_pages, page_group, glast_l)
+                if replanned:
+                    cum_alloc = np.cumsum(alloc_mask)
+                    total_a = int(cum_alloc[-1])
+
+    def _run_segment(self, pages, iw, eff, alloc_mask, pages_l, s, m,
+                     out_lats, lut):
+        """Execute one bulk segment [s, s+m) whose allocations are known to
+        fit: identical free-list pops and growth triggers as the scalar
+        sequence of write/fill allocs, then grouped cost accounting.
+
+        Short segments (the shape memory pressure forces: the pool frees
+        only ``pages_per_block`` slots per boundary reclaim) take a plain
+        Python replay — the fixed per-call cost of ~25 numpy kernels on
+        16-element arrays loses to a tight loop there, and the accounting
+        (sequential float adds in op order) is bitwise identical."""
+        if m <= 64:
+            return self._run_segment_small(pages_l, eff, alloc_mask, s, m,
+                                           out_lats)
+        e = s + m
+        alloc_idx = s + np.flatnonzero(alloc_mask[s:e])
+        if alloc_idx.size:
+            apages = pages[alloc_idx].tolist()
+            asteps = (alloc_idx + (self.step + 1 - s)).tolist()
+            slots = self.pool.alloc_batch(apages, asteps, allow_deficit=True)
+            assert slots is not None
+            self.gpt.map_local_batch(pages[alloc_idx],
+                                     np.asarray(slots, np.int64))
+            w_alloc = iw[alloc_idx]
+            if w_alloc.all():
+                self.pipeline.stage_batch(apages, slots)
+            else:
+                wsel = np.flatnonzero(w_alloc)
+                if wsel.size:
+                    self.pipeline.stage_batch([apages[k] for k in wsel],
+                                              [slots[k] for k in wsel])
+                # filled slots are clean (a remote copy exists):
+                # immediately reclaimable, no send needed
+                fsel = np.flatnonzero(~w_alloc)
+                self.pipeline.complete_fill_batch(
+                    [apages[k] for k in fsel], [slots[k] for k in fsel])
+            if self.data_plane is not None:
+                lw_batch = getattr(self.data_plane, "local_write_batch",
+                                   None)
+                if lw_batch is not None:
+                    # one gather/scatter for the whole alloc run (fills and
+                    # write allocs alike) instead of one update per page
+                    lw_batch(apages, slots)
+                else:
+                    for pg, sl in zip(apages, slots):
+                        self.data_plane.local_write(pg, sl)
+
+        st = self.stats
+        effm = eff[s:e]
+        counts5 = np.bincount(effm, minlength=5)
+        st.writes += int(counts5[4])
+        st.ops += m
+        st.local_hits += int(counts5[0])
+        st.remote_hits += int(counts5[1])
+        st.host_hits += int(counts5[2])
+        st.cold_hits += int(counts5[3])
+        costs = lut[effm]
+        st.time_us = self._accumulate_time(st.time_us, costs)
+        out_lats[s:e] = costs
+        self.step += m
+
+    def _run_segment_small(self, pages_l, eff, alloc_mask, s, m, out_lats):
+        """Python replay of a short segment: same alloc/stage/fill sequence
+        and the same sequential double-add cost accumulation as the numpy
+        path (and the scalar loop), with no per-kernel numpy overhead.
+
+        For a pool that cannot grow (the pressure regime: it sits pinned at
+        ``max_pages``), allocation, local mapping, staging and fill
+        bookkeeping are fused into the accounting loop in scalar op order —
+        the identical per-slot transitions with no intermediate lists and
+        no second pass.  Growable pools keep the batched sub-calls (their
+        growth triggers live inside ``alloc_batch``)."""
+        e = s + m
+        eff_l = eff[s:e].tolist()
+        am_l = alloc_mask[s:e].tolist()
+        lut_l = self._cost_list()
+        st = self.stats
+        step = self.step
+        pool = self.pool
+        c0 = c1 = c2 = c3 = c4 = 0
+        t = st.time_us
+        lats = [0.0] * m
+
+        if pool.size >= pool.max_pages and self.data_plane is None:
+            pipeline = self.pipeline
+            free = pool._free
+            meta = pool.slots
+            size = pool.size
+            used = pool._used
+            n_alloc = 0
+            l_slot = self.gpt._l_slot
+            pend = pipeline._pending_slot
+            stq = pipeline.staging._q
+            seq = pipeline._seq
+            rq = pipeline.reclaimable._q
+            in_use = SlotState.IN_USE
+            reclaimable = SlotState.RECLAIMABLE
+            for k in range(m):
+                c = eff_l[k]
+                if am_l[k]:
+                    pg = pages_l[s + k]
+                    slot = free.pop()
+                    sm = meta[slot]
+                    sm.state = in_use
+                    sm.logical_page = pg
+                    sm.last_activity = step + k + 1
+                    sm.update_flag = False
+                    sm.reclaim_flag = False
+                    if slot < size:
+                        used += 1
+                    n_alloc += 1
+                    l_slot[pg] = slot
+                    if c == 4:
+                        prev = pend.get(pg)
+                        if prev is not None:
+                            meta[prev].update_flag = True
+                        pend[pg] = slot
+                        stq.append(WriteSet(seq, (pg,), (slot,)))
+                        seq += 1
+                    else:
+                        # cache fill: clean slot, immediately reclaimable
+                        sm.state = reclaimable
+                        sm.reclaim_flag = True
+                        rq.append(WriteSet(-1, (pg,), (slot,)))
+                if c == 0:
+                    c0 += 1
+                elif c == 4:
+                    c4 += 1
+                elif c == 1:
+                    c1 += 1
+                elif c == 2:
+                    c2 += 1
+                else:
+                    c3 += 1
+                lat = lut_l[c]
+                lats[k] = lat
+                t += lat
+            pool._used = used
+            pool.n_alloc_from_pool += n_alloc
+            pipeline._seq = seq
+        else:
+            apages: List[int] = []
+            asteps: List[int] = []
+            awrite: List[bool] = []
+            for k in range(m):
+                c = eff_l[k]
+                if am_l[k]:
+                    apages.append(pages_l[s + k])
+                    asteps.append(step + k + 1)
+                    awrite.append(c == 4)
+                if c == 0:
+                    c0 += 1
+                elif c == 4:
+                    c4 += 1
+                elif c == 1:
+                    c1 += 1
+                elif c == 2:
+                    c2 += 1
+                else:
+                    c3 += 1
+                lat = lut_l[c]
+                lats[k] = lat
+                t += lat
+            if apages:
+                slots = self.pool.alloc_batch(apages, asteps,
+                                              allow_deficit=True)
                 assert slots is not None
-                self.gpt.map_local_batch(pages[alloc_idx],
+                self.gpt.map_local_batch(np.asarray(apages, np.int64),
                                          np.asarray(slots, np.int64))
-                w_alloc = iw[alloc_idx]
-                if w_alloc.all():
+                if all(awrite):
                     self.pipeline.stage_batch(apages, slots)
                 else:
-                    wsel = np.flatnonzero(w_alloc)
-                    if wsel.size:
-                        self.pipeline.stage_batch([apages[k] for k in wsel],
-                                                  [slots[k] for k in wsel])
-                    mark = self.pool.mark_reclaimable
-                    push = self.pipeline.reclaimable.push
-                    for k in np.flatnonzero(~w_alloc):
-                        # filled slots are clean (a remote copy exists):
-                        # immediately reclaimable, no send needed
-                        mark(slots[k])
-                        push(WriteSet(-1, (apages[k],), (slots[k],)))
+                    wpg: List[int] = []
+                    wsl: List[int] = []
+                    fpg: List[int] = []
+                    fsl: List[int] = []
+                    for pg, sl, w in zip(apages, slots, awrite):
+                        if w:
+                            wpg.append(pg)
+                            wsl.append(sl)
+                        else:
+                            fpg.append(pg)
+                            fsl.append(sl)
+                    if wpg:
+                        self.pipeline.stage_batch(wpg, wsl)
+                    self.pipeline.complete_fill_batch(fpg, fsl)
                 if self.data_plane is not None:
-                    for pg, s in zip(apages, slots):
-                        self.data_plane.local_write(pg, s)
+                    lw_batch = getattr(self.data_plane, "local_write_batch",
+                                       None)
+                    if lw_batch is not None:
+                        lw_batch(apages, slots)
+                    else:
+                        for pg, sl in zip(apages, slots):
+                            self.data_plane.local_write(pg, sl)
+        st.writes += c4
+        st.ops += m
+        st.local_hits += c0
+        st.remote_hits += c1
+        st.host_hits += c2
+        st.cold_hits += c3
+        st.time_us = t
+        out_lats[s:e] = lats
+        self.step += m
 
-            st = self.stats
-            effm = eff[:m]
-            counts5 = np.bincount(effm, minlength=5)
-            st.writes += int(counts5[4])
-            st.ops += m
-            st.local_hits += int(counts5[0])
-            st.remote_hits += int(counts5[1])
-            st.host_hits += int(counts5[2])
-            st.cold_hits += int(counts5[3])
-            costs = lut[effm]
-            st.time_us = self._accumulate_time(st.time_us, costs)
-            out_lats[:m] = costs
-            self.step += m
-        if m < n:
-            # the op that would overrun pool/staging: the scalar reference
-            # path performs the reclaim / flush stall exactly as the scalar
-            # loop would, then a fresh prefix restarts after it
-            pg = int(pages[m])
-            out_lats[m] = self.write(pg) if iw[m] else self.read(pg)
-            return m + 1
-        return n
+    def _boundary_event(self, pages_l, iw, eff, alloc_mask, m, out_lats,
+                        order, starts, sizes, group_pages, page_group,
+                        glast_l) -> Tuple[int, bool]:
+        """Inline boundary event at batch position ``m``: run the one op
+        that would overrun pool/staging through the exact scalar schedule
+        (reclaim sizes, flush-stall accounting, rng draws), then re-plan
+        ONLY the ops invalidated by it via one targeted gather.
+
+        Invalidated means: pages whose local mappings the event's reclaims
+        dropped, plus the op's own page when the op FAILED (a host spill or
+        an unfilled read).  A successful boundary write/fill lands its page
+        LOCAL, which is exactly what the plan already encodes for the ops
+        behind it, so the common case re-plans nothing at all — the
+        ``page_group``/``glast_l`` probes keep only invalidated pages that
+        are in this batch AND still have ops behind the boundary (under
+        pressure that is almost always nobody: reclaim victims are old
+        flushed pages, rarely re-read within the same batch).  Returns
+        ``(m + 1, whether any group was re-planned)``."""
+        pg = pages_l[m]
+        self._unmap_log = unmapped = []
+        if iw[m]:
+            lat, ok = self._boundary_write(pg)
+        else:
+            lat, ok = self._boundary_fill_read(pg, int(eff[m]))
+        out_lats[m] = lat
+        self._unmap_log = None
+
+        groups = set()
+        for arr in unmapped:            # lists of plain ints (see _reclaim)
+            for p in arr:
+                g = page_group.get(p)
+                if g is not None and glast_l[g] > m:
+                    groups.add(g)
+        if not ok:
+            g = page_group.get(pg)
+            if g is not None and glast_l[g] > m:
+                groups.add(g)
+        if not groups:
+            return m + 1, False
+        todo = []
+        for g in sorted(groups):
+            ops = order[starts[g]: starts[g] + sizes[g]]
+            lo = int(np.searchsorted(ops, m, side="right"))
+            if lo < ops.size:
+                todo.append((int(group_pages[g]), ops[lo:]))
+        if not todo:
+            return m + 1, False
+        cls_new = self._snapshot_classes(
+            np.fromiter((t[0] for t in todo), np.int64, len(todo)),
+            known=True)
+        local_c = np.int8(self._CLS_LOCAL)
+        for (_, K), c in zip(todo, cls_new.tolist()):
+            iwK = iw[K]
+            effK = np.where(iwK, np.int8(4), local_c)
+            allocK = iwK.copy()
+            if c != self._CLS_LOCAL:
+                # reads before the first remaining write see class ``c``; a
+                # fillable class cache-fills on the FIRST such read (its
+                # later duplicates go LOCAL), COLD never fills
+                nw = np.flatnonzero(iwK)
+                stop = int(nw[0]) if nw.size else K.size
+                rd = np.flatnonzero(~iwK[:stop])
+                if rd.size:
+                    if c == self._CLS_COLD:
+                        effK[rd] = np.int8(c)
+                    else:
+                        effK[rd[0]] = np.int8(c)
+                        allocK[rd[0]] = True
+            eff[K] = effK
+            alloc_mask[K] = allocK
+        return m + 1, True
+
+    def _boundary_write(self, pg: int) -> Tuple[float, bool]:
+        """The scalar ``write`` schedule for one boundary op, inlined:
+        staged-write attempt, pointer-move reclaim, synchronous flush stall,
+        host spill — byte-for-byte the reference sequence.  Returns
+        ``(latency, staged ok)``."""
+        self.step += 1
+        st = self.stats
+        st.writes += 1
+        lat = 0.0
+        ws = self.pipeline.write((pg,), self.step)
+        if ws is None:
+            # pool exhausted: reclaim from reclaimable queue (pointer move)
+            self._reclaim(max(1, self.pages_per_block))
+            ws = self.pipeline.write((pg,), self.step)
+        if ws is None:
+            # still nothing reclaimable: must flush synchronously (stall)
+            lat += self._flush(self.pages_per_block, in_critical_path=True)
+            self._reclaim(self.pages_per_block)
+            ws = self.pipeline.write((pg,), self.step)
+        if ws is not None:
+            self.gpt.map_local(pg, ws.slots[0])
+            if self.data_plane is not None:
+                self.data_plane.local_write(pg, ws.slots[0])
+            lat += self.costs.local_write
+        else:
+            lat += self.costs.cold_write           # total pressure: spill
+            self._host_add(pg)
+        st.time_us += lat
+        st.ops += 1
+        return lat, ws is not None
+
+    def _boundary_fill_read(self, pg: int, cls_m: int) -> Tuple[float, bool]:
+        """The scalar ``read`` schedule for one boundary fill-read, inlined.
+        Boundary reads are remote/host hits by construction (only
+        cache-filling reads allocate), so the hit class comes from the
+        plan instead of a fresh table lookup; the cache-fill replays the
+        scalar alloc/reclaim sequence exactly.  Returns
+        ``(latency, filled ok)``."""
+        self.step += 1
+        st = self.stats
+        if cls_m == self._CLS_REMOTE:
+            st.remote_hits += 1
+        else:
+            st.host_hits += 1
+        lat = float(self._cost_lut()[cls_m])
+        # _cache_fill, inlined (the filled slot is clean: a remote copy
+        # exists, so it is immediately reclaimable without a send)
+        slot = self.pool.alloc(pg, self.step)
+        if slot is None:
+            self._reclaim(max(self.pages_per_block, 1))
+            slot = self.pool.alloc(pg, self.step)
+        if slot is not None:
+            self.gpt.map_local(pg, slot)
+            if self.data_plane is not None:
+                self.data_plane.local_write(pg, slot)
+            ws = WriteSet(-1, (pg,), (slot,))
+            self.pool.mark_reclaimable(slot)
+            self.pipeline.reclaimable.push(ws)
+        st.time_us += lat
+        st.ops += 1
+        return lat, slot is not None
 
     def _read_run_writethrough(self, pages: np.ndarray) -> np.ndarray:
         """All-reads run for pool-less policies: reads never mutate state
@@ -824,10 +1238,21 @@ class TieredPageStore:
         Batched path: one inlined queue drain (``reclaim_bulk``) and one
         gather/scatter drops every stale local mapping — a page freed twice
         in one burst matches at most one of its slots, exactly like the
-        sequential check-then-unmap."""
+        sequential check-then-unmap.
+
+        When a plan-once boundary event is active (``_unmap_log`` installed)
+        every page whose local mapping is dropped is recorded, so the batch
+        engine re-classifies exactly the invalidated pages afterwards."""
         if self.batch_reclaim:
             freed = self.pipeline.reclaim_bulk(n)
             if freed:
+                if len(freed) <= 64:
+                    # pages_per_block-sized burst: scalar check-then-unmap
+                    # beats the gather/scatter pipeline at this size
+                    dropped = self.gpt.unmap_if_current(freed)
+                    if dropped and self._unmap_log is not None:
+                        self._unmap_log.append(dropped)
+                    return len(freed)
                 slots = np.fromiter((s for s, _ in freed), np.int64,
                                     len(freed))
                 pages = np.fromiter((p for _, p in freed), np.int64,
@@ -835,11 +1260,18 @@ class TieredPageStore:
                 live = pages[self.gpt.local_slots_batch(pages) == slots]
                 if live.size:
                     self.gpt.unmap_local_batch(live)
+                    if self._unmap_log is not None:
+                        self._unmap_log.append(live.tolist())
             return len(freed)
         freed = self.pipeline.reclaim(n)
+        dropped = [] if self._unmap_log is not None else None
         for slot, pg in freed:
             if self.gpt.local_slot(pg) == slot:
                 self.gpt.unmap_local(pg)
+                if dropped is not None:
+                    dropped.append(pg)
+        if dropped:
+            self._unmap_log.append(dropped)
         return len(freed)
 
     def _flush(self, n: int, in_critical_path: bool = False) -> float:
@@ -896,7 +1328,7 @@ class TieredPageStore:
             for pg in ws.pages:
                 placed = self._place_remote_raw(pg)
                 if placed is None:
-                    self.host_pages[pg] = True
+                    self._host_add(pg)
                     mp.append(pg)
                     mt.append(host_tier)
                     mpe.append(-1)
@@ -984,7 +1416,7 @@ class TieredPageStore:
                         pass
                     else:
                         self.gpt.map_remote(pg, Location(tier))
-            self._free_block(*key)
+            self._free_block(*key, free_replicas=True)
             self._open_block.pop(peer, None)
             self.stats.evictions += 1
         return len(victims)
@@ -1017,7 +1449,7 @@ class TieredPageStore:
                     self.gpt.map_remote_batch(hit, [int(tier)] * m,
                                               [-1] * m, [-1] * m, None)
         for bid in victims:
-            self._free_block(*id_to_key[bid])
+            self._free_block(*id_to_key[bid], free_replicas=True)
             self._open_block.pop(peer, None)
             self.stats.evictions += 1
         return len(victims)
@@ -1025,6 +1457,7 @@ class TieredPageStore:
     def fail_peer(self, peer: int) -> Tuple[int, int]:
         """Hard peer failure (fault-tolerance path, Table 3)."""
         self.peers[peer].failed = True
+        self._peer_failed[peer] = True
         return fail_peer(self.gpt, peer,
                          cold_fetch=(lambda pg: None)
                          if self.policy.cold_backup else None)

@@ -163,6 +163,173 @@ def test_access_batch_scalar_is_write_broadcasts():
     assert_parity(a, b, la2, lb2)
 
 
+# -- extreme pressure (the plan-once engine's home turf) ----------------------
+
+def assert_deep_state_parity(a, b):
+    """Beyond Stats: bitwise page-table arrays, pool slot metadata, the
+    free-list order (it fixes future allocation order), and host spills."""
+    la, lb = a.gpt._l_slot, b.gpt._l_slot
+    n = max(la.shape[0], lb.shape[0])
+
+    def pad(x, fill):
+        out = np.full(n, fill, x.dtype)
+        out[:x.shape[0]] = x
+        return out
+
+    assert np.array_equal(pad(a.gpt._l_slot, -1), pad(b.gpt._l_slot, -1))
+    assert np.array_equal(pad(a.gpt._r_tier, 0), pad(b.gpt._r_tier, 0))
+    assert np.array_equal(pad(a.gpt._r_peer, -1), pad(b.gpt._r_peer, -1))
+    assert np.array_equal(pad(a.gpt._r_slot, -1), pad(b.gpt._r_slot, -1))
+    assert np.array_equal(pad(a.gpt._r_mapped, False),
+                          pad(b.gpt._r_mapped, False))
+    assert a.gpt._replicas == b.gpt._replicas
+    assert a.pool._free == b.pool._free, "free-list order diverged"
+    assert [(m.state, m.logical_page, m.update_flag, m.reclaim_flag)
+            for m in a.pool.slots] == \
+           [(m.state, m.logical_page, m.update_flag, m.reclaim_flag)
+            for m in b.pool.slots]
+    assert a.host_pages == b.host_pages
+
+
+def record_reclaims(store):
+    """Instrument ``_reclaim``: every call's requested size and freed count,
+    in order — the scalar loop's reclaim schedule that boundary events must
+    replay exactly."""
+    calls = []
+    orig = store._reclaim
+
+    def wrapped(k):
+        freed = orig(k)
+        calls.append((k, freed))
+        return freed
+
+    store._reclaim = wrapped
+    return calls
+
+
+@pytest.mark.parametrize("policy", ("valet", "valet-mass"))
+def test_parity_extreme_pressure_tight_pool(policy):
+    """pool_capacity == min_pool and batch >> free slots: every batch is
+    wall-to-wall reclaim/stall boundary events."""
+    for seed in range(3):
+        pages, is_write = random_trace(np.random.default_rng(100 + seed),
+                                       600, 4000, write_frac=0.5)
+        a = make_store(policy, 48, seed=seed)
+        b = make_store(policy, 48, seed=seed)
+        la = drive_scalar(a, pages, is_write)
+        lb = drive_batched(b, pages, is_write, batch=256)
+        assert_parity(a, b, la, lb)
+        assert_deep_state_parity(a, b)
+
+
+def test_parity_single_batch_overruns_pool_many_times():
+    """One access_batch call whose allocations exceed the free list many
+    times over (batch ~40x the pool) — no driver chunking to lean on."""
+    a = make_store("valet", 32)
+    b = make_store("valet", 32)
+    pages, is_write = random_trace(np.random.default_rng(9), 400, 2000,
+                                   write_frac=0.6)
+    la = np.array([a.write(int(p)) if w else a.read(int(p))
+                   for p, w in zip(pages, is_write)])
+    lb = b.access_batch(pages, is_write)
+    assert_parity(a, b, la, lb)
+    assert_deep_state_parity(a, b)
+
+
+def test_boundary_reclaim_schedule_matches_scalar():
+    """The plan-once engine's boundary events must issue the exact reclaim
+    call sequence (sizes AND yields) of the scalar loop."""
+    a = make_store("valet", 64, seed=2)
+    b = make_store("valet", 64, seed=2)
+    ra, rb = record_reclaims(a), record_reclaims(b)
+    pages, is_write = random_trace(np.random.default_rng(5), 500, 3000,
+                                   write_frac=0.5)
+    la = drive_scalar(a, pages, is_write)
+    lb = drive_batched(b, pages, is_write)
+    assert ra == rb, "reclaim schedules diverged"
+    assert len(ra) > 0
+    assert_parity(a, b, la, lb)
+
+
+def test_property_pressure_parity_and_reclaim_schedule():
+    """Hypothesis property: on arbitrary tight-pool traces, the batched
+    engine's reclaim schedule and Stats are bitwise those of the scalar
+    loop (hypothesis is a soft dependency, as in test_core_pool)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           pool=st.sampled_from([16, 24, 48]),
+           write_frac=st.floats(0.1, 0.9),
+           batch=st.integers(16, 300))
+    def prop(seed, pool, write_frac, batch):
+        pages, is_write = random_trace(np.random.default_rng(seed), 300,
+                                       1200, write_frac)
+        a = make_store("valet", pool, seed=seed)
+        b = make_store("valet", pool, seed=seed)
+        ra, rb = record_reclaims(a), record_reclaims(b)
+        la = drive_scalar(a, pages, is_write)
+        lb = drive_batched(b, pages, is_write, batch=batch)
+        assert ra == rb
+        assert_parity(a, b, la, lb)
+        assert_deep_state_parity(a, b)
+
+    prop()
+
+
+# -- data plane ---------------------------------------------------------------
+
+class _ScalarPlane:
+    """Data plane exposing only the per-page hook."""
+
+    def __init__(self):
+        self.writes = []
+
+    def local_write(self, pg, slot):
+        self.writes.append((pg, slot))
+
+
+class _BulkPlane(_ScalarPlane):
+    """Data plane additionally exposing the bulk gather/scatter hook."""
+
+    def __init__(self):
+        super().__init__()
+        self.bulk_calls = 0
+
+    def local_write_batch(self, pages, slots):
+        self.bulk_calls += 1
+        self.writes.extend(zip(pages, slots))
+
+
+def _plane_store(plane, seed=0):
+    return TieredPageStore(POLICIES["valet"], PAPER_COSTS, pool_capacity=64,
+                           min_pool=64, max_pool=64, n_peers=4,
+                           peer_capacity_blocks=64, pages_per_block=16,
+                           seed=seed, data_plane=plane)
+
+
+def test_data_plane_bulk_writes_match_scalar_sequence():
+    """``local_write_batch`` (one call per alloc run, fills and write allocs
+    alike) must produce the exact (page, slot) sequence of the per-page
+    hook, which in turn matches the scalar loop."""
+    pages, is_write = random_trace(np.random.default_rng(2), 200, 1500,
+                                   write_frac=0.5)
+    ref = _ScalarPlane()
+    a = _plane_store(ref)
+    la = drive_scalar(a, pages, is_write)
+    perpage = _ScalarPlane()
+    b = _plane_store(perpage)
+    lb = drive_batched(b, pages, is_write)
+    bulk = _BulkPlane()
+    c = _plane_store(bulk)
+    lc = drive_batched(c, pages, is_write)
+    assert_parity(a, b, la, lb)
+    assert_parity(a, c, la, lc)
+    assert bulk.bulk_calls > 0
+    assert ref.writes == perpage.writes == bulk.writes
+
+
 # -- building blocks ---------------------------------------------------------
 
 def test_alloc_batch_matches_sequential_allocs():
@@ -188,6 +355,63 @@ def test_alloc_batch_refuses_overcommit():
     assert pool.free_count() == before       # no partial effects
 
 
+def test_alloc_prefix_capacity_predicts_sequential_allocs():
+    """The overrun predictor must equal the number of back-to-back scalar
+    allocs that actually succeed (growth included), for clean pools."""
+    for free_mem in (1 << 20, 100, 40):
+        p1 = ValetMempool(256, min_pages=32, max_pages=256,
+                          free_memory_fn=lambda fm=free_mem: fm)
+        cap = p1.alloc_prefix_capacity(200)
+        p2 = ValetMempool(256, min_pages=32, max_pages=256,
+                          free_memory_fn=lambda fm=free_mem: fm)
+        got = 0
+        for i in range(200):
+            if p2.alloc(i, step=i) is None:
+                break
+            got += 1
+        assert cap == got, (free_mem, cap, got)
+    # static pool: capacity is exactly the free count
+    p3 = ValetMempool(16, min_pages=16, max_pages=16)
+    assert p3.alloc_prefix_capacity(100) == 16
+    assert p3.alloc_prefix_capacity(5) == 5
+
+
+def test_alloc_prefix_capacity_conservative_with_stranded_tail():
+    """A shrink that strands live slots beyond the effective size makes
+    growth bookkeeping state-dependent: the predictor must fall back to the
+    plain free count (a guaranteed lower bound)."""
+    host_free = [1 << 20]
+    pool = ValetMempool(64, min_pages=8, max_pages=64,
+                        free_memory_fn=lambda: host_free[0])
+    for i in range(20):                      # grow past min_pages
+        pool.alloc(i, step=i)
+    host_free[0] = 0                         # host pressure: shrink
+    pool.shrink_for_pressure()
+    pool.check_invariants()
+    assert any(m.state not in (SlotState.UNBACKED, SlotState.FREE)
+               for m in pool.slots[pool.size:])   # tail actually stranded
+    host_free[0] = 1 << 20
+    assert pool.alloc_prefix_capacity(64) == pool.free_count()
+
+
+def test_alloc_batch_deficit_grows_like_sequential_allocs():
+    """allow_deficit=True: the batch may exceed the current free list; the
+    loop then replicates the scalar alloc's growth, slot for slot."""
+    p1 = ValetMempool(256, min_pages=32, max_pages=256,
+                      free_memory_fn=lambda: 1 << 20)
+    p2 = ValetMempool(256, min_pages=32, max_pages=256,
+                      free_memory_fn=lambda: 1 << 20)
+    n = p1.alloc_prefix_capacity(120)
+    assert n > p1.free_count()               # growth genuinely needed
+    seq = [p1.alloc(pg, step=pg) for pg in range(n)]
+    bat = p2.alloc_batch(list(range(n)), steps=range(n), allow_deficit=True)
+    assert seq == bat
+    assert (p1.size, p1.n_grow, p1.used(), p1.free_count()) == \
+        (p2.size, p2.n_grow, p2.used(), p2.free_count())
+    p1.check_invariants()
+    p2.check_invariants()
+
+
 def test_used_counter_stays_exact_through_resizes():
     pool = ValetMempool(64, min_pages=8, max_pages=64,
                         free_memory_fn=lambda: 64)
@@ -199,6 +423,31 @@ def test_used_counter_stays_exact_through_resizes():
     pool.shrink_for_pressure()
     pool.check_invariants()
     assert pool.used() == 3
+
+
+def test_pipeline_write_rolls_back_on_staging_overrun():
+    """A write refused by a full staging queue must leave NO residue: no
+    IN_USE slot leak, no stale pending-slot entry, no spurious §5.2 flag
+    (the boundary-write replay retries through this exact condition)."""
+    pool = ValetMempool(16, min_pages=16, max_pages=16)
+    wp = WritePipeline(pool, queue_len=2)
+    ws1 = wp.write((7,), step=1)
+    ws2 = wp.write((8,), step=2)
+    assert ws1 is not None and ws2 is not None
+    free_before = pool.free_count()
+    pend_before = dict(wp._pending_slot)
+    seq_before = wp._seq
+    assert wp.write((7,), step=3) is None        # queue full -> refused
+    assert pool.free_count() == free_before, "leaked an IN_USE slot"
+    assert wp._pending_slot == pend_before
+    assert wp._seq == seq_before
+    assert not pool.slots[ws1.slots[0]].update_flag   # §5.2 flag restored
+    wp.check_invariants()
+    # duplicate pages inside one refused transaction unwind exactly too
+    assert wp.write((9, 9), step=4) is None
+    assert pool.free_count() == free_before
+    assert 9 not in wp._pending_slot
+    wp.check_invariants()
 
 
 def test_stage_batch_sets_update_flags_on_duplicates():

@@ -8,6 +8,7 @@ import sys
 REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
 FULL = {"batch_speedup": {"speedup": 4.0},
+        "pressure_speedup": {"speedup": 1.0},
         "reclaim_speedup": {"speedup": 3.6},
         "multi_tenant": {"speedup": 1.3}}
 

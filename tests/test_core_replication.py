@@ -58,3 +58,67 @@ def test_table3_cold_backup_mode():
     for p in range(400):
         loc = store.gpt.lookup(p)
         assert loc.tier != Tier.NONE
+
+
+def _sum_used(store):
+    return sum(p.used for p in store.peers)
+
+
+def test_delete_eviction_frees_unreferenced_replica_blocks():
+    """ROADMAP follow-up fixed in this PR: when a primary block dies on the
+    delete-eviction path, replica blocks that no page references any more
+    (the pages were overwritten and live elsewhere, so nothing repoints to
+    them) used to stay allocated on their peers forever."""
+    from repro.core.policies import Policy
+    pol = Policy(name="del-repl", use_local_pool=True, lazy_send=True,
+                 victim="random", evict_action="delete", replication=1,
+                 cold_backup=True)
+    for batched in (False, True):
+        store = TieredPageStore(pol, PAPER_COSTS, pool_capacity=32,
+                                min_pool=32, n_peers=4,
+                                peer_capacity_blocks=128, pages_per_block=8,
+                                seed=3, batch_reclaim=batched)
+        for p in range(300):
+            store.write(p)
+        store.drain()
+        for p in range(300):               # rewrite: old blocks go stale
+            store.write(p)
+        store.drain()
+        # block accounting must balance before and after eviction
+        assert _sum_used(store) == len(store.blocks)
+        used_before = _sum_used(store)
+        evicted = store.peer_pressure(0, 6)
+        assert evicted == 6
+        freed = used_before - _sum_used(store)
+        # at least one victim was a stale primary whose replica block was
+        # unreferenced: strictly more blocks freed than victims evicted
+        assert freed > evicted, (freed, evicted)
+        assert _sum_used(store) == len(store.blocks)
+        # no dangling replica indexes may survive
+        for rep, prim in store._replica_of.items():
+            assert rep in store.blocks and prim in store.blocks
+        for prim, reps in store.block_replicas.items():
+            for rep in reps:
+                assert rep in store.blocks, (prim, rep)
+
+
+def test_delete_eviction_keeps_promoted_replicas():
+    """The flip side: when eviction repoints pages onto a replica block
+    (promotion), that block is referenced and must NOT be freed."""
+    from repro.core.policies import Policy
+    pol = Policy(name="del-repl2", use_local_pool=True, lazy_send=True,
+                 victim="random", evict_action="delete", replication=1)
+    store = TieredPageStore(pol, PAPER_COSTS, pool_capacity=32,
+                            min_pool=32, n_peers=4,
+                            peer_capacity_blocks=128, pages_per_block=8,
+                            seed=4)
+    for p in range(200):
+        store.write(p)
+    store.drain()
+    assert _sum_used(store) == len(store.blocks)
+    store.peer_pressure(0, 4)
+    assert _sum_used(store) == len(store.blocks)
+    # every page still resolves to live remote memory (promotion worked)
+    for p in range(200):
+        loc = store.gpt.lookup(p)
+        assert loc.tier in (Tier.LOCAL, Tier.PEER, Tier.HOST), (p, loc)

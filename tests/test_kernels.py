@@ -101,3 +101,23 @@ def test_paged_attention_skips_invalid_pages():
     a = paged_attention(q, kp, vp, bt_full, lens, interpret=True)
     b_ = paged_attention(q, kp, vp, bt_short, lens, interpret=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-6)
+
+
+def test_local_write_batch_round_trip():
+    """Bulk page scatter == sequential per-page appends for distinct slots
+    (the data-plane half of a batched access_batch alloc run)."""
+    import jax.numpy as jnp
+    from repro.core import device_ops as dev
+    n_slots, page, n_kv, hd = 8, 4, 2, 16
+    pool = dev.make_kv_pool(n_slots, page, n_kv, hd, jnp.float32)
+    k = rand(3, (3, page, n_kv, hd), jnp.float32)
+    v = rand(4, (3, page, n_kv, hd), jnp.float32)
+    slots = jnp.array([5, 1, 6], jnp.int32)
+    out = dev.local_write_batch(pool, k, v, slots)
+    ref = pool
+    for i in range(3):
+        ref = dev.insert_blocks(ref, k[i:i + 1], v[i:i + 1], slots[i:i + 1])
+    np.testing.assert_array_equal(np.asarray(out.k), np.asarray(ref.k))
+    np.testing.assert_array_equal(np.asarray(out.v), np.asarray(ref.v))
+    # untouched slots stay zero
+    assert float(jnp.abs(out.k[0]).sum()) == 0.0
