@@ -33,6 +33,7 @@ TRACKED = [
     ("batch_speedup", "speedup"),
     ("pressure_speedup", "speedup"),
     ("reclaim_speedup", "speedup"),
+    ("reclaim_floor", "speedup"),
     ("multi_tenant", "speedup"),
 ]
 

@@ -133,7 +133,7 @@ class ActivityTracker:
 def select_victims_nad(tracker: ActivityTracker, candidates: Sequence[int],
                        n: int, step: int) -> List[int]:
     """Paper's activity-based victim selection: longest Non-Activity-Duration."""
-    cand = np.asarray(list(candidates), np.int64)
+    cand = np.asarray(candidates, np.int64)
     if cand.size == 0 or n <= 0:
         return []
     nad = tracker.nad(cand, step)
@@ -145,8 +145,10 @@ def select_victims_topk(tracker: ActivityTracker, candidates: Sequence[int],
                         n: int, step: int) -> List[int]:
     """Dense top-k victim selection: same result as ``select_victims_nad``
     (same victims, same order, same candidate-order tie-breaks) via
-    ``argpartition`` instead of a full stable sort — O(C + k log k)."""
-    cand = np.asarray(list(candidates), np.int64)
+    ``argpartition`` instead of a full stable sort — O(C + k log k); accepts
+    the dense candidate arrays ``peer_pressure`` now produces without a
+    Python-list round trip."""
+    cand = np.asarray(candidates, np.int64)
     if cand.size == 0 or n <= 0:
         return []
     neg = -tracker.nad(cand, step)
@@ -165,7 +167,7 @@ def select_victims_topk(tracker: ActivityTracker, candidates: Sequence[int],
 def select_victims_mass(tracker: ActivityTracker, candidates: Sequence[int],
                         n: int, step: int) -> List[int]:
     """Beyond-paper: evict lowest recent attention mass (ties -> oldest)."""
-    cand = np.asarray(list(candidates), np.int64)
+    cand = np.asarray(candidates, np.int64)
     if cand.size == 0 or n <= 0:
         return []
     mass = tracker.mass_of(cand)
@@ -176,12 +178,13 @@ def select_victims_mass(tracker: ActivityTracker, candidates: Sequence[int],
 
 def select_victims_random(rng: np.random.Generator, candidates: Sequence[int],
                           n: int) -> List[int]:
-    """Baseline (Infiniswap-like batched random selection, §6.5)."""
-    cand = list(candidates)
-    if not cand or n <= 0:
+    """Baseline (Infiniswap-like batched random selection, §6.5): same
+    permutation draws as the list version, array-native candidates."""
+    cand = np.asarray(candidates, np.int64)
+    if not cand.size or n <= 0:
         return []
-    idx = rng.permutation(len(cand))[:min(n, len(cand))]
-    return [cand[i] for i in idx]
+    idx = rng.permutation(cand.size)[:min(n, cand.size)]
+    return cand[idx].tolist()
 
 
 class PairSampler:

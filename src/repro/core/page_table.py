@@ -251,29 +251,24 @@ class GlobalPageTable:
             self._ensure(int(pages.max()))
         return self._l_slot[pages]
 
+    def local_slots_known(self, pages: np.ndarray) -> np.ndarray:
+        """``local_slots_batch`` minus the growth check, for pages already
+        covered by the tables (they were resolved or mapped before — the
+        reclaim unmapper's case: every freed page was mapped once)."""
+        return self._l_slot[pages]
+
+    def map_local_known(self, pages: np.ndarray, slots: np.ndarray):
+        """``map_local_batch`` minus the asarray/growth work, for int64
+        page arrays the caller already resolved this batch (the segment
+        engine: its snapshot gather grew the tables over the whole batch).
+        Duplicate pages keep last-writer-wins, like sequential maps."""
+        self._l_slot[pages] = slots
+
     def map_local_batch(self, pages: np.ndarray, slots: np.ndarray):
         pages = np.asarray(pages, np.int64)
         if pages.size:
             self._ensure(int(pages.max()))
         self._l_slot[pages] = slots
-
-    def unmap_if_current(self, pairs) -> List[int]:
-        """Drop local mappings that still point at their paired slot.
-
-        ``pairs`` is ``[(slot, page), ...]`` (a reclaim burst); a mapping is
-        dropped only when the page still resolves to that exact slot — the
-        sequential check-then-unmap semantics.  Returns the pages actually
-        unmapped.  This is the small-burst python path of the reclaim
-        unmapper: for ``pages_per_block``-sized bursts a tight loop over
-        array scalars beats the ~10-kernel gather/scatter pipeline.  Pages
-        must already be covered by the tables (they were mapped once)."""
-        l_slot = self._l_slot
-        out: List[int] = []
-        for slot, pg in pairs:
-            if l_slot[pg] == slot:
-                l_slot[pg] = -1
-                out.append(pg)
-        return out
 
     def unmap_local_batch(self, pages: np.ndarray):
         pages = np.asarray(pages, np.int64)

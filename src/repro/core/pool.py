@@ -1,9 +1,19 @@
 """ValetMempool — the host-coordinated local memory pool (paper §3.4, §4.1).
 
-This is the control plane: deterministic Python metadata over a fixed array
-of page slots whose *effective* size grows and shrinks dynamically.  The
-data plane (actual K/V page arrays in HBM) lives in ``tiering.py`` /
-``serve``; slots here are indices into those arrays.
+This is the control plane: deterministic metadata over a fixed array of page
+slots whose *effective* size grows and shrinks dynamically.  The data plane
+(actual K/V page arrays in HBM) lives in ``tiering.py`` / ``serve``; slots
+here are indices into those arrays.
+
+The metadata is **structure-of-arrays**: one dense numpy column per field
+(``state``, ``owner``, ``last_step``, ``update_flag``, ``reclaim_flag``)
+plus the free list as a stack over an int array (``_free_arr`` /
+``_free_top`` — LIFO, preserving the exact pop/append order of the old
+Python-list free list, which parity tests pin).  Whole reclaim bursts,
+allocation runs and resize windows become masked gathers/scatters instead
+of per-slot object churn; the scalar methods (``alloc``/``reclaim``/...)
+keep their per-op semantics on the same arrays, and ``slots[i]`` returns a
+lightweight view object for the reference paths and tests.
 
 Paper-faithful rules (Table 2 + §4.1):
 
@@ -21,24 +31,98 @@ Paper-faithful rules (Table 2 + §4.1):
 from __future__ import annotations
 
 import enum
-from dataclasses import dataclass
-from typing import Callable, List, Optional, Set
+from typing import Callable, List, Optional, Tuple
+
+import numpy as np
 
 
-class SlotState(enum.Enum):
+class SlotState(enum.IntEnum):
     FREE = 0          # in the pool, ready to serve an allocation
     IN_USE = 1        # holds live data not yet replicated remotely
     RECLAIMABLE = 2   # remote replica exists; may be reclaimed for reuse
     UNBACKED = 3      # beyond the current effective pool size
 
 
-@dataclass
-class SlotMeta:
-    state: SlotState = SlotState.UNBACKED
-    logical_page: int = -1         # owning logical page (-1 = none)
-    last_activity: int = 0         # step of last write (paper's timestamp tag)
-    update_flag: bool = False      # §5.2: newer write-set exists for this page
-    reclaim_flag: bool = False     # §5.2: replica exists; safe to reclaim
+_FREE = int(SlotState.FREE)
+_IN_USE = int(SlotState.IN_USE)
+_RECLAIMABLE = int(SlotState.RECLAIMABLE)
+_UNBACKED = int(SlotState.UNBACKED)
+
+
+class SlotView:
+    """Scalar view of one slot's metadata row.
+
+    The SoA columns are the single source of truth; this object is a
+    zero-copy accessor kept for the scalar reference paths and the unit
+    tests, which read and write slots as objects (``pool.slots[i].state``).
+    """
+
+    __slots__ = ("_p", "_i")
+
+    def __init__(self, pool: "ValetMempool", i: int):
+        self._p = pool
+        self._i = i
+
+    @property
+    def state(self) -> SlotState:
+        return SlotState(int(self._p.state[self._i]))
+
+    @state.setter
+    def state(self, v: SlotState):
+        self._p.state[self._i] = int(v)
+
+    @property
+    def logical_page(self) -> int:
+        return int(self._p.owner[self._i])
+
+    @logical_page.setter
+    def logical_page(self, v: int):
+        self._p.owner[self._i] = v
+
+    @property
+    def last_activity(self) -> int:
+        return int(self._p.last_step[self._i])
+
+    @last_activity.setter
+    def last_activity(self, v: int):
+        self._p.last_step[self._i] = v
+
+    @property
+    def update_flag(self) -> bool:
+        return bool(self._p.update_flag[self._i])
+
+    @update_flag.setter
+    def update_flag(self, v: bool):
+        self._p.update_flag[self._i] = v
+
+    @property
+    def reclaim_flag(self) -> bool:
+        return bool(self._p.reclaim_flag[self._i])
+
+    @reclaim_flag.setter
+    def reclaim_flag(self, v: bool):
+        self._p.reclaim_flag[self._i] = v
+
+
+class _SlotsView:
+    """Sequence facade over the SoA columns (``pool.slots``)."""
+
+    __slots__ = ("_p",)
+
+    def __init__(self, pool: "ValetMempool"):
+        self._p = pool
+
+    def __len__(self):
+        return self._p.capacity
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [SlotView(self._p, j)
+                    for j in range(*i.indices(self._p.capacity))]
+        return SlotView(self._p, i)
+
+    def __iter__(self):
+        return (SlotView(self._p, j) for j in range(self._p.capacity))
 
 
 class ValetMempool:
@@ -71,9 +155,16 @@ class ValetMempool:
             free_memory_fn = lease.available
         self.free_memory_fn = free_memory_fn or (lambda: capacity)
         self.grow_step = grow_step or max(min_pages // 2, 1)
-        self.slots: List[SlotMeta] = [SlotMeta() for _ in range(capacity)]
+        # structure-of-arrays slot metadata
+        self.state = np.full(capacity, _UNBACKED, np.int8)
+        self.owner = np.full(capacity, -1, np.int64)   # owning logical page
+        self.last_step = np.zeros(capacity, np.int64)  # last write activity
+        self.update_flag = np.zeros(capacity, bool)    # §5.2 newer set pends
+        self.reclaim_flag = np.zeros(capacity, bool)   # §5.2 replica exists
+        self._free_arr = np.empty(capacity, np.int64)  # free stack (LIFO)
+        self._free_top = 0
+        self.slots = _SlotsView(self)
         self.size = 0
-        self._free: List[int] = []
         self._used = 0           # non-FREE/non-UNBACKED slots below size
         self._resize_to(min_pages)
         # counters for benchmarks / tests
@@ -83,42 +174,51 @@ class ValetMempool:
         self.n_alloc_failed = 0
         self.n_reclaimed = 0
 
+    @property
+    def _free(self) -> List[int]:
+        """The free stack as a plain list, bottom to top (pop takes the last
+        element) — the exact order the old list-backed free list held."""
+        return self._free_arr[:self._free_top].tolist()
+
     # -- sizing ------------------------------------------------------------
 
     def _resize_to(self, new_size: int):
         new_size = max(self.min_pages, min(new_size, self.max_pages,
                                            self.capacity))
+        state = self.state
         if new_size > self.size:
             # only back slots that are actually UNBACKED: a previous shrink
             # can strand non-FREE slots beyond the effective size (they keep
             # live data and simply return under the size here), and a
             # stranded slot released in the meantime is already on the free
             # list — blindly marking the range FREE would clobber both
-            for i in range(self.size, new_size):
-                m = self.slots[i]
-                if m.state == SlotState.UNBACKED:
-                    m.state = SlotState.FREE
-                    self._free.append(i)
+            back = self.size + np.flatnonzero(
+                state[self.size:new_size] == _UNBACKED)
+            if back.size:
+                state[back] = _FREE
+                top = self._free_top
+                self._free_arr[top:top + back.size] = back
+                self._free_top = top + back.size
         elif new_size < self.size:
-            # release only FREE slots from the tail of the pool
-            keep = []
-            released = 0
+            # release only FREE slots from the tail of the pool: the
+            # reversed scan of the old loop releases the highest-index FREE
+            # slots first, i.e. the tail suffix of the FREE set
             want = self.size - new_size
-            for i in reversed(range(new_size, self.size)):
-                if self.slots[i].state == SlotState.FREE and released < want:
-                    self.slots[i].state = SlotState.UNBACKED
-                    released += 1
-                else:
-                    keep.append(i)
-            self._free = [i for i in self._free
-                          if self.slots[i].state == SlotState.FREE]
-            new_size = self.size - released
+            tail_free = new_size + np.flatnonzero(
+                state[new_size:self.size] == _FREE)
+            rel = tail_free[max(tail_free.size - want, 0):]
+            if rel.size:
+                state[rel] = _UNBACKED
+                fl = self._free_arr[:self._free_top]
+                kept = fl[state[fl] == _FREE]       # order preserved
+                self._free_arr[:kept.size] = kept
+                self._free_top = int(kept.size)
+            new_size = self.size - int(rel.size)
         self.size = new_size
         # resizes can strand non-FREE slots beyond the effective size, so
         # the O(1) usage counter is rebuilt here (resizes are rare events)
-        self._used = sum(1 for i in range(self.size)
-                         if self.slots[i].state != SlotState.FREE
-                         and self.slots[i].state != SlotState.UNBACKED)
+        s = state[:new_size]
+        self._used = int(np.count_nonzero((s != _FREE) & (s != _UNBACKED)))
 
     def used(self) -> int:
         return self._used
@@ -162,9 +262,9 @@ class ValetMempool:
         Respects the same max/host-free caps; returns False when they bind
         first (static pools return False immediately, without side effects).
         """
-        while len(self._free) < n:
+        while self._free_top < n:
             host_cap = int(self.free_memory_fn() * self.HOST_FREE_FRACTION)
-            want = max(self.grow_step, n - len(self._free))
+            want = max(self.grow_step, n - self._free_top)
             target = min(self.size + want, self.max_pages,
                          max(host_cap, self.min_pages))
             if target <= self.size:
@@ -226,22 +326,23 @@ class ValetMempool:
         The prediction is a LOWER bound by construction — callers feed it to
         ``alloc_batch(..., allow_deficit=True)``, which asserts every alloc
         lands.  It is exact (simulating the same growth arithmetic against
-        the same pure ``free_memory_fn``) except in two conservative
-        fallbacks where growth bookkeeping is state-dependent: pools with
-        coordinator leases (a grant cannot be probed without mutating the
-        coordinator) and pools with stranded non-UNBACKED slots beyond the
-        effective size (a prior shrink pinned live data in the tail) — both
-        fall back to the current FREE count, which is always safe."""
-        free = len(self._free)
+        the same pure ``free_memory_fn``) for clean free-probe pools; pools
+        with coordinator leases get a guaranteed lower bound from the
+        coordinator's uncontended free slab (``_prefix_capacity_leased``);
+        pools with stranded non-UNBACKED slots beyond the effective size (a
+        prior shrink pinned live data in the tail) fall back to the current
+        FREE count, which is always safe."""
+        free = self._free_top
         if free >= n or n <= 0:
             return min(free, n) if n > 0 else 0
         size = self.size
-        if size >= self.max_pages or self.lease is not None:
+        if size >= self.max_pages:
             return free
-        slots = self.slots
-        for i in range(size, min(self.max_pages, self.capacity)):
-            if slots[i].state is not SlotState.UNBACKED:
-                return free            # stranded tail: growth not predictable
+        if np.any(self.state[size:min(self.max_pages, self.capacity)]
+                  != _UNBACKED):
+            return free                # stranded tail: growth not predictable
+        if self.lease is not None:
+            return self._prefix_capacity_leased(n, free, size)
         grow_step = self.grow_step
         max_pages = self.max_pages
         min_pages = self.min_pages
@@ -276,22 +377,49 @@ class ValetMempool:
                 sim_grow()
         return count
 
+    def _prefix_capacity_leased(self, n: int, free: int, size: int) -> int:
+        """Lower-bound alloc capacity for coordinator-leased pools.
+
+        Only the pre-alloc grow (empty free list) is modeled and every
+        simulated grant is capped by the coordinator's CURRENT free slab —
+        both choices keep the prediction a lower bound: the real path
+        additionally takes 80%-usage opportunistic grows (extra capacity
+        only) and ``lease()`` may reclaim co-tenants' excess on top of the
+        free slab (larger grants only).  ``available_for`` — this pool's
+        host-free probe — is invariant under its own leasing (a grant moves
+        pages from the free slab into its own lease) and under weighted-fair
+        reclamation (a donor's release moves its excess into the free slab),
+        so the host cap is read once and holds for the whole simulation.
+        Nothing here mutates the coordinator."""
+        coord = getattr(self.lease, "coordinator", None)
+        if coord is None:
+            return free                 # unknown lease backend: free is safe
+        budget = coord.free()
+        host_cap = int(self.free_memory_fn() * self.HOST_FREE_FRACTION)
+        cap_sz = min(self.max_pages, max(host_cap, self.min_pages))
+        # pre-grows repeat in grow_step chunks until the size cap or the
+        # free-slab budget binds, so total guaranteed growth is their min
+        growth = max(0, min(cap_sz - size, budget))
+        return min(n, free + growth)
+
     # -- allocation ---------------------------------------------------------
 
     def alloc(self, logical_page: int, step: int) -> Optional[int]:
         """Use-pool-first allocation.  Returns a slot id or None."""
-        if not self._free:
+        if not self._free_top:
             self.maybe_grow()
-        if not self._free:
+        if not self._free_top:
             self.n_alloc_failed += 1
             return None
-        slot = self._free.pop()
-        m = self.slots[slot]
-        m.state = SlotState.IN_USE
-        m.logical_page = logical_page
-        m.last_activity = step
-        m.update_flag = False
-        m.reclaim_flag = False
+        top = self._free_top - 1
+        self._free_top = top
+        slot = int(self._free_arr[top])
+        # FREE slots carry cleared §5.2 flags canonically (every transition
+        # into FREE clears both; check_invariants pins it), so allocation
+        # writes only the three live columns
+        self.state[slot] = _IN_USE
+        self.owner[slot] = logical_page
+        self.last_step[slot] = step
         if slot < self.size:
             self._used += 1
         self.n_alloc_from_pool += 1
@@ -300,17 +428,37 @@ class ValetMempool:
             self.maybe_grow()
         return slot
 
+    def alloc_run(self, pages: np.ndarray, steps: np.ndarray) -> np.ndarray:
+        """Vectorized bulk allocation for pools that cannot grow (static or
+        already at ``max_pages``): one free-stack slice pop plus one scatter
+        per metadata column.  Identical pop order, state transitions and
+        counters as calling ``alloc`` per page (no growth trigger can fire).
+        Requires ``free_count() >= len(pages)``; returns the slot array in
+        allocation order."""
+        n = len(pages)
+        top = self._free_top - n
+        sl = self._free_arr[top:self._free_top][::-1].copy()  # LIFO pop order
+        self._free_top = top
+        self.state[sl] = _IN_USE          # FREE ⇒ flags already clear
+        self.owner[sl] = pages
+        self.last_step[sl] = steps
+        if self.size == self.capacity:         # no stranded tail possible
+            self._used += n
+        else:
+            self._used += int(np.count_nonzero(sl < self.size))
+        self.n_alloc_from_pool += n
+        return sl
+
     def alloc_batch(self, logical_pages, steps,
                     allow_deficit: bool = False) -> Optional[List[int]]:
         """Bulk use-pool-first allocation: one slot per page, in order.
 
         Semantically identical to calling ``alloc`` once per page (same free-
-        list pop order, same 80%-usage growth triggers, same counters), but
-        with the per-page method-call overhead amortized away; ``maybe_grow``
-        is invoked only when the scalar path would actually attempt growth.
-        When the pool is already at ``max_pages`` the (provably futile) grow
-        probe is skipped entirely, which assumes ``free_memory_fn`` is pure —
-        it is everywhere in this repo.
+        stack pop order, same 80%-usage growth triggers, same counters).
+        Pools pinned at ``max_pages`` take the fully vectorized ``alloc_run``
+        (growth is provably futile there, which assumes ``free_memory_fn``
+        is pure — it is everywhere in this repo); growable pools replay the
+        scalar loop so every growth trigger lands at the exact op.
 
         Requires ``free_count() >= len(logical_pages)`` (the caller's batch
         guard); returns None without side effects otherwise.
@@ -323,49 +471,36 @@ class ValetMempool:
         """
         pages = list(logical_pages)
         n = len(pages)
-        free = self._free
-        if len(free) < n and not allow_deficit:
+        if self._free_top < n and not allow_deficit:
             return None
-        slots_meta = self.slots
+        if self.size >= self.max_pages and self._free_top >= n:
+            return self.alloc_run(np.asarray(pages, np.int64),
+                                  np.asarray(list(steps), np.int64)).tolist()
+        state = self.state
+        owner = self.owner
+        last = self.last_step
+        free_arr = self._free_arr
         thresh = self.GROW_THRESHOLD
-        can_grow = self.size < self.max_pages
         size = self.size
         used = self._used
+        can_grow = size < self.max_pages
         out: List[int] = []
-        in_use = SlotState.IN_USE
-        if not can_grow:
-            # static-size pool (or already at max): no growth trigger can
-            # fire, so the per-alloc usage arithmetic drops out entirely
-            for pg, stp in zip(pages, steps):
-                slot = free.pop()
-                m = slots_meta[slot]
-                m.state = in_use
-                m.logical_page = pg
-                m.last_activity = stp
-                m.update_flag = False
-                m.reclaim_flag = False
-                out.append(slot)
-                if slot < size:
-                    used += 1
-            self._used = used
-            self.n_alloc_from_pool += n
-            return out
         for pg, stp in zip(pages, steps):
-            if not free:
+            if not self._free_top:
                 # scalar alloc's pre-grow: only reachable in deficit mode
                 # (the guard above keeps the classic path pop-safe)
                 self.maybe_grow()
                 size = self.size
                 used = self._used
                 can_grow = size < self.max_pages
-                assert free, "alloc_batch deficit: predictor overpromised"
-            slot = free.pop()
-            m = slots_meta[slot]
-            m.state = in_use
-            m.logical_page = pg
-            m.last_activity = stp
-            m.update_flag = False
-            m.reclaim_flag = False
+                assert self._free_top, \
+                    "alloc_batch deficit: predictor overpromised"
+            top = self._free_top - 1
+            self._free_top = top
+            slot = int(free_arr[top])
+            state[slot] = _IN_USE         # FREE ⇒ flags already clear
+            owner[slot] = pg
+            last[slot] = stp
             out.append(slot)
             if slot < size:
                 used += 1
@@ -380,7 +515,7 @@ class ValetMempool:
 
     def touch(self, slot: int, step: int):
         """Record write activity (paper: timestamp tag updated on write)."""
-        self.slots[slot].last_activity = step
+        self.last_step[slot] = step
 
     def mark_reclaimable(self, slot: int) -> bool:
         """Remote replica now exists (WC polled): slot may be reclaimed.
@@ -389,85 +524,104 @@ class ValetMempool:
         the same page is still pending, so the flag is cleared and the slot
         stays IN_USE until that newer set completes (the caller re-marks it
         then)."""
-        m = self.slots[slot]
-        if m.update_flag:
-            m.update_flag = False
+        if self.update_flag[slot]:
+            self.update_flag[slot] = False
             return False
-        m.state = SlotState.RECLAIMABLE
-        m.reclaim_flag = True
+        self.state[slot] = _RECLAIMABLE
+        self.reclaim_flag[slot] = True
         return True
 
     def reclaim(self, slot: int) -> int:
         """Return a RECLAIMABLE slot to the free list.  O(1) pointer move."""
-        m = self.slots[slot]
-        assert m.state == SlotState.RECLAIMABLE, m.state
-        page = m.logical_page
-        m.state = SlotState.FREE
-        m.logical_page = -1
-        m.update_flag = False
-        m.reclaim_flag = False
+        assert self.state[slot] == _RECLAIMABLE, SlotState(int(
+            self.state[slot]))
+        page = int(self.owner[slot])
+        # RECLAIMABLE ⇒ update_flag already clear (mark_reclaimable defers
+        # flagged slots; a pending slot is never RECLAIMABLE)
+        self.state[slot] = _FREE
+        self.owner[slot] = -1
+        self.reclaim_flag[slot] = False
         if slot < self.size:
             self._used -= 1
-        self._free.append(slot)
+        self._free_arr[self._free_top] = slot
+        self._free_top += 1
         self.n_reclaimed += 1
         return page
 
+    def reclaim_window(self, start: int, end: int
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Targeted out-of-FIFO reclaim of every RECLAIMABLE slot in
+        ``[start, end)`` — the ``host_donate`` shrink window — as one masked
+        gather/scatter.  Identical per-slot transitions, free-stack append
+        order (ascending slot) and counters as calling ``reclaim`` on each.
+        Returns the reclaimed ``(slots, pages)`` arrays."""
+        w = start + np.flatnonzero(self.state[start:end] == _RECLAIMABLE)
+        if not w.size:
+            return w, w
+        pages = self.owner[w].copy()
+        self.state[w] = _FREE             # RECLAIMABLE ⇒ update_flag clear
+        self.owner[w] = -1
+        self.reclaim_flag[w] = False
+        self._used -= int(np.count_nonzero(w < self.size))
+        top = self._free_top
+        self._free_arr[top:top + w.size] = w
+        self._free_top = top + w.size
+        self.n_reclaimed += int(w.size)
+        return w, pages
+
     def release(self, slot: int):
         """Return an IN_USE slot directly to the free list (rollback path)."""
-        m = self.slots[slot]
-        assert m.state == SlotState.IN_USE, m.state
-        m.state = SlotState.FREE
-        m.logical_page = -1
-        m.update_flag = False
-        m.reclaim_flag = False
+        assert self.state[slot] == _IN_USE, SlotState(int(self.state[slot]))
+        self.state[slot] = _FREE
+        self.owner[slot] = -1
+        self.update_flag[slot] = False
+        self.reclaim_flag[slot] = False
         if slot < self.size:
             self._used -= 1
-        self._free.append(slot)
+        self._free_arr[self._free_top] = slot
+        self._free_top += 1
 
     def release_batch(self, slots):
-        """Bulk ``release``: same per-slot transitions with the attribute
-        lookups hoisted (spill/free paths release whole page runs)."""
-        meta = self.slots
-        free = self._free
-        size = self.size
-        used = self._used
-        for slot in slots:
-            slot = int(slot)
-            m = meta[slot]
-            assert m.state == SlotState.IN_USE, m.state
-            m.state = SlotState.FREE
-            m.logical_page = -1
-            m.update_flag = False
-            m.reclaim_flag = False
-            if slot < size:
-                used -= 1
-            free.append(slot)
-        self._used = used
+        """Bulk ``release``: the same per-slot transitions as one scatter
+        per column (spill/free paths release whole page runs).  ``slots``
+        must be distinct — they come from distinct pages' pool slots."""
+        sl = np.asarray(slots, np.int64)
+        if not sl.size:
+            return
+        assert (self.state[sl] == _IN_USE).all(), "release of non-IN_USE slot"
+        self.state[sl] = _FREE
+        self.owner[sl] = -1
+        self.update_flag[sl] = False
+        self.reclaim_flag[sl] = False
+        self._used -= int(np.count_nonzero(sl < self.size))
+        top = self._free_top
+        self._free_arr[top:top + sl.size] = sl
+        self._free_top = top + sl.size
 
     def free_count(self) -> int:
-        return len(self._free)
+        return self._free_top
 
     def reclaimable_slots(self) -> List[int]:
-        return [i for i in range(self.size)
-                if self.slots[i].state == SlotState.RECLAIMABLE]
+        return np.flatnonzero(
+            self.state[:self.size] == _RECLAIMABLE).tolist()
 
     # -- invariants (property tests) ----------------------------------------
 
     def check_invariants(self):
-        assert self.min_pages <= self.size <= min(self.max_pages, self.capacity)
-        brute_used = sum(1 for i in range(self.size)
-                         if self.slots[i].state != SlotState.FREE
-                         and self.slots[i].state != SlotState.UNBACKED)
+        assert self.min_pages <= self.size <= min(self.max_pages,
+                                                  self.capacity)
+        s = self.state[:self.size]
+        brute_used = int(np.count_nonzero((s != _FREE) & (s != _UNBACKED)))
         assert self._used == brute_used, (self._used, brute_used)
-        free_set: Set[int] = set(self._free)
-        assert len(free_set) == len(self._free), "duplicate free slots"
-        for i, m in enumerate(self.slots):
-            if i >= self.size:
-                assert m.state == SlotState.UNBACKED or i in free_set or True
-            if m.state == SlotState.FREE:
-                assert i in free_set, f"FREE slot {i} missing from free list"
-                assert m.logical_page == -1
-            else:
-                assert i not in free_set, f"non-FREE slot {i} on free list"
-        for i in self._free:
-            assert self.slots[i].state == SlotState.FREE
+        fl = self._free_arr[:self._free_top]
+        assert np.unique(fl).size == fl.size, "duplicate free slots"
+        assert (self.state[fl] == _FREE).all(), "non-FREE slot on free list"
+        free_mask = self.state == _FREE
+        assert int(np.count_nonzero(free_mask)) == fl.size, \
+            "FREE slot missing from free list"
+        assert (self.owner[free_mask] == -1).all()
+        # canonical §5.2 flags (the allocation/reclaim fast paths rely on
+        # these): FREE slots carry no flags, RECLAIMABLE no update_flag
+        assert not self.update_flag[free_mask].any()
+        assert not self.reclaim_flag[free_mask].any()
+        assert not self.update_flag[self.state == _RECLAIMABLE].any()

@@ -27,8 +27,11 @@ from repro.core.migration import MigrationEngine
 from repro.core.page_table import GlobalPageTable, Location, Tier
 from repro.core.policies import CostModel, Policy
 from repro.core.pool import SlotState, ValetMempool
-from repro.core.queues import WritePipeline, WriteSet
+from repro.core.queues import WritePipeline
 from repro.core.replication import ReplicaPlacer, fail_peer
+
+_IN_USE = int(SlotState.IN_USE)
+_RECLAIMABLE = int(SlotState.RECLAIMABLE)
 
 
 @dataclass
@@ -127,6 +130,14 @@ class TieredPageStore:
                       for _ in range(n_peers)]
         # remote blocks: (peer, block_slot) -> list of logical pages
         self.blocks: Dict[Tuple[int, int], List[int]] = {}
+        # dense per-peer block-table membership columns: ``_blk_live[p][s]``
+        # is True while MR block (p, s) is allocated, ``_blk_replica[p][s]``
+        # while it serves as some primary's replica.  The pressure paths
+        # select victim candidates with one masked flatnonzero over these
+        # instead of scanning the block dict; the per-block page lists stay
+        # list-backed (append-heavy, variable length).
+        self._blk_live = [np.zeros(1024, bool) for _ in range(n_peers)]
+        self._blk_replica = [np.zeros(1024, bool) for _ in range(n_peers)]
         self.block_replicas: Dict[Tuple[int, int], List[Tuple[int, int]]] = {}
         # reverse index: replica block -> its primary.  Replica blocks are
         # not independent victims (migrating one would leave the primary's
@@ -190,6 +201,17 @@ class TieredPageStore:
     def _block_id(self, peer: int, slot: int) -> int:
         return peer * (1 << 20) + slot
 
+    def _blk_ensure(self, peer: int, slot: int):
+        """Grow the dense block-membership columns to cover ``slot``."""
+        arr = self._blk_live[peer]
+        if slot < arr.shape[0]:
+            return
+        new = max(arr.shape[0] * 2, slot + 1)
+        for cols in (self._blk_live, self._blk_replica):
+            g = np.zeros(new, bool)
+            g[:cols[peer].shape[0]] = cols[peer]
+            cols[peer] = g
+
     def _alloc_block_slot(self, peer: int) -> Optional[int]:
         p = self.peers[peer]
         if p.failed or p.free() <= 0:
@@ -199,6 +221,8 @@ class TieredPageStore:
         p.used += 1
         p.mapped_blocks += 1
         self.blocks[(peer, slot)] = []
+        self._blk_ensure(peer, slot)
+        self._blk_live[peer][slot] = True
         if not p.connected:
             p.connected = True
             self.stats.connects += 1
@@ -223,10 +247,12 @@ class TieredPageStore:
         self.peers[peer].used -= 1
         key = (peer, slot)
         pages = self.blocks.pop(key, None)
+        self._blk_live[peer][slot] = False
         if self._open_block.get(peer) == key:
             self._open_block.pop(peer)
         prim = self._replica_of.pop(key, None)
         if prim is not None:
+            self._blk_replica[peer][slot] = False
             reps = self.block_replicas.get(prim)
             if reps:
                 self.block_replicas[prim] = tuple(r for r in reps
@@ -235,6 +261,7 @@ class TieredPageStore:
             # freeing a primary orphans its replicas: they stop being
             # replicas (and become ordinary eviction candidates) ...
             self._replica_of.pop(r, None)
+            self._blk_replica[r[0]][r[1]] = False
             if free_replicas and not self._block_referenced(r):
                 # ... unless nothing references them at all — then the
                 # orphan would leak its peer memory forever (ROADMAP
@@ -310,7 +337,10 @@ class TieredPageStore:
                     if rslot is not None:
                         reps.append((rp, rslot))
                         self._replica_of[(rp, rslot)] = blk
-            self.block_replicas[blk] = reps
+                        self._blk_replica[rp][rslot] = True
+            # tuple, like the bulk placement path: block_replicas values are
+            # immutable once the block closes
+            self.block_replicas[blk] = tuple(reps)
         self.blocks[blk].append(page)
         self.tracker.touch(self._block_id(*blk), self.step)
         reps = self.block_replicas.get(blk, ())
@@ -425,6 +455,8 @@ class TieredPageStore:
             mapped[peer] += 1
             lst: List[int] = []
             blocks[(peer, slot)] = lst
+            self._blk_ensure(peer, slot)
+            self._blk_live[peer][slot] = True
             if not connected[peer]:
                 connected[peer] = True
                 connects += 1
@@ -474,6 +506,7 @@ class TieredPageStore:
                                     rep_lists.append(r[1])
                                     self._replica_of[(rp, r[0])] = \
                                         (peer, slot)
+                                    self._blk_replica[rp][r[0]] = True
                         entry = [slot, lst, tuple(reps), rep_lists,
                                  peer * (1 << 20) + slot]
                         block_replicas[(peer, slot)] = entry[2]
@@ -680,6 +713,21 @@ class TieredPageStore:
         cls[host_hit] = self._CLS_HOST
         return cls
 
+    def _classify_scalar(self, pg: int) -> int:
+        """Scalar mirror of ``_snapshot_classes`` for one page (targeted
+        boundary re-classification): same resolution order — local mapping,
+        live-peer remote, host membership (tier or spill dict), cold."""
+        gpt = self.gpt
+        if gpt._l_slot[pg] >= 0:
+            return self._CLS_LOCAL
+        t = int(gpt._r_tier[pg])
+        if t == int(Tier.PEER) and not self._peer_failed[gpt._r_peer[pg]]:
+            return self._CLS_REMOTE
+        if t == int(Tier.HOST) or (self.host_pages
+                                   and pg in self.host_pages):
+            return self._CLS_HOST
+        return self._CLS_COLD
+
     def _cost_lut(self) -> np.ndarray:
         """Per-class cost table; entry 4 is the write cost so a single fancy
         index prices a mixed batch (writes carry class 4 in ``eff``).
@@ -694,14 +742,6 @@ class TieredPageStore:
                             c.local_write], np.float64)
             self._lut_cache = lut
         return lut
-
-    def _cost_list(self) -> list:
-        """``_cost_lut`` as a plain list (python-loop segment replay)."""
-        ll = getattr(self, "_lut_list", None)
-        if ll is None:
-            ll = self._cost_lut().tolist()
-            self._lut_list = ll
-        return ll
 
     @staticmethod
     def _accumulate_time(t: float, costs: np.ndarray) -> float:
@@ -791,17 +831,52 @@ class TieredPageStore:
         pages_l = pages.tolist()        # one materialization for the batch
 
         # running-cumulative bounds: the write cumsum is fixed for the batch
-        # (is_write never changes); the alloc cumsum is recomputed only when
-        # a boundary event actually re-planned some group (rare)
+        # (is_write never changes); the alloc cumsum and the hoisted
+        # execution arrays below are recomputed only when a boundary event
+        # actually re-planned some group (rare)
         cum_wr = np.cumsum(iw)
         total_w = int(cum_wr[-1])
         cum_alloc = np.cumsum(alloc_mask)
         total_a = int(cum_alloc[-1])
+        # batch-hoisted execution arrays: every segment takes contiguous
+        # slices of these instead of re-deriving them per segment
+        alloc_pos = np.flatnonzero(alloc_mask)     # positions of alloc ops
+        apages_all = pages[alloc_pos]
+        aw_all = iw[alloc_pos]                     # write (vs fill) allocs
+        costs_all = lut[eff]                       # per-op latencies
 
         # boundary-side lookup structures, built lazily on the first
         # boundary (pressure-free batches never pay for them)
         page_group = None
         glast_l = None
+
+        # deferred accounting: Stats counters, the step counter, and the
+        # sequential time accumulation for segment-executed ops flush in
+        # one pass per scalar interruption (a stall tail reads the live
+        # Stats) and once at batch end — executed ops' classes never change
+        # (re-plans only touch ops behind the boundary), and concatenated
+        # accumulate slices reproduce the per-segment double-add sequence
+        # bit for bit
+        st = self.stats
+        step_base = self.step
+        acct = 0
+        lat_override: List[Tuple[int, float]] = []
+
+        def flush_acct(upto: int):
+            nonlocal acct
+            if upto > acct:
+                c0, c1, c2, c3, c4 = np.bincount(
+                    eff[acct:upto], minlength=5).tolist()
+                st.writes += c4
+                st.ops += upto - acct
+                st.local_hits += c0
+                st.remote_hits += c1
+                st.host_hits += c2
+                st.cold_hits += c3
+                st.time_us = self._accumulate_time(
+                    st.time_us, costs_all[acct:upto])
+                self.step += upto - acct
+                acct = upto
 
         s = 0
         while s < n:
@@ -813,237 +888,261 @@ class TieredPageStore:
             cap = self.pool.alloc_prefix_capacity(need)
             if cap >= need:
                 m = n - s
+                pool_bound = False
             else:
                 m = int(np.searchsorted(cum_alloc, base_a + cap,
                                         side="right")) - s
+                pool_bound = True
             room = self.pipeline.staging_room()
             base_w = int(cum_wr[s - 1]) if s else 0
+            staging_bound = False
             if total_w - base_w > room:
                 mw = int(np.searchsorted(cum_wr, base_w + room,
                                          side="right")) - s
                 if mw < m:
                     m = mw
+                    pool_bound = False
+                    staging_bound = True
+                elif mw == m:
+                    staging_bound = True
             if m:
-                self._run_segment(pages, iw, eff, alloc_mask, pages_l,
-                                  s, m, out_lats, lut)
+                self._run_segment(pages_l, eff, alloc_mask, alloc_pos,
+                                  apages_all, aw_all, step_base, s, m)
                 s += m
             if s < n:
                 if page_group is None:
                     page_group = {p: g for g, p in
                                   enumerate(group_pages.tolist())}
                     glast_l = glast.tolist()
-                s, replanned = self._boundary_event(
-                    pages_l, iw, eff, alloc_mask, s, out_lats,
-                    order, starts, sizes, group_pages, page_group, glast_l)
+                if pool_bound and not staging_bound \
+                        and self.pool.size >= self.pool.max_pages:
+                    # pure pool overrun on a pool pinned at max_pages: the
+                    # reclaim replays scalar, the op itself is absorbed into
+                    # the next segment
+                    s2, replanned = self._boundary_inline(
+                        pages_l, iw, eff, alloc_mask, s, lat_override,
+                        flush_acct, order, starts, sizes, group_pages,
+                        page_group, glast_l)
+                    if s2 > s:         # stall tail accounted op s scalar
+                        acct = s2
+                    s = s2
+                else:
+                    flush_acct(s)
+                    s, replanned = self._boundary_event(
+                        pages_l, iw, eff, alloc_mask, s, lat_override,
+                        order, starts, sizes, group_pages, page_group,
+                        glast_l)
+                    acct = s           # the boundary op accounted scalar
                 if replanned:
                     cum_alloc = np.cumsum(alloc_mask)
                     total_a = int(cum_alloc[-1])
+                    alloc_pos = np.flatnonzero(alloc_mask)
+                    apages_all = pages[alloc_pos]
+                    aw_all = iw[alloc_pos]
+                    costs_all = lut[eff]
+        flush_acct(n)
+        out_lats[:n] = costs_all
+        for idx, lat in lat_override:  # scalar-accounted boundary ops
+            out_lats[idx] = lat
 
-    def _run_segment(self, pages, iw, eff, alloc_mask, pages_l, s, m,
-                     out_lats, lut):
+    # below this op count a fused scalar replay beats the fixed cost of the
+    # ~20 numpy kernels the vectorized segment pays (boundary-to-boundary
+    # slivers of a few ops are common under extreme pressure; threshold
+    # picked empirically on the pressure_speedup trace)
+    _SMALL_SEGMENT = 12
+
+    def _run_segment(self, pages_l, eff, alloc_mask, alloc_pos, apages_all,
+                     aw_all, step_base, s, m):
         """Execute one bulk segment [s, s+m) whose allocations are known to
-        fit: identical free-list pops and growth triggers as the scalar
-        sequence of write/fill allocs, then grouped cost accounting.
+        fit: identical free-stack pops, page-table maps, staging rows and
+        §5.2 flags as the scalar op sequence, with one gather/scatter per
+        metadata column for the whole segment.  Accounting (Stats, the
+        step counter, per-op latencies) is deferred to the caller's
+        batch-level flush — bitwise the same totals.
 
-        Short segments (the shape memory pressure forces: the pool frees
-        only ``pages_per_block`` slots per boundary reclaim) take a plain
-        Python replay — the fixed per-call cost of ~25 numpy kernels on
-        16-element arrays loses to a tight loop there, and the accounting
-        (sequential float adds in op order) is bitwise identical."""
-        if m <= 64:
-            return self._run_segment_small(pages_l, eff, alloc_mask, s, m,
-                                           out_lats)
+        The segment's alloc set comes as contiguous slices of the hoisted
+        batch arrays (two ``searchsorted`` probes, no re-scan); for pools
+        pinned at ``max_pages`` (the pressure regime) the commit is fully
+        fused — writes and fills land with a single state scatter each
+        plus the row appends.  Growable pools replay the scalar growth
+        triggers inside ``alloc_batch``."""
+        if m <= self._SMALL_SEGMENT:
+            return self._run_segment_small(pages_l, eff, alloc_mask,
+                                           step_base, s, m)
         e = s + m
-        alloc_idx = s + np.flatnonzero(alloc_mask[s:e])
-        if alloc_idx.size:
-            apages = pages[alloc_idx].tolist()
-            asteps = (alloc_idx + (self.step + 1 - s)).tolist()
-            slots = self.pool.alloc_batch(apages, asteps, allow_deficit=True)
-            assert slots is not None
-            self.gpt.map_local_batch(pages[alloc_idx],
-                                     np.asarray(slots, np.int64))
-            w_alloc = iw[alloc_idx]
-            if w_alloc.all():
-                self.pipeline.stage_batch(apages, slots)
+        lo = int(np.searchsorted(alloc_pos, s))
+        hi = int(np.searchsorted(alloc_pos, e))
+        if lo == hi:
+            return
+        k = hi - lo
+        apages = apages_all[lo:hi]
+        wmask = aw_all[lo:hi]
+        asteps = alloc_pos[lo:hi] + (step_base + 1)
+        pool = self.pool
+        if pool.size >= pool.max_pages and pool._free_top >= k \
+                and self.data_plane is None:
+            # fused commit: pop the run off the free stack, scatter every
+            # column once (fills go straight to RECLAIMABLE — clean slots),
+            # map, stage the writes, queue the fills
+            top = pool._free_top - k
+            sl = pool._free_arr[top:pool._free_top][::-1].copy()
+            pool._free_top = top
+            if wmask.all():
+                pool.state[sl] = _IN_USE
+                fills = False
             else:
-                wsel = np.flatnonzero(w_alloc)
-                if wsel.size:
-                    self.pipeline.stage_batch([apages[k] for k in wsel],
-                                              [slots[k] for k in wsel])
-                # filled slots are clean (a remote copy exists):
-                # immediately reclaimable, no send needed
-                fsel = np.flatnonzero(~w_alloc)
-                self.pipeline.complete_fill_batch(
-                    [apages[k] for k in fsel], [slots[k] for k in fsel])
-            if self.data_plane is not None:
-                lw_batch = getattr(self.data_plane, "local_write_batch",
-                                   None)
-                if lw_batch is not None:
-                    # one gather/scatter for the whole alloc run (fills and
-                    # write allocs alike) instead of one update per page
-                    lw_batch(apages, slots)
-                else:
-                    for pg, sl in zip(apages, slots):
-                        self.data_plane.local_write(pg, sl)
+                fmask = ~wmask
+                pool.state[sl] = np.where(wmask, np.int8(_IN_USE),
+                                          np.int8(_RECLAIMABLE))
+                fsl = sl[fmask]
+                pool.reclaim_flag[fsl] = True
+                fills = True
+            pool.owner[sl] = apages
+            pool.last_step[sl] = asteps
+            if pool.size == pool.capacity:
+                pool._used += k
+            else:
+                pool._used += int(np.count_nonzero(sl < pool.size))
+            pool.n_alloc_from_pool += k
+            # the batch-start snapshot gather already grew the page table
+            # over every page in this batch, so the local map is one scatter
+            self.gpt.map_local_known(apages, sl)
+            if fills:
+                wpg = apages[wmask]
+                if wpg.size:
+                    self.pipeline.stage_rows(wpg, sl[wmask])
+                self.pipeline.reclaimable.push_rows(apages[fmask], fsl)
+            else:
+                self.pipeline.stage_rows(apages, sl)
+            return
+        slots = np.asarray(
+            pool.alloc_batch(apages.tolist(), asteps.tolist(),
+                             allow_deficit=True), np.int64)
+        self.gpt.map_local_known(apages, slots)
+        if wmask.all():
+            self.pipeline.stage_rows(apages, slots)
+        else:
+            wsel = np.flatnonzero(wmask)
+            if wsel.size:
+                self.pipeline.stage_rows(apages[wsel], slots[wsel])
+            # filled slots are clean (a remote copy exists): immediately
+            # reclaimable, no send needed — and fresh, so the §5.2
+            # deferral gather is skipped
+            fsel = np.flatnonzero(~wmask)
+            self.pipeline.fill_rows(apages[fsel], slots[fsel])
+        if self.data_plane is not None:
+            lw_batch = getattr(self.data_plane, "local_write_batch", None)
+            if lw_batch is not None:
+                # one gather/scatter for the whole alloc run (fills and
+                # write allocs alike) instead of one update per page
+                lw_batch(apages.tolist(), slots.tolist())
+            else:
+                for pg, slt in zip(apages.tolist(), slots.tolist()):
+                    self.data_plane.local_write(pg, slt)
 
-        st = self.stats
-        effm = eff[s:e]
-        counts5 = np.bincount(effm, minlength=5)
-        st.writes += int(counts5[4])
-        st.ops += m
-        st.local_hits += int(counts5[0])
-        st.remote_hits += int(counts5[1])
-        st.host_hits += int(counts5[2])
-        st.cold_hits += int(counts5[3])
-        costs = lut[effm]
-        st.time_us = self._accumulate_time(st.time_us, costs)
-        out_lats[s:e] = costs
-        self.step += m
+    def _run_segment_small(self, pages_l, eff, alloc_mask, step_base, s, m):
+        """Scalar replay of a tiny segment (a couple of ops between
+        adjacent boundaries): the same alloc/stage/fill transitions in op
+        order without the fixed cost of the fused path's kernels.
+        Accounting is deferred like the vectorized path.
 
-    def _run_segment_small(self, pages_l, eff, alloc_mask, s, m, out_lats):
-        """Python replay of a short segment: same alloc/stage/fill sequence
-        and the same sequential double-add cost accumulation as the numpy
-        path (and the scalar loop), with no per-kernel numpy overhead.
-
-        For a pool that cannot grow (the pressure regime: it sits pinned at
-        ``max_pages``), allocation, local mapping, staging and fill
-        bookkeeping are fused into the accounting loop in scalar op order —
-        the identical per-slot transitions with no intermediate lists and
-        no second pass.  Growable pools keep the batched sub-calls (their
-        growth triggers live inside ``alloc_batch``)."""
+        For a pool that cannot grow (the pressure regime), allocation,
+        local mapping, staging and fill bookkeeping fuse into one loop of
+        per-slot column writes; growable pools keep the batched sub-calls
+        (their growth triggers live inside ``alloc_batch``)."""
         e = s + m
         eff_l = eff[s:e].tolist()
         am_l = alloc_mask[s:e].tolist()
-        lut_l = self._cost_list()
-        st = self.stats
-        step = self.step
+        base = step_base + s
         pool = self.pool
-        c0 = c1 = c2 = c3 = c4 = 0
-        t = st.time_us
-        lats = [0.0] * m
 
         if pool.size >= pool.max_pages and self.data_plane is None:
             pipeline = self.pipeline
-            free = pool._free
-            meta = pool.slots
+            free_arr = pool._free_arr
+            state = pool.state
+            owner = pool.owner
+            last = pool.last_step
+            uflag = pool.update_flag
+            rflag = pool.reclaim_flag
             size = pool.size
             used = pool._used
             n_alloc = 0
             l_slot = self.gpt._l_slot
-            pend = pipeline._pending_slot
-            stq = pipeline.staging._q
+            stq = pipeline.staging
+            rq = pipeline.reclaimable
             seq = pipeline._seq
-            rq = pipeline.reclaimable._q
-            in_use = SlotState.IN_USE
-            reclaimable = SlotState.RECLAIMABLE
-            for k in range(m):
-                c = eff_l[k]
-                if am_l[k]:
-                    pg = pages_l[s + k]
-                    slot = free.pop()
-                    sm = meta[slot]
-                    sm.state = in_use
-                    sm.logical_page = pg
-                    sm.last_activity = step + k + 1
-                    sm.update_flag = False
-                    sm.reclaim_flag = False
+            for kk in range(m):
+                if am_l[kk]:
+                    c = eff_l[kk]
+                    pg = pages_l[s + kk]
+                    top = pool._free_top - 1
+                    pool._free_top = top
+                    slot = int(free_arr[top])
+                    owner[slot] = pg
+                    last[slot] = base + kk + 1
                     if slot < size:
                         used += 1
                     n_alloc += 1
                     l_slot[pg] = slot
                     if c == 4:
-                        prev = pend.get(pg)
-                        if prev is not None:
-                            meta[prev].update_flag = True
+                        state[slot] = _IN_USE
+                        pipeline._ensure_page(pg)
+                        pend = pipeline._pend
+                        prev = pend[pg]
+                        if prev >= 0:
+                            uflag[prev] = True
                         pend[pg] = slot
-                        stq.append(WriteSet(seq, (pg,), (slot,)))
+                        stq.push_row(seq, pg, slot)
                         seq += 1
                     else:
                         # cache fill: clean slot, immediately reclaimable
-                        sm.state = reclaimable
-                        sm.reclaim_flag = True
-                        rq.append(WriteSet(-1, (pg,), (slot,)))
-                if c == 0:
-                    c0 += 1
-                elif c == 4:
-                    c4 += 1
-                elif c == 1:
-                    c1 += 1
-                elif c == 2:
-                    c2 += 1
-                else:
-                    c3 += 1
-                lat = lut_l[c]
-                lats[k] = lat
-                t += lat
+                        state[slot] = _RECLAIMABLE
+                        rflag[slot] = True
+                        rq.push_row(pg, slot)
             pool._used = used
             pool.n_alloc_from_pool += n_alloc
             pipeline._seq = seq
-        else:
-            apages: List[int] = []
-            asteps: List[int] = []
-            awrite: List[bool] = []
-            for k in range(m):
-                c = eff_l[k]
-                if am_l[k]:
-                    apages.append(pages_l[s + k])
-                    asteps.append(step + k + 1)
-                    awrite.append(c == 4)
-                if c == 0:
-                    c0 += 1
-                elif c == 4:
-                    c4 += 1
-                elif c == 1:
-                    c1 += 1
-                elif c == 2:
-                    c2 += 1
-                else:
-                    c3 += 1
-                lat = lut_l[c]
-                lats[k] = lat
-                t += lat
-            if apages:
-                slots = self.pool.alloc_batch(apages, asteps,
-                                              allow_deficit=True)
-                assert slots is not None
-                self.gpt.map_local_batch(np.asarray(apages, np.int64),
-                                         np.asarray(slots, np.int64))
-                if all(awrite):
-                    self.pipeline.stage_batch(apages, slots)
-                else:
-                    wpg: List[int] = []
-                    wsl: List[int] = []
-                    fpg: List[int] = []
-                    fsl: List[int] = []
-                    for pg, sl, w in zip(apages, slots, awrite):
-                        if w:
-                            wpg.append(pg)
-                            wsl.append(sl)
-                        else:
-                            fpg.append(pg)
-                            fsl.append(sl)
-                    if wpg:
-                        self.pipeline.stage_batch(wpg, wsl)
-                    self.pipeline.complete_fill_batch(fpg, fsl)
-                if self.data_plane is not None:
-                    lw_batch = getattr(self.data_plane, "local_write_batch",
-                                       None)
-                    if lw_batch is not None:
-                        lw_batch(apages, slots)
+            return
+        apages: List[int] = []
+        asteps: List[int] = []
+        awrite: List[bool] = []
+        for kk in range(m):
+            if am_l[kk]:
+                apages.append(pages_l[s + kk])
+                asteps.append(base + kk + 1)
+                awrite.append(eff_l[kk] == 4)
+        if apages:
+            slots = pool.alloc_batch(apages, asteps, allow_deficit=True)
+            assert slots is not None
+            self.gpt.map_local_batch(np.asarray(apages, np.int64),
+                                     np.asarray(slots, np.int64))
+            if all(awrite):
+                self.pipeline.stage_rows(apages, slots)
+            else:
+                wpg: List[int] = []
+                wsl: List[int] = []
+                fpg: List[int] = []
+                fsl: List[int] = []
+                for pg, slt, w in zip(apages, slots, awrite):
+                    if w:
+                        wpg.append(pg)
+                        wsl.append(slt)
                     else:
-                        for pg, sl in zip(apages, slots):
-                            self.data_plane.local_write(pg, sl)
-        st.writes += c4
-        st.ops += m
-        st.local_hits += c0
-        st.remote_hits += c1
-        st.host_hits += c2
-        st.cold_hits += c3
-        st.time_us = t
-        out_lats[s:e] = lats
-        self.step += m
+                        fpg.append(pg)
+                        fsl.append(slt)
+                if wpg:
+                    self.pipeline.stage_rows(wpg, wsl)
+                self.pipeline.complete_fill_batch(fpg, fsl)
+            if self.data_plane is not None:
+                lw_batch = getattr(self.data_plane, "local_write_batch",
+                                   None)
+                if lw_batch is not None:
+                    lw_batch(apages, slots)
+                else:
+                    for pg, slt in zip(apages, slots):
+                        self.data_plane.local_write(pg, slt)
 
-    def _boundary_event(self, pages_l, iw, eff, alloc_mask, m, out_lats,
+    def _boundary_event(self, pages_l, iw, eff, alloc_mask, m, lat_override,
                         order, starts, sizes, group_pages, page_group,
                         glast_l) -> Tuple[int, bool]:
         """Inline boundary event at batch position ``m``: run the one op
@@ -1067,34 +1166,99 @@ class TieredPageStore:
             lat, ok = self._boundary_write(pg)
         else:
             lat, ok = self._boundary_fill_read(pg, int(eff[m]))
-        out_lats[m] = lat
+        lat_override.append((m, lat))
         self._unmap_log = None
+        replanned = self._replan_after_boundary(
+            unmapped, None if ok else pg, m, False, iw, eff, alloc_mask,
+            order, starts, sizes, group_pages, page_group, glast_l)
+        return m + 1, replanned
 
+    def _boundary_inline(self, pages_l, iw, eff, alloc_mask, m, lat_override,
+                         flush_acct, order, starts, sizes, group_pages,
+                         page_group, glast_l) -> Tuple[int, bool]:
+        """Pool-overrun boundary for pools pinned at ``max_pages``: replay
+        the scalar schedule's side effects — the failed alloc probe (whose
+        only effect is the ``n_alloc_failed`` counter: ``maybe_grow`` is
+        provably futile at max and short-circuits) and the
+        ``_reclaim(pages_per_block)`` burst — then ABSORB the overrunning
+        op into the next segment instead of replaying it scalar.  The
+        scalar retry would pop exactly the slot the next segment's bulk
+        alloc pops first, so the op's transitions vectorize with its
+        successors: same free-stack order, same staging row and seq, same
+        step/latency accounting sequence.  When the reclaim frees nothing
+        the op must stall (write: synchronous flush) or stay unfilled
+        (read) — those rare paths replay the remaining scalar schedule via
+        the stall tails.  Returns ``(next index, replanned)``; next index
+        is ``m`` itself when the op was absorbed."""
+        pool = self.pool
+        pool.n_alloc_failed += 1       # the alloc attempt on an empty list
+        self._unmap_log = unmapped = []
+        self._reclaim(max(1, self.pages_per_block))
+        absorbed = pool._free_top > 0
+        ok = True
+        if not absorbed:
+            # the stall tail reads live Stats/step: settle the deferred
+            # accounting through op m first
+            flush_acct(m)
+            if iw[m]:
+                lat, ok = self._boundary_write_stall(pages_l[m])
+            else:
+                lat, ok = self._boundary_fill_miss(int(eff[m]))
+            lat_override.append((m, lat))
+        self._unmap_log = None
+        replanned = self._replan_after_boundary(
+            unmapped, None if ok else pages_l[m], m, absorbed, iw,
+            eff, alloc_mask, order, starts, sizes, group_pages, page_group,
+            glast_l)
+        return (m if absorbed else m + 1), replanned
+
+    def _replan_after_boundary(self, unmapped, fail_pg, m, include_m, iw,
+                               eff, alloc_mask, order, starts, sizes,
+                               group_pages, page_group, glast_l) -> bool:
+        """Re-plan ONLY the pages a boundary event invalidated: pages whose
+        local mappings its reclaims dropped, plus the op's own page when
+        the op FAILED (a host spill or an unfilled read).  A successful
+        boundary write/fill lands its page LOCAL — exactly what the plan
+        already encodes for the ops behind it — so the common case re-plans
+        nothing; the ``page_group``/``glast_l`` probes keep only pages that
+        are in this batch AND still have ops behind the boundary.
+
+        ``include_m`` is True for absorbed boundaries: op ``m`` has NOT
+        executed yet (it runs as the next segment's first op), so it is
+        part of the remaining window — an absorbed boundary write whose
+        page's OLD slot the reclaim just unmapped must stay the group's
+        first remaining op, keeping the reads behind it LOCAL."""
         groups = set()
         for arr in unmapped:            # lists of plain ints (see _reclaim)
             for p in arr:
                 g = page_group.get(p)
                 if g is not None and glast_l[g] > m:
                     groups.add(g)
-        if not ok:
-            g = page_group.get(pg)
+        if fail_pg is not None:
+            g = page_group.get(fail_pg)
             if g is not None and glast_l[g] > m:
                 groups.add(g)
         if not groups:
-            return m + 1, False
+            return False
+        side = "left" if include_m else "right"
         todo = []
         for g in sorted(groups):
             ops = order[starts[g]: starts[g] + sizes[g]]
-            lo = int(np.searchsorted(ops, m, side="right"))
+            lo = int(np.searchsorted(ops, m, side=side))
             if lo < ops.size:
                 todo.append((int(group_pages[g]), ops[lo:]))
         if not todo:
-            return m + 1, False
-        cls_new = self._snapshot_classes(
-            np.fromiter((t[0] for t in todo), np.int64, len(todo)),
-            known=True)
+            return False
+        if len(todo) <= 4:
+            # a boundary invalidates a handful of pages at most: per-page
+            # scalar resolution beats the vector gather's fixed cost
+            cls_new = [self._classify_scalar(p) for p, _ in todo]
+        else:
+            cls_new = self._snapshot_classes(
+                np.fromiter((t[0] for t in todo), np.int64, len(todo)),
+                known=True).tolist()
         local_c = np.int8(self._CLS_LOCAL)
-        for (_, K), c in zip(todo, cls_new.tolist()):
+        for (_, K), c in zip(todo, cls_new):
             iwK = iw[K]
             effK = np.where(iwK, np.int8(4), local_c)
             allocK = iwK.copy()
@@ -1113,7 +1277,7 @@ class TieredPageStore:
                         allocK[rd[0]] = True
             eff[K] = effK
             alloc_mask[K] = allocK
-        return m + 1, True
+        return True
 
     def _boundary_write(self, pg: int) -> Tuple[float, bool]:
         """The scalar ``write`` schedule for one boundary op, inlined:
@@ -1170,12 +1334,54 @@ class TieredPageStore:
             self.gpt.map_local(pg, slot)
             if self.data_plane is not None:
                 self.data_plane.local_write(pg, slot)
-            ws = WriteSet(-1, (pg,), (slot,))
             self.pool.mark_reclaimable(slot)
-            self.pipeline.reclaimable.push(ws)
+            self.pipeline.reclaimable.push_row(pg, slot)
         st.time_us += lat
         st.ops += 1
         return lat, slot is not None
+
+    def _boundary_write_stall(self, pg: int) -> Tuple[float, bool]:
+        """Scalar tail of an absorbed-boundary write whose reclaim freed
+        nothing: the post-reclaim alloc probe fails too, then the
+        synchronous flush stall + reclaim + final attempt — byte-for-byte
+        the reference sequence from that point.  (The scalar ``write``
+        bumps the step before its alloc attempts; nothing before the flush
+        reads it, so bumping here is equivalent.)"""
+        self.pool.n_alloc_failed += 1  # the post-reclaim retry found nothing
+        self.step += 1
+        st = self.stats
+        st.writes += 1
+        lat = self._flush(self.pages_per_block, in_critical_path=True)
+        self._reclaim(self.pages_per_block)
+        ws = self.pipeline.write((pg,), self.step)
+        if ws is not None:
+            self.gpt.map_local(pg, ws.slots[0])
+            if self.data_plane is not None:
+                self.data_plane.local_write(pg, ws.slots[0])
+            lat += self.costs.local_write
+        else:
+            lat += self.costs.cold_write           # total pressure: spill
+            self._host_add(pg)
+        st.time_us += lat
+        st.ops += 1
+        return lat, ws is not None
+
+    def _boundary_fill_miss(self, cls_m: int) -> Tuple[float, bool]:
+        """Scalar tail of an absorbed-boundary fill-read whose reclaim
+        freed nothing: the retry alloc fails as well, the page stays
+        unfilled, and the hit class from the plan is accounted exactly as
+        the scalar read would."""
+        self.pool.n_alloc_failed += 1  # the post-reclaim retry found nothing
+        self.step += 1
+        st = self.stats
+        if cls_m == self._CLS_REMOTE:
+            st.remote_hits += 1
+        else:
+            st.host_hits += 1
+        lat = float(self._cost_lut()[cls_m])
+        st.time_us += lat
+        st.ops += 1
+        return lat, False
 
     def _read_run_writethrough(self, pages: np.ndarray) -> np.ndarray:
         """All-reads run for pool-less policies: reads never mutate state
@@ -1226,9 +1432,8 @@ class TieredPageStore:
         self.gpt.map_local(page, slot)
         if self.data_plane is not None:
             self.data_plane.local_write(page, slot)
-        ws = WriteSet(-1, (page,), (slot,))
         self.pool.mark_reclaimable(slot)
-        self.pipeline.reclaimable.push(ws)
+        self.pipeline.reclaimable.push_row(page, slot)
 
     # -- background machinery ----------------------------------------------------
 
@@ -1244,25 +1449,18 @@ class TieredPageStore:
         every page whose local mapping is dropped is recorded, so the batch
         engine re-classifies exactly the invalidated pages afterwards."""
         if self.batch_reclaim:
-            freed = self.pipeline.reclaim_bulk(n)
-            if freed:
-                if len(freed) <= 64:
-                    # pages_per_block-sized burst: scalar check-then-unmap
-                    # beats the gather/scatter pipeline at this size
-                    dropped = self.gpt.unmap_if_current(freed)
-                    if dropped and self._unmap_log is not None:
-                        self._unmap_log.append(dropped)
-                    return len(freed)
-                slots = np.fromiter((s for s, _ in freed), np.int64,
-                                    len(freed))
-                pages = np.fromiter((p for _, p in freed), np.int64,
-                                    len(freed))
-                live = pages[self.gpt.local_slots_batch(pages) == slots]
+            slots, pages = self.pipeline.reclaim_bulk(n)
+            k = int(slots.size)
+            if k:
+                # a page freed twice in one burst matches at most one of its
+                # slots, exactly like the sequential check-then-unmap (freed
+                # pages were mapped once, so the growth check is skipped)
+                live = pages[self.gpt.local_slots_known(pages) == slots]
                 if live.size:
-                    self.gpt.unmap_local_batch(live)
+                    self.gpt._l_slot[live] = -1
                     if self._unmap_log is not None:
                         self._unmap_log.append(live.tolist())
-            return len(freed)
+            return k
         freed = self.pipeline.reclaim(n)
         dropped = [] if self._unmap_log is not None else None
         for slot, pg in freed:
@@ -1286,10 +1484,35 @@ class TieredPageStore:
         return self._flush_scalar(n, in_critical_path)
 
     def _flush_batched(self, n: int, in_critical_path: bool = False) -> float:
-        """One bulk placement pass over the whole flush batch: pre-drawn p2c
-        pairs, grouped slot release / reclaimable-queue bookkeeping
-        (``complete_flush``), and a single ``map_remote_batch`` scatter —
-        no per-write-set Python loop."""
+        """One bulk placement pass over the whole flush batch: the staged
+        rows pop as three column arrays (no WriteSet objects), placement
+        runs with pre-drawn p2c pairs, the pool/queue bookkeeping is the
+        vectorized ``complete_flush_rows`` and one ``map_remote_batch``
+        scatter lands the batch.  Held or multi-page entries (migration
+        parks; the generic ``write()`` API) fall back to the WriteSet
+        walk — bitwise the same state either way."""
+        rows = self.pipeline.take_flush_rows(n)
+        if rows is None:
+            return self._flush_batched_ws(n, in_critical_path)
+        _seqs, parr, sarr = rows
+        if not parr.size:
+            return 0.0
+        pages = parr.tolist()
+        tiers, peers_out, slots_out, reps_out, costs = \
+            self._place_pages_bulk(pages, flush=True)
+        self.pipeline.complete_flush_rows(parr, sarr)
+        self.gpt.map_remote_batch(pages, tiers, peers_out, slots_out,
+                                  reps_out)
+        if in_critical_path:
+            cost = self._accumulate_time(0.0, np.asarray(costs, np.float64))
+            self.stats.write_stall_us += cost
+            return cost
+        return 0.0                      # lazy send: off the critical path
+
+    def _flush_batched_ws(self, n: int,
+                          in_critical_path: bool = False) -> float:
+        """WriteSet-walk fallback of ``_flush_batched`` (held/multi-page
+        staging entries)."""
         batch = self.pipeline.take_flush_batch(n)
         if not batch:
             return 0.0
@@ -1373,21 +1596,26 @@ class TieredPageStore:
     def peer_pressure(self, peer: int, blocks_to_free: int) -> int:
         """A peer's native applications claimed memory; free MR blocks.
 
-        Replica blocks are skipped as victims — they only move or die with
-        their primary (victimizing one independently would dangle the
-        primary's replica list and the page-table replica tuples)."""
-        keys = [k for k in self.blocks
-                if k[0] == peer and k not in self._replica_of]
-        if not keys:
+        Victim candidates come from one masked ``flatnonzero`` over the
+        dense per-peer block-membership columns (slots are allocated
+        monotonically and never reused, so ascending slot order equals the
+        old dict-scan insertion order).  Replica blocks are skipped as
+        victims — they only move or die with their primary (victimizing one
+        independently would dangle the primary's replica list and the
+        page-table replica tuples)."""
+        hi = self._next_block_slot[peer]
+        cand_slots = np.flatnonzero(self._blk_live[peer][:hi]
+                                    & ~self._blk_replica[peer][:hi])
+        if not cand_slots.size:
             return 0
-        cand_ids = [self._block_id(*k) for k in keys]
-        id_to_key = dict(zip(cand_ids, keys))
+        cand_ids = peer * (1 << 20) + cand_slots    # dense, already ordered
+        blk = 1 << 20
 
         if self.policy.evict_action == "migrate":
             migs = self.migrator.handle_pressure(
                 peer, blocks_to_free,
                 block_pages=lambda bid: list(
-                    self.blocks.get(id_to_key[bid], [])),
+                    self.blocks.get((bid // blk, bid % blk), [])),
                 candidate_blocks=cand_ids, step=self.step,
                 batched=self.batch_reclaim)
             done = 0
@@ -1405,9 +1633,10 @@ class TieredPageStore:
         else:
             victims = cand_ids[:blocks_to_free]
         if self.batch_reclaim:
-            return self._evict_delete_batched(victims, id_to_key, peer)
+            return self._evict_delete_batched(victims, peer)
         for bid in victims:
-            key = id_to_key[bid]
+            bid = int(bid)
+            key = (bid // blk, bid % blk)
             for pg in self.blocks.get(key, []):
                 if self.gpt.remote_location(pg) and \
                         self.gpt.remote_location(pg).peer == peer:
@@ -1421,7 +1650,7 @@ class TieredPageStore:
             self.stats.evictions += 1
         return len(victims)
 
-    def _evict_delete_batched(self, victims, id_to_key, peer: int) -> int:
+    def _evict_delete_batched(self, victims, peer: int) -> int:
         """Delete-style eviction in bulk: one gather classifies every victim
         page, non-replicated pages drop to backup/cold with one
         ``map_remote_batch`` scatter.  Replicated pages (rare on the
@@ -1429,9 +1658,11 @@ class TieredPageStore:
         per-occurrence walk — a promoted replica may land back on the
         pressured peer and must be re-checked in order."""
         tier = Tier.COLD if self.policy.cold_backup else Tier.NONE
+        blk = 1 << 20
         pages: List[int] = []
+        victims = [int(b) for b in victims]
         for bid in victims:
-            pages.extend(self.blocks.get(id_to_key[bid], []))
+            pages.extend(self.blocks.get((bid // blk, bid % blk), []))
         if pages:
             if self.gpt.has_replicas():
                 for pg in pages:
@@ -1449,7 +1680,7 @@ class TieredPageStore:
                     self.gpt.map_remote_batch(hit, [int(tier)] * m,
                                               [-1] * m, [-1] * m, None)
         for bid in victims:
-            self._free_block(*id_to_key[bid], free_replicas=True)
+            self._free_block(bid // blk, bid % blk, free_replicas=True)
             self._open_block.pop(peer, None)
             self.stats.evictions += 1
         return len(victims)
@@ -1478,23 +1709,20 @@ class TieredPageStore:
         prefix of the slot array), so donation targets them directly: flush
         everything staged (slots can't leave while they hold the only copy),
         then reclaim the RECLAIMABLE slots inside the shrink window
-        out-of-FIFO-order — §5.2 safety comes from the slot state, not the
-        queue order; their stale queue entries are skipped later by the
-        (slot, page) match guard.  Returns pages actually donated — fewer
-        than asked when live (IN_USE) data pins the tail."""
+        out-of-FIFO-order with one masked gather/scatter
+        (``ValetMempool.reclaim_window``) — §5.2 safety comes from the slot
+        state, not the queue order; their stale queue entries are skipped
+        later by the (slot, page) match guard.  Returns pages actually
+        donated — fewer than asked when live (IN_USE) data pins the tail."""
         pool = self.pool
         target = max(pool.size - n_pages, pool.min_pages)
         if target >= pool.size:
             return 0
         if self.policy.lazy_send:
             self._flush(len(self.pipeline.staging))
-        slots_meta = pool.slots
-        stale = []
-        for slot in range(target, pool.size):
-            if slots_meta[slot].state is SlotState.RECLAIMABLE:
-                pg = pool.reclaim(slot)
-                if self.gpt.local_slot(pg) == slot:
-                    stale.append(pg)
-        if stale:
-            self.gpt.unmap_local_batch(np.asarray(stale, np.int64))
+        slots, pgs = self.pipeline.reclaim_window(target, pool.size)
+        if pgs.size:
+            stale = pgs[self.gpt.local_slots_batch(pgs) == slots]
+            if stale.size:
+                self.gpt.unmap_local_batch(stale)
         return pool.shrink_by(n_pages)

@@ -76,7 +76,8 @@ class ValetServeEngine:
                  policy: Policy = VALET, costs: CostModel = TPU_COSTS,
                  step_cost_us: float = 0.0, seed: int = 0,
                  coordinator=None, container_name: Optional[str] = None,
-                 container_weight: float = 1.0):
+                 container_weight: float = 1.0,
+                 weight: Optional[float] = None):
         self.params = params
         self.cfg = cfg
         self.ctx = ctx
@@ -100,10 +101,16 @@ class ValetServeEngine:
         # the *effective* pool size is what gets coordinated.
         self.coordinator = coordinator
         self._lease = None
+        # per-container QoS weight (§3.4): a heavier engine claims a larger
+        # weighted-fair share of the slab surplus, so coordinator-driven
+        # reclamation sheds lighter co-tenants toward their (smaller) fair
+        # shares first.  ``weight=`` is the serve-API spelling;
+        # ``container_weight`` is kept for symmetry with TieredPageStore.
+        self.weight = container_weight if weight is None else weight
         if coordinator is not None:
             self._lease = coordinator.register(
                 min_pages=min_pool or pool_slots, max_pages=pool_slots,
-                weight=container_weight, name=container_name)
+                weight=self.weight, name=container_name)
         self.pool = ValetMempool(
             pool_slots,
             min_pages=min_pool or pool_slots,
@@ -277,9 +284,10 @@ class ValetServeEngine:
         for li in self.paged_layers:
             ks = jnp.asarray(np.stack([np.asarray(b[li][0]) for b in blobs]))
             vs = jnp.asarray(np.stack([np.asarray(b[li][1]) for b in blobs]))
-            pool = self.caches["layers"][li]["pool"]
-            self.caches["layers"][li]["pool"] = dev.KVPool(
-                pool.k.at[idx].set(ks), pool.v.at[idx].set(vs))
+            # one whole-page scatter per paged layer via the shared bulk
+            # data-plane primitive (the same one fill/write allocs ride)
+            self.caches["layers"][li]["pool"] = dev.local_write_batch(
+                self.caches["layers"][li]["pool"], ks, vs, idx)
         self.gpt.map_local_batch(needed, np.asarray(slots, np.int64))
         self.gpt.drop_remote_batch(needed)
         self.tracker.on_write(needed_l, self.step_counter)

@@ -10,6 +10,7 @@ REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 FULL = {"batch_speedup": {"speedup": 4.0},
         "pressure_speedup": {"speedup": 1.0},
         "reclaim_speedup": {"speedup": 3.6},
+        "reclaim_floor": {"speedup": 2.0},
         "multi_tenant": {"speedup": 1.3}}
 
 

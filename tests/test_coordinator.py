@@ -220,6 +220,115 @@ def test_donation_respects_live_data():
     donor.pipeline.check_invariants()
 
 
+# -- leased-pool overrun prediction (plan-once engine, PR-4 follow-up) ---------
+
+
+def test_leased_prefix_capacity_is_lower_bound_and_nontrivial():
+    """For a coordinator-leased pool the overrun predictor must (a) stay a
+    lower bound on the allocations that actually land back-to-back and
+    (b) exceed the bare free count when the free slab can fund growth —
+    the ROADMAP follow-up this PR closes (the old fallback returned the
+    free count, so every leased segment ended at the free list)."""
+    from repro.core import HostMemoryCoordinator, ValetMempool
+
+    coord = HostMemoryCoordinator(256)
+    lease = coord.register(min_pages=32, max_pages=200)
+    pool = ValetMempool(256, min_pages=32, max_pages=200, lease=lease,
+                        grow_step=16)
+    n = 150
+    cap = pool.alloc_prefix_capacity(n)
+    assert cap > pool.free_count(), "prediction fell back to the free count"
+    got = 0
+    for i in range(n):
+        if pool.alloc(i, step=i) is None:
+            break
+        got += 1
+    assert cap <= got, f"predictor overpromised: {cap} > {got}"
+    coord.check_invariants()
+    pool.check_invariants()
+
+
+def test_leased_prefix_capacity_conservative_about_reclamation():
+    """The lower bound only counts the uncontended free slab: a real lease
+    may additionally reclaim an idle co-tenant's excess, so the actual
+    back-to-back allocations can exceed — never undercut — the prediction."""
+    from repro.core import HostMemoryCoordinator, ValetMempool
+
+    coord = HostMemoryCoordinator(256)
+    donor = make_store(coordinator=coord, capacity=256, min_pool=32,
+                       max_pool=200, seed=0, name="donor", grow_step=32)
+    donor.access_batch(np.arange(150), True)   # grow the donor's lease
+    donor.background_tick()
+    donor.drain()
+    donor.background_tick()
+    lease = coord.register(min_pages=16, max_pages=200)
+    pool = ValetMempool(256, min_pages=16, max_pages=200, lease=lease,
+                        grow_step=16)
+    free_slab = coord.free()
+    cap = pool.alloc_prefix_capacity(180)
+    assert cap <= pool.free_count() + max(free_slab, 0) + 200
+    got = 0
+    for i in range(180):
+        if pool.alloc(i, step=i) is None:
+            break
+        got += 1
+    assert cap <= got, f"predictor overpromised: {cap} > {got}"
+    coord.check_invariants()
+    pool.check_invariants()
+    donor.pool.check_invariants()
+
+
+@pytest.mark.parametrize("seed", [3, 11])
+def test_leased_pool_parity_under_tight_pressure(seed):
+    """Two coordinator worlds built identically — one driven per-op, one
+    through access_batch — must stay bitwise equal on a tight slab where
+    every batch leans on leased growth and weighted-fair reclamation
+    (the plan-once engine's leased-pool predictor at work)."""
+    rng = np.random.default_rng(seed)
+    n_ops = 2500
+    pages = np.clip(rng.zipf(1.15, n_ops), 1, 600) - 1
+    is_write = rng.random(n_ops) < 0.4
+
+    def build():
+        coord = HostMemoryCoordinator(160)
+        grower = make_store(coordinator=coord, capacity=160, min_pool=16,
+                            max_pool=128, seed=seed, name="grower",
+                            grow_step=16)
+        # a co-tenant holding lease keeps the slab tight (no donor callback:
+        # its pages are pinned, so grants really are slab-bounded)
+        pinned = coord.register(min_pages=64, max_pages=128, name="pinned")
+        pinned.lease(48)
+        return coord, grower
+
+    ca, a = build()
+    cb, b = build()
+    la = []
+    for i in range(n_ops):
+        if is_write[i]:
+            la.append(a.write(int(pages[i])))
+        else:
+            la.append(a.read(int(pages[i])))
+        if i % 64 == 0:
+            a.background_tick()
+    lb = np.empty(n_ops, np.float64)
+    i = 0
+    while i < n_ops:
+        nxt = i if i % 64 == 0 else (i // 64 + 1) * 64
+        end = min(n_ops, i + 256, nxt + 1)
+        lb[i:end] = b.access_batch(pages[i:end], is_write[i:end])
+        if (end - 1) % 64 == 0:
+            b.background_tick()
+        i = end
+    assert np.array_equal(np.asarray(la), lb), "per-op latencies diverged"
+    assert a.stats == b.stats
+    assert a.pool.size == b.pool.size
+    assert a.pool._free == b.pool._free, "free-list order diverged"
+    assert a.pool.n_grow == b.pool.n_grow
+    assert a.pool.n_alloc_failed == b.pool.n_alloc_failed
+    ca.check_invariants()
+    cb.check_invariants()
+
+
 # -- K serving engines against one coordinator ---------------------------------
 
 
@@ -266,3 +375,55 @@ def test_two_engines_share_one_coordinator():
     for eng, rec in zip(engines, coord.containers()):
         assert rec.leased == eng.pool.size
         assert rec.leased >= 8
+
+
+@pytest.mark.slow
+def test_two_engine_qos_weights_skew_fair_shares():
+    """Per-container QoS weights at the serve API: two engines register
+    with skewed ``weight=``; the coordinator's weighted-fair shares follow
+    the weights, and under a co-tenant's pressure the LIGHT engine is shed
+    further (toward its smaller share) than the heavy one."""
+    import jax
+    from repro.configs import ARCHS, reduced
+    from repro.models import transformer as T
+    from repro.serve import ValetServeEngine
+    from repro.core.policies import POLICIES
+
+    cfg = reduced(ARCHS["granite-3-8b"])
+    ctx = T.ParallelCtx(remat=False, q_block=8, kv_block=8, loss_chunk=8)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    total = 96
+    coord = HostMemoryCoordinator(total)
+    engines = []
+    for name, w in (("light", 1.0), ("heavy", 3.0)):
+        eng = ValetServeEngine(params, cfg, ctx, max_batch=2, max_seq=64,
+                               page=4, pool_slots=40, min_pool=8,
+                               policy=POLICIES["valet"], coordinator=coord,
+                               container_name=name, weight=w)
+        engines.append(eng)
+        for p in range(2):
+            eng.submit(rng.integers(2, cfg.vocab, size=8), max_new=8)
+    for eng in engines:
+        reqs = eng.run(max_steps=300)
+        assert all(r.status == "done" for r in reqs)
+    recs = {r.name: r for r in coord.containers()}
+    light, heavy = engines
+    assert light.weight == 1.0 and heavy.weight == 3.0
+    assert coord.fair_share(recs["light"].cid) \
+        < coord.fair_share(recs["heavy"].cid)
+
+    # an admitted co-tenant leases hard; both engines are idle, so the
+    # weighted-fair pass sheds the light engine closer to its floor
+    before = {n: recs[n].leased for n in ("light", "heavy")}
+    hog = coord.register(min_pages=8, max_pages=total, name="hog")
+    hog.lease(total)
+    coord.check_invariants()
+    shed_light = before["light"] - recs["light"].leased
+    shed_heavy = before["heavy"] - recs["heavy"].leased
+    assert recs["light"].leased >= 8 and recs["heavy"].leased >= 8
+    assert recs["light"].leased <= recs["heavy"].leased
+    assert shed_light + shed_heavy > 0, "no pages were reclaimed"
+    for eng, rec in zip(engines, (recs["light"], recs["heavy"])):
+        assert rec.leased == eng.pool.size

@@ -259,3 +259,93 @@ def test_pair_sampler_draw_batch_matches_sequential():
     rest = [s2.draw() for _ in range(50)]
     got = list(zip(a.tolist(), b.tolist())) + rest
     assert seq == got
+
+
+# -- dense-state engine: deep state equality (SoA vs scalar reference) ---------
+
+
+def assert_deep_soa_state(a, b):
+    """Beyond Stats: the whole orchestration state layer — pool metadata
+    columns, free-stack order (it fixes future allocation order), staging
+    occupancy (rows, seqs, §5.2 pending/deferred maps) and the reclaimable
+    queue's content — must be identical between the dense and scalar
+    modes."""
+    pa, pb = a.pool, b.pool
+    assert np.array_equal(pa.state, pb.state)
+    assert np.array_equal(pa.owner, pb.owner)
+    assert np.array_equal(pa.update_flag, pb.update_flag)
+    assert np.array_equal(pa.reclaim_flag, pb.reclaim_flag)
+    assert pa._free == pb._free, "free-stack order diverged"
+    sa = [(ws.seq, ws.pages, ws.slots, ws.migrating_hold)
+          for ws in a.pipeline.staging.entries()]
+    sb = [(ws.seq, ws.pages, ws.slots, ws.migrating_hold)
+          for ws in b.pipeline.staging.entries()]
+    assert sa == sb, "staging occupancy diverged"
+    ra = [(ws.pages, ws.slots) for ws in a.pipeline.reclaimable.entries()]
+    rb = [(ws.pages, ws.slots) for ws in b.pipeline.reclaimable.entries()]
+    assert ra == rb, "reclaimable queue content diverged"
+    assert a.pipeline._pending_slot == b.pipeline._pending_slot
+    assert a.pipeline._n_deferred == b.pipeline._n_deferred
+    assert a.blocks == b.blocks, "block table diverged"
+    assert a.block_replicas == b.block_replicas
+    assert a._replica_of == b._replica_of
+    for p in range(len(a.peers)):
+        hi = max(a._next_block_slot[p], b._next_block_slot[p])
+        assert np.array_equal(a._blk_live[p][:hi], b._blk_live[p][:hi])
+        assert np.array_equal(a._blk_replica[p][:hi],
+                              b._blk_replica[p][:hi])
+
+
+def test_property_deep_state_parity_dense_vs_scalar():
+    """Hypothesis property: over randomized traces with interleaved
+    reclaim / flush / migration / eviction pressure and peer failures, the
+    dense (batch_reclaim=True, access_batch) engine reaches deep state
+    equality with the scalar reference — free-stack order, staging rows,
+    reclaimable content, §5.2 maps, block tables (hypothesis is a soft
+    dependency, as in test_core_pool)."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           pool=st.sampled_from([24, 48, 96]),
+           write_frac=st.floats(0.2, 0.8),
+           policy=st.sampled_from(["valet", "infiniswap"]))
+    def prop(seed, pool, write_frac, policy):
+        rng = np.random.default_rng(seed)
+        pages, is_write = random_trace(rng, 300, 1500, write_frac)
+        spec = [(int(e), int(k), int(p), int(nblk))
+                for e, k, p, nblk in zip(
+                    rng.choice(1500, size=4, replace=False),
+                    rng.integers(0, 3, size=4),
+                    rng.integers(0, 4, size=4),
+                    rng.integers(1, 6, size=4))]
+
+        def mk(k, p, nblk):
+            if k == 0:
+                return lambda s: s.peer_pressure(p, nblk)
+            if k == 1:
+                return lambda s: s.local_pressure(nblk * 8)
+            return lambda s: s.fail_peer(p)
+
+        events = {e: mk(k, p, nblk) for e, k, p, nblk in spec}
+        a = make_store(policy, pool, batched=False, seed=seed)
+        b = make_store(policy, pool, batched=True, seed=seed)
+        la = drive(a, pages, is_write, events=events)
+        n = len(pages)
+        lb = np.empty(n, np.float64)
+        i = 0
+        while i < n:
+            nxt = i if i % 32 == 0 else (i // 32 + 1) * 32
+            nxt_ev = min([e for e in events if e >= i], default=n)
+            end = min(n, i + 256, nxt + 1, nxt_ev + 1)
+            lb[i:end] = b.access_batch(pages[i:end], is_write[i:end])
+            if (end - 1) % 32 == 0:
+                b.background_tick()
+            if (end - 1) in events:
+                events[end - 1](b)
+            i = end
+        assert_full_parity(a, b, la, lb)
+        assert_deep_soa_state(a, b)
+
+    prop()
