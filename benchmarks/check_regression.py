@@ -27,14 +27,16 @@ ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
 
 # (benchmark key in bench_results.json, metric key) — all tracked metrics
 # are higher-is-better speedup ratios; current < baseline*(1-tol) fails.
-# multi_tenant/speedup is the coordinated-vs-static-partitioning ratio
-# (simulated us, deterministic — see paper_tables.multi_tenant).
+# multi_tenant/speedup is the coordinated-vs-static-partitioning ratio and
+# tail_latency/speedup the sync-vs-async p99 ratio (both simulated us,
+# deterministic — see paper_tables.multi_tenant / paper_tables.tail_latency).
 TRACKED = [
     ("batch_speedup", "speedup"),
     ("pressure_speedup", "speedup"),
     ("reclaim_speedup", "speedup"),
     ("reclaim_floor", "speedup"),
     ("multi_tenant", "speedup"),
+    ("tail_latency", "speedup"),
 ]
 
 

@@ -34,6 +34,16 @@ def save_json(name, obj):
     return path
 
 
+def latency_summary(stats):
+    """Percentile summary of a run via the ``Stats``/``EngineStats`` latency
+    accessors (the bounded deterministic reservoir — see
+    ``repro.core.reservoir``).  Keys: count, p50_us, p90_us, p99_us, max_us."""
+    out = stats.lat.summary()
+    out["p50_us"] = stats.latency_p50()
+    out["p99_us"] = stats.latency_p99()
+    return out
+
+
 def timeit(fn, *args, n=20, warmup=3):
     """Median wall time of a jitted call in us."""
     import jax

@@ -9,20 +9,27 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timeit
-from repro.core import (TieredPageStore, POLICIES, PAPER_COSTS, TPU_COSTS)
+from benchmarks.common import emit, latency_summary, timeit
+from repro.core import (OrchestrationConfig, TieredPageStore, POLICIES,
+                        PAPER_COSTS, TPU_COSTS)
 from repro.data.pipeline import TraceConfig, generate_trace
 
 
+def _config(policy, costs=PAPER_COSTS, *, pool=512, min_pool=None, peers=6,
+            blocks=256, seed=0, **kw):
+    return OrchestrationConfig(
+        policy=POLICIES[policy] if isinstance(policy, str) else policy,
+        costs=costs, pool_capacity=pool,
+        min_pool=min_pool or max(pool // 8, 8), max_pool=pool,
+        n_peers=peers, peer_capacity_blocks=blocks, pages_per_block=16,
+        seed=seed, **kw)
+
+
 def _store(policy, costs=PAPER_COSTS, *, pool=512, min_pool=None, peers=6,
-           blocks=256, seed=0, dynamic=True):
-    return TieredPageStore(POLICIES[policy] if isinstance(policy, str)
-                           else policy, costs,
-                           pool_capacity=pool,
-                           min_pool=min_pool or max(pool // 8, 8),
-                           max_pool=pool, n_peers=peers,
-                           peer_capacity_blocks=blocks,
-                           pages_per_block=16, seed=seed)
+           blocks=256, seed=0, **kw):
+    return TieredPageStore.from_config(
+        _config(policy, costs, pool=pool, min_pool=min_pool, peers=peers,
+                blocks=blocks, seed=seed, **kw))
 
 
 def _trace_arrays(trace):
@@ -499,6 +506,72 @@ def pressure_speedup(rows):
     return art
 
 
+# -- Tentpole: async orchestration tail latency ----------------------------------
+
+def tail_latency(rows):
+    """``bench: tail_latency`` — critical-path p50/p99 (simulated us) of the
+    synchronous store vs the ``AsyncOrchestrator`` on the oversubscribed
+    pressure trace (same shape as ``pressure_speedup``: pool == min_pool,
+    working set 16x the pool, near-flat popularity).
+
+    The synchronous store stalls the critical path whenever a write finds
+    the free list and the staging queue both full — it must flush inline
+    (the paper's pre-Remote-Sender-Thread strawman for that op).  The async
+    engine drains staging and restocks the free list at epoch boundaries on
+    the daemon's own clock, so the same op pays only a fence *if the daemon
+    is behind*; on this trace the daemon keeps up and the write-tail stall
+    disappears entirely from the foreground distribution.
+
+    Both runs are deterministic simulated microseconds out of the
+    ``LatencyReservoir`` (reset after the populate phase so only measured
+    ops are sampled), so the tracked ``speedup`` (sync p99 / async p99) is
+    run-to-run stable and CI-gated.  The async run also re-checks the full
+    ``InvariantChecker`` at the end — a tail number earned by dropping
+    writes would fail here, not ship.
+    """
+    from repro.core import InvariantChecker
+
+    batch = 256
+    pool = 256                     # == min_pool: no headroom, ever
+    n_pages = 4096                 # working set 16x the pool
+    trace = list(generate_trace(TraceConfig(n_pages, 40_000, 0.6,
+                                            zipf_a=1.05, seed=5)))
+
+    def run(async_mode):
+        st = TieredPageStore.from_config(
+            _config("valet", pool=pool, min_pool=pool, peers=6, blocks=1024,
+                    async_mode=async_mode))
+        _populate(st, n_pages, tick_every=batch, batch=batch)
+        st.drain()
+        st.stats.lat.reset()       # sample only the measured phase
+        _drive(st, trace, tick_every=1024, batch=batch)
+        if async_mode:
+            InvariantChecker(st).check()
+        return st.stats
+
+    sync = run(False)
+    asy = run(True)
+    s_sum, a_sum = latency_summary(sync), latency_summary(asy)
+    speedup = s_sum["p99_us"] / max(a_sum["p99_us"], 1e-9)
+    art = {
+        "speedup": speedup,
+        "sync_p50_us": s_sum["p50_us"], "sync_p99_us": s_sum["p99_us"],
+        "async_p50_us": a_sum["p50_us"], "async_p99_us": a_sum["p99_us"],
+        "sync_write_stall_us": sync.write_stall_us,
+        "async_write_stall_us": asy.write_stall_us,
+        "fences": asy.fences, "fence_wait_us": asy.fence_wait_us,
+        "daemon_us": asy.daemon_us,
+        "ops": len(trace), "pool": pool, "n_pages": n_pages,
+    }
+    emit(rows, "tail_latency/sync", s_sum["p99_us"],
+         p50_us=round(s_sum["p50_us"], 2),
+         stall_us=round(sync.write_stall_us, 1))
+    emit(rows, "tail_latency/async", a_sum["p99_us"],
+         p50_us=round(a_sum["p50_us"], 2), speedup=round(speedup, 2),
+         fences=asy.fences, daemon_us=round(asy.daemon_us, 1))
+    return art
+
+
 # -- §3.4: multi-container host memory coordination ------------------------------
 
 def multi_tenant(rows):
@@ -556,19 +629,19 @@ def multi_tenant(rows):
         stores = []
         for c in range(n_containers):
             if coordinated:
-                st = TieredPageStore(
-                    POLICIES["valet"], PAPER_COSTS, pool_capacity=total,
-                    min_pool=min_pool,
+                st = TieredPageStore.from_config(OrchestrationConfig(
+                    policy=POLICIES["valet"], costs=PAPER_COSTS,
+                    pool_capacity=total, min_pool=min_pool,
                     max_pool=total - (n_containers - 1) * min_pool,
                     n_peers=4, peer_capacity_blocks=2048, pages_per_block=16,
                     seed=c, grow_step=128,    # lease whole demand slabs
-                    coordinator=coord, container_name=f"c{c}")
+                    coordinator=coord, container_name=f"c{c}"))
             else:
-                st = TieredPageStore(
-                    POLICIES["valet"], PAPER_COSTS,
+                st = TieredPageStore.from_config(OrchestrationConfig(
+                    policy=POLICIES["valet"], costs=PAPER_COSTS,
                     pool_capacity=static_share, min_pool=static_share,
                     max_pool=static_share, n_peers=4,
-                    peer_capacity_blocks=2048, pages_per_block=16, seed=c)
+                    peer_capacity_blocks=2048, pages_per_block=16, seed=c))
             stores.append(st)
 
         def rr_drive(arrays):
@@ -657,11 +730,9 @@ def reclaim_speedup(rows):
     n_peers = 6
 
     def fresh(batched):
-        return TieredPageStore(POLICIES["valet"], PAPER_COSTS,
-                               pool_capacity=chunk, min_pool=chunk,
-                               max_pool=chunk, n_peers=n_peers,
-                               peer_capacity_blocks=4096, pages_per_block=16,
-                               seed=0, batch_reclaim=batched)
+        return TieredPageStore.from_config(
+            _config("valet", pool=chunk, min_pool=chunk, peers=n_peers,
+                    blocks=4096, batch_reclaim=batched))
 
     def run(store):
         timed = 0.0

@@ -13,8 +13,8 @@ def main() -> None:
     ap.add_argument("--only", default="all",
                     help="comma list: table1,fig8,fig9,fig10,fig19,fig22,"
                          "fig23,batch_speedup,pressure_speedup,"
-                         "reclaim_speedup,reclaim_floor,multi_tenant,"
-                         "roofline")
+                         "reclaim_speedup,reclaim_floor,tail_latency,"
+                         "multi_tenant,roofline")
     args = ap.parse_args()
     only = None if args.only == "all" else set(args.only.split(","))
 
@@ -34,6 +34,7 @@ def main() -> None:
         ("pressure_speedup", PT.pressure_speedup),
         ("reclaim_speedup", PT.reclaim_speedup),
         ("reclaim_floor", PT.reclaim_floor),
+        ("tail_latency", PT.tail_latency),
         ("multi_tenant", PT.multi_tenant),
         ("victim", PT.victim_quality),
         ("roofline", RT.run),

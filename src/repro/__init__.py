@@ -1,0 +1,24 @@
+"""Valet reproduction: orchestration of host and remote shared memory for
+memory-intensive workloads (MemSys '20).
+
+The stable public API surface:
+
+* ``OrchestrationConfig`` — one frozen config object for every knob
+* ``TieredPageStore`` — the tiered (HBM/peer/host/cold) page store
+* ``ValetServeEngine`` — the paged-KV serving engine built on it
+* ``HostMemoryCoordinator`` — §3.4 multi-container host memory sharing
+
+Construct stores/engines via ``.from_config(...)``; the sprawling keyword
+constructors remain as deprecated aliases.
+"""
+from repro.core.config import OrchestrationConfig
+from repro.core.coordinator import HostMemoryCoordinator
+from repro.core.tiering import TieredPageStore
+from repro.serve.engine import ValetServeEngine
+
+__all__ = [
+    "OrchestrationConfig",
+    "TieredPageStore",
+    "ValetServeEngine",
+    "HostMemoryCoordinator",
+]

@@ -1,0 +1,120 @@
+"""Unified orchestration configuration (the stable public API surface).
+
+Five PRs of vectorization work accreted knobs onto ``TieredPageStore`` and
+``ValetServeEngine`` one keyword at a time.  ``OrchestrationConfig`` is the
+consolidation: one frozen dataclass holding every orchestration decision —
+policy, cost profile, pool geometry, pipeline depths, coordinator/QoS
+settings, and the async-engine knobs introduced alongside it — constructed
+once and handed to ``TieredPageStore.from_config()`` /
+``ValetServeEngine.from_config()``.
+
+The legacy constructor keywords keep working as *deprecated aliases*: passing
+them emits a ``DeprecationWarning`` naming the replacement field, and they
+are folded into an ``OrchestrationConfig`` internally, so both construction
+paths produce bitwise-identical stores (``test_config.py`` pins this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+from repro.core.policies import (CostModel, Policy, PAPER_COSTS, VALET)
+
+
+@dataclass(frozen=True)
+class OrchestrationConfig:
+    """Every orchestration knob in one immutable, replace()-able object.
+
+    Pool geometry is in *pages*; depths are entry counts; ``activity_decay``
+    is the coordinator's per-round demand decay (§3.4).  The async fields
+    only take effect with ``async_mode=True`` (see ``AsyncOrchestrator``).
+    """
+
+    # -- policy & cost profile -------------------------------------------
+    policy: Policy = VALET
+    costs: CostModel = PAPER_COSTS
+
+    # -- local pool geometry (§4.1) --------------------------------------
+    pool_capacity: int = 1024
+    min_pool: int = 64
+    max_pool: Optional[int] = None        # None -> pool_capacity
+    grow_step: Optional[int] = None       # None -> capacity // 8
+
+    # -- remote / host tiers ---------------------------------------------
+    n_peers: int = 4
+    peer_capacity_blocks: int = 1024
+    pages_per_block: int = 16
+    host_capacity: int = 1 << 30
+
+    # -- pipeline depths & cadence ---------------------------------------
+    batch_reclaim: bool = True            # dense SoA reclaim/flush engine
+    staging_depth: int = 1 << 16          # WritePipeline row-queue length
+    flush_batch: int = 64                 # default background_tick drain
+    pressure_batch: int = 256             # blocks freed per pressure round
+
+    # -- host memory coordinator (§3.4) / QoS ----------------------------
+    coordinator: Optional[Any] = None     # HostMemoryCoordinator
+    container_name: Optional[str] = None
+    weight: float = 1.0                   # weighted-fair share (QoS)
+    activity_decay: float = 0.5           # coordinator demand decay / round
+
+    # -- async orchestration engine --------------------------------------
+    async_mode: bool = False              # overlap reclaim/flush/migration
+    epoch_len: int = 64                   # ops per epoch (commit cadence)
+    daemon_budget: int = 256              # pages of daemon work per epoch
+    real_thread: bool = False             # real daemon thread (not determ.)
+
+    # -- simulation plumbing ---------------------------------------------
+    seed: int = 0
+    free_memory_fn: Optional[Callable[[], int]] = field(
+        default=None, compare=False)
+    data_plane: Optional[Any] = field(default=None, compare=False)
+
+    def replace(self, **changes) -> "OrchestrationConfig":
+        return dataclasses.replace(self, **changes)
+
+
+# legacy TieredPageStore keyword -> OrchestrationConfig field
+LEGACY_STORE_KWARGS = {
+    "pool_capacity": "pool_capacity",
+    "min_pool": "min_pool",
+    "max_pool": "max_pool",
+    "n_peers": "n_peers",
+    "peer_capacity_blocks": "peer_capacity_blocks",
+    "pages_per_block": "pages_per_block",
+    "host_capacity": "host_capacity",
+    "free_memory_fn": "free_memory_fn",
+    "seed": "seed",
+    "data_plane": "data_plane",
+    "batch_reclaim": "batch_reclaim",
+    "grow_step": "grow_step",
+    "coordinator": "coordinator",
+    "container_name": "container_name",
+    "container_weight": "weight",
+    "weight": "weight",
+}
+
+
+def config_from_legacy_kwargs(base: OrchestrationConfig,
+                              kwargs: dict,
+                              *, owner: str,
+                              stacklevel: int = 3) -> OrchestrationConfig:
+    """Fold deprecated constructor keywords into a config, warning per key.
+
+    Unknown keys raise ``TypeError`` exactly as the old signature would.
+    """
+    mapped = {}
+    for key, val in kwargs.items():
+        tgt = LEGACY_STORE_KWARGS.get(key)
+        if tgt is None:
+            raise TypeError(
+                f"{owner}() got an unexpected keyword argument {key!r}")
+        warnings.warn(
+            f"{owner}({key}=...) is deprecated; build an "
+            f"OrchestrationConfig({tgt}=...) and use "
+            f"{owner}.from_config() instead",
+            DeprecationWarning, stacklevel=stacklevel)
+        mapped[tgt] = val
+    return dataclasses.replace(base, **mapped) if mapped else base

@@ -50,10 +50,16 @@ class ContainerRecord:
     demand: float = 0.0            # decayed recent-activity signal
     donate_cb: Optional[Callable[[int], int]] = None
     size_fn: Optional[Callable[[], int]] = None    # invariant probe
+    # remote-pressure routing (§3.4 follow-up): how many victim-candidate
+    # MR blocks this container holds on a given peer, and its handler that
+    # frees blocks there (migrate or evict, per its policy)
+    peer_footprint_fn: Optional[Callable[[int], int]] = None
+    peer_pressure_cb: Optional[Callable[[int, int], int]] = None
     # per-container counters
     n_leases: int = 0
     pages_leased_total: int = 0
     pages_donated_total: int = 0
+    peer_blocks_freed_total: int = 0
 
 
 @dataclass
@@ -63,6 +69,8 @@ class CoordinatorStats:
     n_partial_grants: int = 0      # lease served below the asked amount
     n_reclaim_events: int = 0      # arbitration rounds (free pool was short)
     pages_reclaimed: int = 0       # pages pulled back from donors
+    n_peer_pressure_events: int = 0   # coordinated remote-pressure fan-outs
+    peer_blocks_freed: int = 0        # MR blocks freed across containers
 
 
 class LeaseClient:
@@ -92,9 +100,15 @@ class HostMemoryCoordinator:
     DEMAND_DECAY = 0.5             # aging applied at each arbitration round
     FUTILE_COOLDOWN = 32           # lease calls skipped after a 0-yield round
 
-    def __init__(self, total_pages: int):
+    def __init__(self, total_pages: int,
+                 demand_decay: Optional[float] = None):
         assert total_pages > 0
         self.total_pages = total_pages
+        # aging factor for the idle-first donor ordering; instance knob so
+        # deployments can tune how fast historic bursts fade (the class
+        # attribute stays as the default for existing call sites)
+        self.demand_decay = self.DEMAND_DECAY if demand_decay is None \
+            else float(demand_decay)
         self._free = total_pages
         self._containers: Dict[int, ContainerRecord] = {}
         self._next_cid = 0
@@ -143,6 +157,20 @@ class HostMemoryCoordinator:
         rec = self._containers[cid]
         rec.donate_cb = donate_cb
         rec.size_fn = size_fn
+
+    def register_peer_footprint(self, cid: int,
+                                footprint_fn: Callable[[int], int],
+                                pressure_cb: Callable[[int, int], int]
+                                ) -> None:
+        """Attach the container's remote-memory footprint probe and its
+        peer-pressure handler.  ``footprint_fn(peer)`` reports how many
+        victim-candidate MR blocks the container holds on ``peer`` (a
+        ``TieredPageStore`` answers with one masked count over its dense
+        per-peer block membership columns); ``pressure_cb(peer, n)`` frees
+        up to ``n`` blocks there and returns how many it actually freed."""
+        rec = self._containers[cid]
+        rec.peer_footprint_fn = footprint_fn
+        rec.peer_pressure_cb = pressure_cb
 
     # -- demand signal -------------------------------------------------------
 
@@ -257,8 +285,46 @@ class HostMemoryCoordinator:
         # age the demand signal so one historic burst does not shield a
         # now-idle container from donating forever
         for rec in self._containers.values():
-            rec.demand *= self.DEMAND_DECAY
+            rec.demand *= self.demand_decay
         return total_got
+
+    # -- coordinated remote pressure (§3.4 + §3.5) ---------------------------
+
+    def peer_pressure(self, peer: int, blocks_to_free: int) -> int:
+        """Fan a remote peer's memory pressure out across containers.
+
+        Without coordination each container only sees its own MR blocks, so
+        a pressured peer must signal every sender separately and idle
+        containers' blocks survive while busy ones churn.  Here the
+        coordinator routes the demand: containers that actually occupy the
+        peer (non-zero ``footprint_fn``) free blocks idle-first (lowest
+        decayed demand, cid tie-break — the same donor order as host-memory
+        reclamation), each asked for at most its own footprint.  Returns
+        the blocks actually freed (migrated or evicted per each
+        container's policy); may fall short when footprints do."""
+        if blocks_to_free <= 0:
+            return 0
+        self.stats.n_peer_pressure_events += 1
+        holders = sorted(
+            (r for r in self._containers.values()
+             if r.peer_pressure_cb is not None
+             and r.peer_footprint_fn is not None),
+            key=lambda r: (r.demand, r.cid))
+        freed = 0
+        for rec in holders:
+            if freed >= blocks_to_free:
+                break
+            fp = rec.peer_footprint_fn(peer)
+            if fp <= 0:
+                continue
+            ask = min(fp, blocks_to_free - freed)
+            got = rec.peer_pressure_cb(peer, ask)
+            rec.peer_blocks_freed_total += got
+            self.stats.peer_blocks_freed += got
+            freed += got
+        for rec in self._containers.values():
+            rec.demand *= self.demand_decay
+        return freed
 
     # -- invariants (property tests) ----------------------------------------
 

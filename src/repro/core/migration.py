@@ -83,6 +83,10 @@ class MigrationEngine:
         # counters
         self.n_migrated_blocks = 0
         self.n_migrated_pages = 0
+        # optional accounting hook, called once per completed block copy
+        # with the page count — the async orchestrator charges the copy to
+        # its daemon clock (block transfers overlap the critical path)
+        self.on_block_copied: Optional[Callable[[int], None]] = None
 
     # -- entry point: a peer signals memory pressure --------------------------
 
@@ -183,6 +187,8 @@ class MigrationEngine:
         self.completed.append(mig)
         self.n_migrated_blocks += 1
         self.n_migrated_pages += len(mig.pages)
+        if self.on_block_copied is not None:
+            self.on_block_copied(len(mig.pages))
         return mig
 
     # -- batched migration (vectorized reclaim pipeline) ------------------------
@@ -258,4 +264,6 @@ class MigrationEngine:
             self.completed.append(mig)
             self.n_migrated_blocks += 1
             self.n_migrated_pages += len(mig.pages)
+            if self.on_block_copied is not None:
+                self.on_block_copied(len(mig.pages))
         return migs

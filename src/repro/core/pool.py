@@ -163,6 +163,12 @@ class ValetMempool:
         self.reclaim_flag = np.zeros(capacity, bool)   # §5.2 replica exists
         self._free_arr = np.empty(capacity, np.int64)  # free stack (LIFO)
         self._free_top = 0
+        # epoch-tagged holds (async engine): slots the background daemon has
+        # reclaimed but whose simulated completion has not been committed at
+        # an epoch boundary yet.  Held slots are FREE-state but OFF the free
+        # stack, so the foreground cannot allocate them early.  Each entry is
+        # ``(epoch, finish_us, slots_array)``.
+        self._held: List[Tuple[int, float, np.ndarray]] = []
         self.slots = _SlotsView(self)
         self.size = 0
         self._used = 0           # non-FREE/non-UNBACKED slots below size
@@ -185,6 +191,11 @@ class ValetMempool:
     def _resize_to(self, new_size: int):
         new_size = max(self.min_pages, min(new_size, self.max_pages,
                                            self.capacity))
+        if self._held and new_size < self.size:
+            # a shrink rebuilds the free list from FREE-state slots and may
+            # unback tail FREE slots — both would corrupt held slots (FREE
+            # but deliberately off the list), so holds commit first
+            self.commit_holds()
         state = self.state
         if new_size > self.size:
             # only back slots that are actually UNBACKED: a previous shrink
@@ -601,6 +612,53 @@ class ValetMempool:
     def free_count(self) -> int:
         return self._free_top
 
+    # -- epoch-tagged holds (async orchestration engine) ---------------------
+
+    def hold_from_free(self, k: int, epoch: int, finish_us: float) -> int:
+        """Move the top ``k`` free-stack slots into an epoch-tagged hold.
+
+        The async daemon reclaims slots *now* (metadata-wise) but the
+        simulated reclaim work completes at ``finish_us``; until an epoch
+        boundary commits the hold, the foreground must not allocate those
+        slots.  Popping the just-reclaimed slots straight back off the stack
+        keeps ``reclaim_bulk`` untouched.  Returns the slots actually held.
+        """
+        k = min(int(k), self._free_top)
+        if k <= 0:
+            return 0
+        top = self._free_top - k
+        self._held.append((int(epoch), float(finish_us),
+                           self._free_arr[top:self._free_top].copy()))
+        self._free_top = top
+        return k
+
+    def commit_holds(self, *, up_to_epoch: Optional[int] = None,
+                     now_us: Optional[float] = None) -> int:
+        """Release held slots back to the free stack.
+
+        A hold commits when every given bound admits it (``epoch <=
+        up_to_epoch`` and ``finish_us <= now_us``); with no bounds, all
+        holds commit (the fence / quiesce path).  Returns slots released.
+        """
+        if not self._held:
+            return 0
+        released = 0
+        keep: List[Tuple[int, float, np.ndarray]] = []
+        for ep, fin, slots in self._held:
+            if ((up_to_epoch is not None and ep > up_to_epoch)
+                    or (now_us is not None and fin > now_us)):
+                keep.append((ep, fin, slots))
+                continue
+            top = self._free_top
+            self._free_arr[top:top + slots.size] = slots
+            self._free_top = top + slots.size
+            released += int(slots.size)
+        self._held = keep
+        return released
+
+    def held_count(self) -> int:
+        return sum(int(s.size) for _, _, s in self._held)
+
     def reclaimable_slots(self) -> List[int]:
         return np.flatnonzero(
             self.state[:self.size] == _RECLAIMABLE).tolist()
@@ -614,11 +672,17 @@ class ValetMempool:
         brute_used = int(np.count_nonzero((s != _FREE) & (s != _UNBACKED)))
         assert self._used == brute_used, (self._used, brute_used)
         fl = self._free_arr[:self._free_top]
-        assert np.unique(fl).size == fl.size, "duplicate free slots"
+        held = (np.concatenate([s for _, _, s in self._held])
+                if self._held else np.empty(0, np.int64))
+        both = np.concatenate([fl, held])
+        assert np.unique(both).size == both.size, \
+            "slot duplicated across free list / holds"
         assert (self.state[fl] == _FREE).all(), "non-FREE slot on free list"
+        assert (self.state[held] == _FREE).all(), "non-FREE held slot"
+        assert (self.owner[held] == -1).all() if held.size else True
         free_mask = self.state == _FREE
-        assert int(np.count_nonzero(free_mask)) == fl.size, \
-            "FREE slot missing from free list"
+        assert int(np.count_nonzero(free_mask)) == both.size, \
+            "FREE slot missing from free list + holds"
         assert (self.owner[free_mask] == -1).all()
         # canonical §5.2 flags (the allocation/reclaim fast paths rely on
         # these): FREE slots carry no flags, RECLAIMABLE no update_flag

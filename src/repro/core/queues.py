@@ -1037,6 +1037,19 @@ class WritePipeline:
         """Vectorized reclaim burst: freed ``(slots, pages)`` arrays."""
         return self.reclaimable.reclaim_bulk(n_slots, self.pool)
 
+    def reclaim_bulk_held(self, n_slots: int, epoch: int, finish_us: float
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Async-daemon reclaim: same vectorized burst, but the freed slots
+        go into an epoch-tagged pool hold (``finish_us`` = simulated daemon
+        completion) instead of straight back onto the free stack — the
+        foreground cannot allocate them until an epoch boundary (or a
+        fence) commits the hold."""
+        slots, pages = self.reclaimable.reclaim_bulk(n_slots, self.pool)
+        if slots.size:
+            held = self.pool.hold_from_free(int(slots.size), epoch, finish_us)
+            assert held == int(slots.size)
+        return slots, pages
+
     # -- invariants ----------------------------------------------------------
 
     def check_invariants(self):

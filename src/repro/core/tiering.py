@@ -15,20 +15,22 @@ Policy knobs (``policies.py``) select between Valet and the baseline systems
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.activity import (ActivityTracker,
                                  PairSampler,
                                  select_victims_random)
+from repro.core.config import OrchestrationConfig, config_from_legacy_kwargs
 from repro.core.migration import MigrationEngine
 from repro.core.page_table import GlobalPageTable, Location, Tier
 from repro.core.policies import CostModel, Policy
 from repro.core.pool import SlotState, ValetMempool
 from repro.core.queues import WritePipeline
 from repro.core.replication import ReplicaPlacer, fail_peer
+from repro.core.reservoir import LatencyReservoir
 
 _IN_USE = int(SlotState.IN_USE)
 _RECLAIMABLE = int(SlotState.RECLAIMABLE)
@@ -61,6 +63,24 @@ class Stats:
     migrations: int = 0
     connects: int = 0
     maps: int = 0
+    # async orchestration engine (zero in synchronous mode, so the bitwise
+    # dataclass-equality parity asserts between sync drivers still hold)
+    fences: int = 0
+    fence_wait_us: float = 0.0
+    daemon_us: float = 0.0
+    # bounded per-op latency reservoir behind latency_p50/p99; excluded from
+    # equality — two bitwise-equal drivers may sample through different
+    # entry points (scalar loop vs access_batch)
+    lat: LatencyReservoir = field(default_factory=LatencyReservoir,
+                                  compare=False, repr=False)
+
+    def latency_p50(self) -> float:
+        """Median critical-path op latency (us) over the sampled stream."""
+        return self.lat.p50()
+
+    def latency_p99(self) -> float:
+        """99th-percentile critical-path op latency (us)."""
+        return self.lat.p99()
 
     def hit_ratio(self) -> Dict[str, float]:
         n = max(self.local_hits + self.remote_hits + self.host_hits
@@ -76,34 +96,43 @@ class Stats:
 class TieredPageStore:
     """Valet (or baseline) orchestration of one sender node's pages."""
 
-    def __init__(self, policy: Policy, costs: CostModel, *,
-                 pool_capacity: int = 1024,
-                 min_pool: int = 64,
-                 max_pool: Optional[int] = None,
-                 n_peers: int = 4,
-                 peer_capacity_blocks: int = 1024,
-                 pages_per_block: int = 16,
-                 host_capacity: int = 1 << 30,
-                 free_memory_fn: Optional[Callable[[], int]] = None,
-                 seed: int = 0,
-                 data_plane=None,
-                 batch_reclaim: bool = True,
-                 grow_step: Optional[int] = None,
-                 coordinator=None,
-                 container_name: Optional[str] = None,
-                 container_weight: float = 1.0):
+    def __init__(self, policy: Optional[Policy] = None,
+                 costs: Optional[CostModel] = None, *,
+                 config: Optional[OrchestrationConfig] = None,
+                 **legacy):
+        """Build a store from ``config`` (the stable API surface).
+
+        ``policy``/``costs`` positionals override the config's when given.
+        Every pre-config keyword (``pool_capacity=...`` etc.) still works as
+        a deprecated alias: it emits a ``DeprecationWarning`` and folds into
+        the config, producing a bitwise-identical store either way."""
+        cfg = config if config is not None else OrchestrationConfig()
+        if policy is not None:
+            cfg = cfg.replace(policy=policy)
+        if costs is not None:
+            cfg = cfg.replace(costs=costs)
+        cfg = config_from_legacy_kwargs(cfg, legacy, owner="TieredPageStore")
+        self.config = cfg
+        policy = cfg.policy
+        costs = cfg.costs
         self.policy = policy
         self.costs = costs
-        self.pages_per_block = pages_per_block
-        self.rng = np.random.default_rng(seed)
+        self.pages_per_block = cfg.pages_per_block
+        self.rng = np.random.default_rng(cfg.seed)
         self.stats = Stats()
         self.step = 0
-        self.data_plane = data_plane
+        self.data_plane = cfg.data_plane
         # vectorized off-critical-path pipeline (flush placement, victim
         # selection/migration, delete eviction); False = scalar reference
-        self.batch_reclaim = batch_reclaim
+        self.batch_reclaim = cfg.batch_reclaim
 
-        max_pool = max_pool or pool_capacity
+        pool_capacity = cfg.pool_capacity
+        n_peers = cfg.n_peers
+        peer_capacity_blocks = cfg.peer_capacity_blocks
+        host_capacity = cfg.host_capacity
+        coordinator = cfg.coordinator
+        max_pool = cfg.max_pool or pool_capacity
+        min_pool = cfg.min_pool
         if not policy.dynamic_pool:
             min_pool = max_pool
         # §3.4 multi-container mode: the pool leases its pages from a shared
@@ -115,16 +144,24 @@ class TieredPageStore:
         if coordinator is not None:
             self._lease = coordinator.register(
                 min_pages=min_pool, max_pages=max_pool,
-                weight=container_weight, name=container_name)
+                weight=cfg.weight, name=cfg.container_name)
         self.pool = ValetMempool(pool_capacity, min_pages=min_pool,
                                  max_pages=max_pool,
-                                 free_memory_fn=free_memory_fn,
-                                 grow_step=grow_step,
+                                 free_memory_fn=cfg.free_memory_fn,
+                                 grow_step=cfg.grow_step,
                                  lease=self._lease)
         if coordinator is not None:
             coordinator.set_donor(self._lease.cid, self.host_donate,
                                   size_fn=lambda: self.pool.size)
-        self.pipeline = WritePipeline(self.pool, queue_len=1 << 16)
+            # coordinator-aware remote pressure (§3.4 follow-up): expose this
+            # container's per-peer MR-block footprint (dense membership
+            # columns) and its pressure handler for coordinated fan-out
+            reg = getattr(coordinator, "register_peer_footprint", None)
+            if reg is not None:
+                reg(self._lease.cid, self._peer_block_footprint,
+                    self.peer_pressure)
+        self.pipeline = WritePipeline(self.pool,
+                                      queue_len=cfg.staging_depth)
         self.gpt = GlobalPageTable()
         self.peers = [PeerState(capacity=peer_capacity_blocks)
                       for _ in range(n_peers)]
@@ -180,6 +217,29 @@ class TieredPageStore:
             free_fn=lambda p, b: self._free_block(p, dec(b)),
             park_fn=self._park_pages,
             rng=self.rng)
+        # async orchestration engine (tentpole): a background daemon that
+        # drains the reclaimable queue / flushes write-sets / charges
+        # migration copies off the critical path, with an epoch/fence
+        # protocol in place of the inline stall.  None = synchronous mode
+        # (bitwise-parity guaranteed, the default).
+        self.orchestrator = None
+        if cfg.async_mode and policy.use_local_pool:
+            from repro.core.async_engine import AsyncOrchestrator
+            self.orchestrator = AsyncOrchestrator(
+                self, epoch_len=cfg.epoch_len,
+                daemon_budget=cfg.daemon_budget,
+                real_thread=cfg.real_thread)
+            self.migrator.on_block_copied = \
+                self.orchestrator.note_block_copied
+
+    @classmethod
+    def from_config(cls, config: OrchestrationConfig, *,
+                    policy: Optional[Policy] = None,
+                    costs: Optional[CostModel] = None) -> "TieredPageStore":
+        """The non-deprecated construction path: one config object in,
+        no sprawling keyword surface.  ``policy``/``costs`` override the
+        config's fields when given (convenient for policy sweeps)."""
+        return cls(policy, costs, config=config)
 
     # -- host-tier membership --------------------------------------------------
 
@@ -649,8 +709,16 @@ class TieredPageStore:
             # are reclaimed from last under host pressure.  Accounting only —
             # never changes classification, rng draws, or Stats.
             self.coordinator.note_activity(self._lease.cid, n)
+        if self.orchestrator is not None:
+            # async mode: ops pin the current epoch; reclaim/flush commit at
+            # epoch boundaries inside run_batch (not bitwise-parity — see
+            # AsyncOrchestrator / InvariantChecker)
+            self.orchestrator.run_batch(pages, iw, lats)
+            self.stats.lat.record_many(lats)
+            return lats
         if self.policy.use_local_pool:
             self._access_pooled(pages, iw, lats)
+            self.stats.lat.record_many(lats)
             return lats
         i = 0
         while i < n:
@@ -667,6 +735,7 @@ class TieredPageStore:
             else:
                 lats[i:j] = self._read_run_writethrough(pages[i:j])
             i = j
+        self.stats.lat.record_many(lats)
         return lats
 
     # classification codes, mirroring the scalar read's resolution order
@@ -1472,6 +1541,19 @@ class TieredPageStore:
             self._unmap_log.append(dropped)
         return len(freed)
 
+    def _reclaim_held(self, n: int, epoch: int, finish_us: float) -> int:
+        """Daemon-side reclaim (async engine): identical slot transitions
+        and local-mapping drops to the batched ``_reclaim``, except the
+        freed slots enter an epoch-tagged pool hold — the foreground cannot
+        allocate them until an epoch boundary (or a fence) commits them."""
+        slots, pages = self.pipeline.reclaim_bulk_held(n, epoch, finish_us)
+        k = int(slots.size)
+        if k:
+            live = pages[self.gpt.local_slots_known(pages) == slots]
+            if live.size:
+                self.gpt._l_slot[live] = -1
+        return k
+
     def _flush(self, n: int, in_critical_path: bool = False) -> float:
         """Remote Sender Thread: send staged write-sets to peers.
 
@@ -1503,11 +1585,12 @@ class TieredPageStore:
         self.pipeline.complete_flush_rows(parr, sarr)
         self.gpt.map_remote_batch(pages, tiers, peers_out, slots_out,
                                   reps_out)
+        cost = self._accumulate_time(0.0, np.asarray(costs, np.float64))
         if in_critical_path:
-            cost = self._accumulate_time(0.0, np.asarray(costs, np.float64))
             self.stats.write_stall_us += cost
-            return cost
-        return 0.0                      # lazy send: off the critical path
+        # lazy send: cost stays off the critical path (stats untouched) but
+        # is returned so the async daemon can charge it to its own clock
+        return cost
 
     def _flush_batched_ws(self, n: int,
                           in_critical_path: bool = False) -> float:
@@ -1523,11 +1606,10 @@ class TieredPageStore:
         if pages:
             self.gpt.map_remote_batch(pages, tiers, peers_out, slots_out,
                                       reps_out)
+        cost = self._accumulate_time(0.0, np.asarray(costs, np.float64))
         if in_critical_path:
-            cost = self._accumulate_time(0.0, np.asarray(costs, np.float64))
             self.stats.write_stall_us += cost
-            return cost
-        return 0.0                      # lazy send: off the critical path
+        return cost                     # lazy: returned for daemon charging
 
     def _flush_scalar(self, n: int, in_critical_path: bool = False) -> float:
         """Scalar flush reference (per-write-set loop; parity-tested against
@@ -1572,11 +1654,17 @@ class TieredPageStore:
             self.gpt.map_remote_batch(mp, mt, mpe, ms, mreps)
         if in_critical_path:
             self.stats.write_stall_us += cost
-            return cost
-        return 0.0                      # lazy send: off the critical path
+        return cost                     # lazy: returned for daemon charging
 
-    def background_tick(self, flush_batch: int = 64):
+    def background_tick(self, flush_batch: Optional[int] = None):
         """One async maintenance tick: lazy send + pool sizing."""
+        if flush_batch is None:
+            flush_batch = self.config.flush_batch
+        if self.orchestrator is not None:
+            # async mode: the daemon owns flush/reclaim scheduling — a tick
+            # is just an extra epoch boundary with a raised budget
+            self.orchestrator.tick(flush_batch)
+            return
         if self.policy.lazy_send:
             self._flush(flush_batch)
         if self.policy.dynamic_pool:
@@ -1588,10 +1676,24 @@ class TieredPageStore:
 
     def drain(self):
         """Flush everything (end of run / checkpoint barrier)."""
+        if self.orchestrator is not None:
+            self.orchestrator.quiesce()
         while len(self.pipeline.staging):
             self._flush(1 << 12)
 
     # -- remote pressure: eviction or migration -----------------------------------
+
+    def _peer_block_footprint(self, peer: int) -> int:
+        """Victim-candidate MR blocks this container holds on ``peer`` —
+        one masked count over the dense per-peer membership columns (live,
+        non-replica blocks; replicas only move or die with their primary).
+        The coordinator's peer-pressure fan-out uses this to route pressure
+        to the containers that actually occupy the pressured peer."""
+        if peer < 0 or peer >= len(self.peers):
+            return 0
+        hi = self._next_block_slot[peer]
+        return int(np.count_nonzero(self._blk_live[peer][:hi]
+                                    & ~self._blk_replica[peer][:hi]))
 
     def peer_pressure(self, peer: int, blocks_to_free: int) -> int:
         """A peer's native applications claimed memory; free MR blocks.

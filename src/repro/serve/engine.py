@@ -23,6 +23,7 @@ to the no-pressure reference decode.
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -34,9 +35,11 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import device_ops as dev
 from repro.core.activity import ActivityTracker
+from repro.core.config import OrchestrationConfig
 from repro.core.page_table import GlobalPageTable, Tier
 from repro.core.policies import Policy, CostModel, VALET, TPU_COSTS
 from repro.core.pool import ValetMempool
+from repro.core.reservoir import LatencyReservoir
 from repro.models import decode as D
 from repro.models.transformer import ParallelCtx
 
@@ -67,6 +70,22 @@ class EngineStats:
     sim_time_us: float = 0.0         # critical-path simulated time
     bg_time_us: float = 0.0          # overlapped background traffic
     wall_time_s: float = 0.0
+    # async orchestration (all zero in synchronous mode)
+    fences: int = 0                  # restores that waited on the daemon
+    fence_wait_us: float = 0.0       # simulated wait absorbed by fences
+    daemon_us: float = 0.0           # spill traffic charged to the daemon
+    # bounded per-scheduler-iteration latency reservoir (admit + resume +
+    # fence + decode step); excluded from dataclass equality
+    lat: LatencyReservoir = field(default_factory=LatencyReservoir,
+                                  compare=False, repr=False)
+
+    def latency_p50(self) -> float:
+        """Median per-step critical-path latency (simulated us)."""
+        return self.lat.p50()
+
+    def latency_p99(self) -> float:
+        """99th-percentile per-step critical-path latency (simulated us)."""
+        return self.lat.p99()
 
 
 class ValetServeEngine:
@@ -76,8 +95,15 @@ class ValetServeEngine:
                  policy: Policy = VALET, costs: CostModel = TPU_COSTS,
                  step_cost_us: float = 0.0, seed: int = 0,
                  coordinator=None, container_name: Optional[str] = None,
-                 container_weight: float = 1.0,
-                 weight: Optional[float] = None):
+                 container_weight: Optional[float] = None,
+                 weight: Optional[float] = None,
+                 async_mode: bool = False):
+        if container_weight is not None:
+            warnings.warn(
+                "ValetServeEngine(container_weight=...) is deprecated; use "
+                "weight=... (or OrchestrationConfig(weight=...) with "
+                "ValetServeEngine.from_config())", DeprecationWarning,
+                stacklevel=2)
         self.params = params
         self.cfg = cfg
         self.ctx = ctx
@@ -105,8 +131,13 @@ class ValetServeEngine:
         # weighted-fair share of the slab surplus, so coordinator-driven
         # reclamation sheds lighter co-tenants toward their (smaller) fair
         # shares first.  ``weight=`` is the serve-API spelling;
-        # ``container_weight`` is kept for symmetry with TieredPageStore.
-        self.weight = container_weight if weight is None else weight
+        # ``container_weight`` remains as a deprecated alias.
+        if weight is not None:
+            self.weight = weight
+        elif container_weight is not None:
+            self.weight = container_weight
+        else:
+            self.weight = 1.0
         if coordinator is not None:
             self._lease = coordinator.register(
                 min_pages=min_pool or pool_slots, max_pages=pool_slots,
@@ -123,6 +154,14 @@ class ValetServeEngine:
         self.tracker = ActivityTracker()
         self.host_store: Dict[int, Dict[int, Tuple[np.ndarray, np.ndarray]]] = {}
         self.stats = EngineStats()
+        # async orchestration (tentpole, engine side): the engine owns its
+        # own pool (no TieredPageStore), so it carries its own light daemon
+        # clock — lazy spill traffic advances it instead of ``bg_time_us``,
+        # and a restore that needs those bytes FENCES on it (waits out the
+        # daemon's in-flight work) rather than pretending the overlap was
+        # free.  Synchronous mode (default) is bitwise unchanged.
+        self.async_mode = async_mode
+        self._daemon_clock_us = 0.0
         self.step_counter = 0
         self._next_page_id = 0
         self._slots_free = list(range(max_batch))
@@ -131,6 +170,29 @@ class ValetServeEngine:
 
         self._decode_jit = jax.jit(self._decode_fn)
         self._prefill_jit = {}
+
+    @classmethod
+    def from_config(cls, params, cfg: ArchConfig, ctx: ParallelCtx,
+                    config: OrchestrationConfig, *, max_batch: int,
+                    max_seq: int, page: int = 16,
+                    step_cost_us: float = 0.0) -> "ValetServeEngine":
+        """Build an engine from the unified ``OrchestrationConfig``.
+
+        The config's store-level knobs map onto the engine's pool:
+        ``pool_capacity`` -> ``pool_slots``, ``min_pool`` -> ``min_pool``;
+        policy/costs/seed/coordinator/weight/async_mode carry over
+        directly.  Model-plumbing arguments (params, arch, parallel ctx,
+        batch geometry) stay explicit — they are not orchestration."""
+        return cls(params, cfg, ctx,
+                   max_batch=max_batch, max_seq=max_seq, page=page,
+                   pool_slots=config.pool_capacity,
+                   min_pool=config.min_pool,
+                   policy=config.policy, costs=config.costs,
+                   step_cost_us=step_cost_us, seed=config.seed,
+                   coordinator=config.coordinator,
+                   container_name=config.container_name,
+                   weight=config.weight,
+                   async_mode=config.async_mode)
 
     # ------------------------------------------------------------------ jit
 
@@ -275,6 +337,16 @@ class ValetServeEngine:
                 return False
         if n == 0:
             return True
+        if self.async_mode:
+            # the spill daemon may still be writing these bytes out: a
+            # restore is a true data dependency, so it fences — waits out
+            # the daemon's in-flight work — before reading them back
+            st = self.stats
+            wait = self._daemon_clock_us - st.sim_time_us
+            if wait > 0.0:
+                st.sim_time_us += wait
+                st.fence_wait_us += wait
+            st.fences += 1
         needed_l = needed.tolist()
         slots = self.pool.alloc_batch(needed_l, [self.step_counter] * n)
         if slots is None:           # cannot happen: free_count checked above
@@ -406,6 +478,7 @@ class ValetServeEngine:
         t0 = time.monotonic()
         while max_steps > 0:
             max_steps -= 1
+            sim_before = self.stats.sim_time_us
             pending = [r for r in self._requests.values()
                        if r.status in ("waiting", "paused")]
             for r in pending:
@@ -422,6 +495,10 @@ class ValetServeEngine:
                     continue
                 break
             self._step_active(active, greedy)
+            # one scheduler iteration = one critical-path latency sample
+            # (admit + resume/fence + decode); the reservoir backs
+            # EngineStats.latency_p50/p99
+            self.stats.lat.record(self.stats.sim_time_us - sim_before)
         self.stats.wall_time_s = time.monotonic() - t0
         return [r for r in self._requests.values()]
 
@@ -537,7 +614,15 @@ class ValetServeEngine:
             self.stats.spilled_pages += m
             cost = self.costs.host_write * m
             if self.policy.lazy_send:
-                self.stats.bg_time_us += cost
+                if self.async_mode:
+                    # charge the daemon clock: the spill overlaps decode,
+                    # but a restore of these pages must fence on it
+                    self._daemon_clock_us = max(
+                        self._daemon_clock_us,
+                        self.stats.sim_time_us) + cost
+                    self.stats.daemon_us += cost
+                else:
+                    self.stats.bg_time_us += cost
             else:
                 self.stats.sim_time_us += cost
         req.status = "paused"

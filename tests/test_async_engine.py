@@ -1,0 +1,289 @@
+"""AsyncOrchestrator: the epoch/fence protocol and its verification tier.
+
+The async engine deliberately breaks bitwise parity with the synchronous
+store (flush cadence and victim order shift once daemon work overlaps the
+critical path), so these tests pin what the design actually promises:
+
+* **Safety** — the full ``InvariantChecker`` (no lost writes, §5.2
+  write-set safety, slab/page conservation, replica-index consistency)
+  holds after every epoch on randomized pressure/failure traces, in both
+  orchestration modes (it must pass *trivially* on the sync store).
+* **Statistical equivalence** — sync and async runs of one trace tell the
+  same workload story (``stats_close`` over hits/evictions/migrations).
+* **The point of the exercise** — on the oversubscribed pressure trace the
+  async p99 beats the sync p99 (the inline flush stall leaves the
+  foreground distribution), and fences fire exactly when the daemon is
+  genuinely behind.
+* **Epoch holds** — ``hold_from_free``/``commit_holds`` bound when the
+  daemon's reclaimed slots become allocatable.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (AsyncOrchestrator, InvariantChecker, InvariantError,
+                        OrchestrationConfig, TieredPageStore, POLICIES,
+                        PAPER_COSTS, stats_close, stats_delta)
+from repro.core.pool import SlotState, ValetMempool
+
+
+def make_store(*, pool=128, min_pool=None, n_peers=4, blocks=256, seed=0,
+               async_mode=False, policy="valet", **kw):
+    cfg = OrchestrationConfig(
+        policy=POLICIES[policy], costs=PAPER_COSTS, pool_capacity=pool,
+        min_pool=pool if min_pool is None else min_pool, max_pool=pool,
+        n_peers=n_peers, peer_capacity_blocks=blocks, pages_per_block=16,
+        seed=seed, async_mode=async_mode, **kw)
+    return TieredPageStore.from_config(cfg)
+
+
+def random_trace(seed, n_pages, n_ops, write_frac=0.4):
+    rng = np.random.default_rng(seed)
+    pages = np.clip(rng.zipf(1.3, n_ops), 1, n_pages) - 1
+    return pages.astype(np.int64), rng.random(n_ops) < write_frac
+
+
+def drive_checked(store, pages, is_write, *, chunk=128, check_every=512,
+                  events=None):
+    """Drive in chunks, ticking each chunk and running the full checker
+    every ``check_every`` ops (an epoch multiple in async mode)."""
+    chk = InvariantChecker(store)
+    for i in range(0, len(pages), chunk):
+        store.access_batch(pages[i:i + chunk], is_write[i:i + chunk])
+        store.background_tick()
+        if events and i in events:
+            events[i](store)
+        if i % check_every == 0:
+            chk.check()
+    store.drain()
+    chk.check()
+    assert chk.n_checks >= 2
+    return store
+
+
+# -- epoch-tagged holds (the daemon <-> foreground hand-off) -------------------
+
+def test_hold_from_free_defers_allocation():
+    pool = ValetMempool(16, min_pages=16, max_pages=16)
+    free0 = pool.free_count()
+    held = pool.hold_from_free(4, epoch=3, finish_us=100.0)
+    assert held == 4
+    assert pool.free_count() == free0 - 4
+    assert pool.held_count() == 4
+    pool.check_invariants()
+    # neither bound satisfied -> nothing commits
+    assert pool.commit_holds(up_to_epoch=2, now_us=50.0) == 0
+    # AND semantics: epoch admits, time does not
+    assert pool.commit_holds(up_to_epoch=3, now_us=50.0) == 0
+    assert pool.commit_holds(up_to_epoch=3, now_us=100.0) == 4
+    assert pool.free_count() == free0 and pool.held_count() == 0
+    pool.check_invariants()
+
+
+def test_commit_holds_wildcard_is_the_fence_path():
+    pool = ValetMempool(16, min_pages=16, max_pages=16)
+    pool.hold_from_free(3, epoch=1, finish_us=10.0)
+    pool.hold_from_free(5, epoch=2, finish_us=1e9)
+    assert pool.held_count() == 8
+    assert pool.commit_holds() == 8          # no bounds: everything commits
+    assert pool.held_count() == 0
+    pool.check_invariants()
+
+
+def test_hold_is_capped_by_free_list():
+    pool = ValetMempool(8, min_pages=8, max_pages=8)
+    for pg in range(6):
+        pool.alloc(pg, step=pg)
+    assert pool.hold_from_free(100, epoch=0, finish_us=0.0) == 2
+    assert pool.free_count() == 0
+    pool.check_invariants()
+
+
+# -- the checker itself --------------------------------------------------------
+
+def test_checker_passes_trivially_on_sync_randomized_traces():
+    """The invariant tier must hold on the bitwise-verified synchronous
+    store under pool pressure, peer pressure, and peer failure — if it
+    can't, the checks (not the store) are wrong."""
+    for seed in range(3):
+        pages, is_write = random_trace(seed, 500, 4000, write_frac=0.5)
+        events = {
+            1024: lambda s: s.peer_pressure(0, 4),
+            2048: lambda s: s.fail_peer(1),
+            3072: lambda s: s.local_pressure(32),
+        }
+        drive_checked(make_store(pool=48, seed=seed), pages, is_write,
+                      events=events)
+
+
+def test_checker_detects_a_planted_violation():
+    """Negative control: corrupt one protocol fact and the checker fires."""
+    st = make_store(pool=32)
+    st.access_batch(np.arange(64, dtype=np.int64), True)
+    chk = InvariantChecker(st)
+    chk.check()
+    slot = int(np.flatnonzero(st.pool.state == int(SlotState.IN_USE))[0])
+    st.pool.owner[slot] = 9999                # break mapping coherence
+    with pytest.raises(InvariantError):
+        chk.check()
+
+
+def test_stats_close_bounds():
+    a = make_store(pool=64)
+    pages, is_write = random_trace(1, 200, 1500)
+    a.access_batch(pages, is_write)
+    assert stats_close(a.stats, a.stats)      # identity
+    b = make_store(pool=64)
+    b.access_batch(pages, is_write)
+    b.stats.local_hits += int(0.5 * max(b.stats.local_hits, 1)) + 200
+    assert not stats_close(a.stats, b.stats)
+    assert "local_hits" in stats_delta(a.stats, b.stats)
+
+
+# -- async mode: safety on randomized pressure/failure traces ------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_async_invariants_under_pressure_and_failure(seed):
+    pages, is_write = random_trace(100 + seed, 600, 5000, write_frac=0.5)
+    events = {
+        1024: lambda s: s.peer_pressure(0, 4),
+        2560: lambda s: s.fail_peer(1),
+        3968: lambda s: s.local_pressure(24),
+    }
+    st = drive_checked(make_store(pool=64, seed=seed, async_mode=True),
+                       pages, is_write, events=events)
+    assert st.orchestrator is not None
+    assert st.orchestrator.n_boundaries > 0
+    assert st.stats.daemon_us > 0             # work actually moved off-path
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_sync_async_statistical_equivalence(seed):
+    """Same trace, both modes: the workload-visible counters agree within
+    the documented bounds even though interleavings differ.  The async
+    daemon's proactive restock drops some local mappings earlier than the
+    sync store would, so the tolerance is looser than the default."""
+    pages, is_write = random_trace(200 + seed, 500, 6000, write_frac=0.4)
+    s = drive_checked(make_store(pool=96, seed=seed), pages, is_write)
+    a = drive_checked(make_store(pool=96, seed=seed, async_mode=True),
+                      pages, is_write)
+    assert s.stats.ops == a.stats.ops == len(pages)
+    assert stats_close(s.stats, a.stats, rtol=0.35, atol=256), \
+        stats_delta(s.stats, a.stats)
+
+
+# -- fences: the foreground pays only when the daemon is behind ----------------
+
+def test_fences_fire_when_writes_outpace_the_daemon():
+    """All-distinct writes exhaust the free list mid-epoch (nothing is
+    reclaimable before the staged sets flush), so the write path must run
+    its fence ladder — and still lose no writes."""
+    st = make_store(pool=32, async_mode=True)
+    pages = np.arange(2000, dtype=np.int64)
+    st.access_batch(pages, True)
+    assert st.stats.fences > 0
+    assert st.stats.ops == 2000
+    InvariantChecker(st).check()
+    st.drain()
+    InvariantChecker(st).check()
+
+
+def test_no_fences_when_daemon_keeps_up():
+    """A read-mostly resident workload never exhausts the free list, so the
+    foreground should never wait on the daemon."""
+    st = make_store(pool=256, async_mode=True)
+    st.access_batch(np.arange(128, dtype=np.int64), True)
+    st.drain()
+    rng = np.random.default_rng(0)
+    pages = rng.integers(0, 128, size=4000).astype(np.int64)
+    fences0 = st.stats.fences
+    for i in range(0, 4000, 256):
+        st.access_batch(pages[i:i + 256], False)
+        st.background_tick()
+    assert st.stats.fences == fences0
+    InvariantChecker(st).check()
+
+
+# -- the tail: what the tentpole buys ------------------------------------------
+
+def test_async_p99_beats_sync_on_pressure_trace():
+    """Mini tail_latency: oversubscribed pool, populated working set.  The
+    sync p99 is the inline flush stall; async moves it to the daemon.  The
+    acceptance bound (async p99 <= 0.8x sync p99) must hold here too."""
+    rng = np.random.default_rng(5)
+    n_pages, n_ops = 2048, 20_000
+    pages = rng.integers(0, n_pages, size=n_ops).astype(np.int64)
+    is_write = rng.random(n_ops) < 0.6
+
+    def run(async_mode):
+        st = make_store(pool=128, n_peers=6, blocks=1024,
+                        async_mode=async_mode)
+        st.access_batch(np.arange(n_pages, dtype=np.int64), True)
+        st.drain()
+        st.stats.lat.reset()
+        for i in range(0, n_ops, 256):
+            st.access_batch(pages[i:i + 256], is_write[i:i + 256])
+            if i % 1024 == 0:
+                st.background_tick()
+        if async_mode:
+            InvariantChecker(st).check()
+        return st.stats
+
+    sync, asy = run(False), run(True)
+    assert sync.latency_p99() > 0 and asy.latency_p99() > 0
+    assert asy.latency_p99() <= 0.8 * sync.latency_p99(), \
+        (sync.latency_p99(), asy.latency_p99())
+    assert asy.daemon_us > 0
+    assert sync.daemon_us == 0 and sync.fences == 0   # sync stays sync
+
+
+def test_latency_reservoir_percentiles_are_exact_until_cap():
+    from repro.core.reservoir import LatencyReservoir
+    r = LatencyReservoir(cap=1 << 12)
+    vals = np.random.default_rng(3).exponential(50.0, size=3000)
+    r.record_many(vals)
+    assert r.count == 3000
+    assert r.p99() == pytest.approx(float(np.percentile(vals, 99.0)))
+    r.reset()
+    assert len(r) == 0 and r.count == 0 and r.p99() == 0.0
+
+
+# -- real-thread mode ----------------------------------------------------------
+
+def test_real_thread_smoke():
+    """The optional real daemon thread: same safety story (invariants,
+    statistical equivalence vs the simulated-clock daemon), clean close."""
+    pages, is_write = random_trace(7, 400, 3000, write_frac=0.5)
+    sim = drive_checked(make_store(pool=64, async_mode=True),
+                        pages, is_write)
+    st = make_store(pool=64, async_mode=True, real_thread=True)
+    try:
+        for i in range(0, len(pages), 128):
+            st.access_batch(pages[i:i + 128], is_write[i:i + 128])
+            st.background_tick()
+        st.drain()
+        InvariantChecker(st).check()
+        assert st.stats.ops == len(pages)
+        assert stats_close(sim.stats, st.stats, rtol=0.35, atol=256), \
+            stats_delta(sim.stats, st.stats)
+    finally:
+        st.orchestrator.close()
+    st.orchestrator.close()                   # idempotent
+
+
+# -- direct engine surface -----------------------------------------------------
+
+def test_orchestrator_validates_knobs():
+    st = make_store(pool=32)
+    with pytest.raises(ValueError):
+        AsyncOrchestrator(st, epoch_len=0)
+    with pytest.raises(ValueError):
+        AsyncOrchestrator(st, daemon_budget=0)
+
+
+def test_drain_quiesces_the_daemon():
+    st = make_store(pool=64, async_mode=True)
+    st.access_batch(np.arange(300, dtype=np.int64), True)
+    st.drain()
+    assert len(st.pipeline.staging) == 0
+    assert st.pool.held_count() == 0          # quiesce committed every hold
+    InvariantChecker(st).check()

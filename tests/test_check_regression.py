@@ -11,7 +11,8 @@ FULL = {"batch_speedup": {"speedup": 4.0},
         "pressure_speedup": {"speedup": 1.0},
         "reclaim_speedup": {"speedup": 3.6},
         "reclaim_floor": {"speedup": 2.0},
-        "multi_tenant": {"speedup": 1.3}}
+        "multi_tenant": {"speedup": 1.3},
+        "tail_latency": {"speedup": 15.0}}
 
 
 def run_gate(tmp_path, results, baseline, *extra):

@@ -1,0 +1,186 @@
+"""OrchestrationConfig: the unified API surface and its deprecated aliases.
+
+Pinned contracts:
+
+* every legacy ``TieredPageStore`` keyword still works, emits a
+  ``DeprecationWarning`` naming the replacement config field, and produces
+  a store *bitwise identical* to ``from_config`` with the same values;
+* unknown keywords raise ``TypeError`` exactly as the old signature would;
+* ``OrchestrationConfig`` is frozen, ``replace()``-able, and defaults to
+  synchronous mode (the bitwise-parity regime);
+* the serve engine's ``container_weight`` alias warns and maps to
+  ``weight``; ``from_config`` carries the orchestration fields over.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import (OrchestrationConfig, TieredPageStore, ValetServeEngine,
+                   HostMemoryCoordinator)
+from repro.core import POLICIES, PAPER_COSTS
+from repro.core.config import LEGACY_STORE_KWARGS, config_from_legacy_kwargs
+
+
+def small_trace(seed=0, n_pages=300, n_ops=2000):
+    rng = np.random.default_rng(seed)
+    pages = np.clip(rng.zipf(1.3, n_ops), 1, n_pages) - 1
+    is_write = rng.random(n_ops) < 0.4
+    return pages.astype(np.int64), is_write
+
+
+def drive(store, pages, is_write, chunk=128):
+    for i in range(0, len(pages), chunk):
+        store.access_batch(pages[i:i + chunk], is_write[i:i + chunk])
+        store.background_tick()
+    store.drain()
+    return store
+
+
+# -- the config object itself --------------------------------------------------
+
+def test_config_is_frozen_and_replaceable():
+    cfg = OrchestrationConfig()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        cfg.pool_capacity = 2048
+    cfg2 = cfg.replace(pool_capacity=2048, async_mode=True)
+    assert cfg2.pool_capacity == 2048 and cfg2.async_mode
+    assert cfg.pool_capacity == 1024 and not cfg.async_mode  # original intact
+
+
+def test_config_defaults_are_synchronous():
+    st = TieredPageStore.from_config(OrchestrationConfig())
+    assert st.orchestrator is None
+    assert st.config.async_mode is False
+
+
+# -- deprecated aliases --------------------------------------------------------
+
+# one representative value per legacy keyword (every alias in the map)
+LEGACY_VALUES = {
+    "pool_capacity": 96,
+    "min_pool": 48,
+    "max_pool": 96,
+    "n_peers": 3,
+    "peer_capacity_blocks": 64,
+    "pages_per_block": 8,
+    "host_capacity": 1 << 20,
+    "free_memory_fn": (lambda: 1 << 20),
+    "seed": 7,
+    "data_plane": None,
+    "batch_reclaim": True,
+    "grow_step": 16,
+    "coordinator": None,
+    "container_name": None,
+    "container_weight": 2.0,
+    "weight": 2.0,
+}
+
+
+@pytest.mark.parametrize("key", sorted(LEGACY_STORE_KWARGS))
+def test_every_legacy_kwarg_warns_and_round_trips(key):
+    val = LEGACY_VALUES[key]
+    with pytest.warns(DeprecationWarning, match=key):
+        cfg = config_from_legacy_kwargs(OrchestrationConfig(), {key: val},
+                                        owner="TieredPageStore")
+    assert getattr(cfg, LEGACY_STORE_KWARGS[key]) == val
+
+
+def test_legacy_values_cover_the_alias_map():
+    assert set(LEGACY_VALUES) == set(LEGACY_STORE_KWARGS)
+
+
+def test_unknown_kwarg_raises_type_error():
+    with pytest.raises(TypeError, match="unexpected keyword.*bogus"):
+        TieredPageStore(POLICIES["valet"], PAPER_COSTS, bogus=3)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        config_from_legacy_kwargs(OrchestrationConfig(), {"queue_len": 4},
+                                  owner="TieredPageStore")
+
+
+def test_legacy_store_constructor_warns_per_kwarg():
+    with pytest.warns(DeprecationWarning) as rec:
+        TieredPageStore(POLICIES["valet"], PAPER_COSTS, pool_capacity=64,
+                        min_pool=64, max_pool=64, n_peers=2,
+                        peer_capacity_blocks=32)
+    assert len([w for w in rec if w.category is DeprecationWarning]) == 5
+
+
+def test_legacy_and_config_stores_are_bitwise_identical():
+    """The alias path folds into a config internally, so both construction
+    routes must produce the same store state after a mixed trace —
+    identical Stats (including accumulated microseconds), free-list order,
+    and page-table arrays."""
+    pages, is_write = small_trace(seed=3)
+    cfg = OrchestrationConfig(policy=POLICIES["valet"], costs=PAPER_COSTS,
+                              pool_capacity=64, min_pool=64, max_pool=64,
+                              n_peers=4, peer_capacity_blocks=64,
+                              pages_per_block=16, seed=5)
+    a = TieredPageStore.from_config(cfg)
+    with pytest.warns(DeprecationWarning):
+        b = TieredPageStore(POLICIES["valet"], PAPER_COSTS,
+                            pool_capacity=64, min_pool=64, max_pool=64,
+                            n_peers=4, peer_capacity_blocks=64,
+                            pages_per_block=16, seed=5)
+    drive(a, pages, is_write)
+    drive(b, pages, is_write)
+    assert a.stats == b.stats
+    assert a.pool._free == b.pool._free
+    assert np.array_equal(a.gpt._l_slot, b.gpt._l_slot)
+    assert a.host_pages == b.host_pages
+
+
+def test_from_config_policy_override_for_sweeps():
+    cfg = OrchestrationConfig(pool_capacity=64, min_pool=64, max_pool=64)
+    st = TieredPageStore.from_config(cfg, policy=POLICIES["infiniswap"])
+    assert st.policy is POLICIES["infiniswap"]
+    assert st.config.policy is POLICIES["infiniswap"]   # config reflects it
+
+
+def test_config_with_coordinator_registers_container():
+    coord = HostMemoryCoordinator(512)
+    cfg = OrchestrationConfig(pool_capacity=256, min_pool=32, max_pool=256,
+                              coordinator=coord, container_name="tenant-a",
+                              weight=2.0)
+    st = TieredPageStore.from_config(cfg)
+    assert st._lease is not None
+    rec = coord._containers[st._lease.cid]
+    assert rec.name == "tenant-a" and rec.weight == 2.0
+    coord.check_invariants()
+
+
+# -- serve-engine surface ------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+    from repro.configs import ARCHS, reduced
+    from repro.models import transformer as T
+    cfg = reduced(ARCHS["granite-3-8b"])
+    ctx = T.ParallelCtx(remat=False, q_block=8, kv_block=8, loss_chunk=8)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg, ctx
+
+
+def test_engine_container_weight_alias_warns(tiny_model):
+    params, cfg, ctx = tiny_model
+    with pytest.warns(DeprecationWarning, match="container_weight"):
+        eng = ValetServeEngine(params, cfg, ctx, max_batch=2, max_seq=32,
+                               page=4, pool_slots=8, container_weight=3.0)
+    assert eng.weight == 3.0
+    # the replacement spelling wins when both are given, and is silent
+    eng2 = ValetServeEngine(params, cfg, ctx, max_batch=2, max_seq=32,
+                            page=4, pool_slots=8, weight=4.0)
+    assert eng2.weight == 4.0
+
+
+def test_engine_from_config_maps_orchestration_fields(tiny_model):
+    params, cfg, ctx = tiny_model
+    ocfg = OrchestrationConfig(policy=POLICIES["valet"], pool_capacity=8,
+                               min_pool=8, weight=2.5, seed=11,
+                               async_mode=True)
+    eng = ValetServeEngine.from_config(params, cfg, ctx, ocfg,
+                                       max_batch=2, max_seq=32, page=4)
+    assert eng.weight == 2.5
+    assert eng.async_mode is True
+    assert eng.policy is POLICIES["valet"]

@@ -427,3 +427,58 @@ def test_two_engine_qos_weights_skew_fair_shares():
     assert shed_light + shed_heavy > 0, "no pages were reclaimed"
     for eng, rec in zip(engines, (recs["light"], recs["heavy"])):
         assert rec.leased == eng.pool.size
+
+
+# -- coordinated remote (peer) pressure fan-out --------------------------------
+
+
+def test_peer_pressure_fans_out_idle_first():
+    """§3.4 extended to remote memory: a pressured peer signals the
+    coordinator once; the coordinator routes the demand to the containers
+    that actually occupy that peer, idle-first (lowest decayed demand) and
+    capped at each holder's footprint — so busy containers' working sets
+    survive while idle ones donate, mirroring host-slab reclamation."""
+    coord = HostMemoryCoordinator(4096)
+    stores = [make_store(coordinator=coord, name=f"c{i}", capacity=48,
+                         min_pool=48, max_pool=48, peers=2, blocks=256,
+                         seed=i)
+              for i in range(2)]
+    # both containers spill well past their pools onto the peers
+    for st in stores:
+        st.access_batch(np.arange(600, dtype=np.int64), True)
+        st.drain()
+    fp0 = [st._peer_block_footprint(0) for st in stores]
+    assert min(fp0) > 0, "precondition: both containers occupy peer 0"
+
+    # make container 0 the busy one; container 1 idle -> donates first
+    recs = sorted(coord.containers(), key=lambda r: r.cid)
+    recs[0].demand, recs[1].demand = 100.0, 0.0
+
+    ask = fp0[1] // 2
+    freed = coord.peer_pressure(0, ask)
+    assert freed == ask
+    assert stores[0]._peer_block_footprint(0) == fp0[0]   # busy untouched
+    assert stores[1]._peer_block_footprint(0) == fp0[1] - freed
+    assert coord.stats.n_peer_pressure_events == 1
+    assert coord.stats.peer_blocks_freed == freed
+    assert recs[1].peer_blocks_freed_total == freed
+    assert recs[0].demand < 100.0                         # decayed
+
+    # overflow the idle holder's remaining footprint: the busy one pays the
+    # difference, and the grand total is conserved across holders
+    big = stores[1]._peer_block_footprint(0) + 3
+    freed2 = coord.peer_pressure(0, big)
+    assert freed2 == big
+    assert stores[1]._peer_block_footprint(0) == 0
+    assert stores[0]._peer_block_footprint(0) == fp0[0] - 3
+    assert coord.stats.peer_blocks_freed == freed + freed2
+    for st in stores:
+        st.pipeline.check_invariants()
+    coord.check_invariants()
+
+
+def test_peer_pressure_without_holders_is_a_noop():
+    coord = HostMemoryCoordinator(256)
+    assert coord.peer_pressure(0, 8) == 0
+    assert coord.peer_pressure(0, 0) == 0
+    assert coord.stats.peer_blocks_freed == 0
