@@ -26,10 +26,16 @@ import sys
 ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
 
 # (benchmark key in bench_results.json, metric key) — all tracked metrics
-# are higher-is-better speedup ratios; current < baseline*(1-tol) fails.
+# are higher-is-better ratios; current < baseline*(1-tol) fails.
 # multi_tenant/speedup is the coordinated-vs-static-partitioning ratio and
 # tail_latency/speedup the sync-vs-async p99 ratio (both simulated us,
 # deterministic — see paper_tables.multi_tenant / paper_tables.tail_latency).
+# The workload-suite keys (benchmarks/workloads.py) are likewise
+# deterministic simulated metrics: ycsb_a/hit_ratio is the sync local hit
+# ratio under hotset rotation, ml_trace/speedup the sync/async simulated
+# wall-clock ratio on the activation-cycling trace, and
+# mixed_tenant_workload/fairness Jain's index over per-tenant
+# coordinated-vs-static speedups.
 TRACKED = [
     ("batch_speedup", "speedup"),
     ("pressure_speedup", "speedup"),
@@ -37,6 +43,9 @@ TRACKED = [
     ("reclaim_floor", "speedup"),
     ("multi_tenant", "speedup"),
     ("tail_latency", "speedup"),
+    ("ycsb_a", "hit_ratio"),
+    ("ml_trace", "speedup"),
+    ("mixed_tenant_workload", "fairness"),
 ]
 
 

@@ -37,11 +37,36 @@ def save_json(name, obj):
 def latency_summary(stats):
     """Percentile summary of a run via the ``Stats``/``EngineStats`` latency
     accessors (the bounded deterministic reservoir — see
-    ``repro.core.reservoir``).  Keys: count, p50_us, p90_us, p99_us, max_us."""
+    ``repro.core.reservoir``).  Keys: count, p50_us, p90_us, p99_us,
+    p999_us, max_us."""
     out = stats.lat.summary()
     out["p50_us"] = stats.latency_p50()
     out["p99_us"] = stats.latency_p99()
+    out["p999_us"] = stats.latency_p999()
     return out
+
+
+def drive_arrays(store, pages, is_write, tick_every=32, batch=256):
+    """Drive (pages, is_write) arrays through ``access_batch`` in chunks.
+
+    Chunk boundaries land exactly where the scalar loop ran its
+    ``background_tick`` (after every op index divisible by ``tick_every``),
+    so the result is bitwise identical to the old per-op loop — just much
+    faster.  Returns the per-op critical-path latency array."""
+    pages = np.ascontiguousarray(pages, np.int64)
+    is_write = np.ascontiguousarray(is_write, bool)
+    n = len(pages)
+    lats = np.empty(n, np.float64)
+    i = 0
+    while i < n:
+        nxt = i if i % tick_every == 0 else (i // tick_every + 1) * tick_every
+        end = min(n, i + batch, nxt + 1)
+        lats[i:end] = store.access_batch(pages[i:end], is_write[i:end])
+        if (end - 1) % tick_every == 0:
+            store.background_tick()
+        i = end
+    store.background_tick()
+    return lats
 
 
 def timeit(fn, *args, n=20, warmup=3):

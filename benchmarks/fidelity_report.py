@@ -1,0 +1,195 @@
+"""Paper-fidelity report: measured reproduction vs the paper's published
+numbers, plus the SLO-grade workload matrix — rendered as markdown.
+
+``python -m benchmarks.fidelity_report`` reads ``bench_results.json``
+(merge-updated by ``benchmarks.run``), writes
+``benchmarks/artifacts/fidelity_report.md``, prints it, and appends it to
+``$GITHUB_STEP_SUMMARY`` when CI sets it — so "does the reproduction still
+match the paper?" is answered on every push, as an artifact, not a one-off
+claim.
+
+Two sections:
+
+* **Paper comparisons** — the paper's headline ratios (226x throughput /
+  98% latency cut over OS swap; 5.5x / 78.4% over remote paging; the §3.4
+  pooling and async-tail claims) against what ``paper_tables.py`` measured
+  this run.  Our simulator reproduces the *mechanisms*, not the absolute
+  hardware numbers, so the table reports both values side by side with the
+  direction check (does the reproduction preserve the paper's ordering?).
+* **Workload matrix** — per workload class (YCSB A-D, ML trace, mixed
+  tenants): hit ratio, p50/p99/p999 simulated latency, throughput per GB
+  of slab, and Jain fairness for the mixed-tenant case.
+
+Missing benches render as ``—`` (a smoke run only refreshes a subset).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+
+
+def _get(results, *path):
+    """Walk nested dicts (string keys; int keys retried as str)."""
+    cur = results
+    for p in path:
+        if not isinstance(cur, dict):
+            return None
+        cur = cur.get(p, cur.get(str(p)))
+        if cur is None:
+            return None
+    return cur
+
+
+def _ratio(num, den):
+    if num is None or den is None or not den:
+        return None
+    return num / den
+
+
+def _cut(num, den):
+    """Latency cut in percent: 1 - num/den."""
+    r = _ratio(num, den)
+    return None if r is None else (1.0 - r) * 100.0
+
+
+def _fmt(v, spec="{:.2f}"):
+    return "—" if v is None else spec.format(v)
+
+
+def paper_rows(results):
+    """(claim, paper value, measured value, unit, direction-held) rows.
+
+    Measured analogues come from the trace benches on the paper's cost
+    profile: fig10's RemoteOnly column is the paper's fully-oversubscribed
+    regime (throughput ratio = inverse latency ratio on fixed op counts),
+    ``tail_latency`` is the Remote-Sender-Thread async claim, and
+    ``multi_tenant`` the §3.4 cross-container pooling claim.
+    """
+    v_lat = _get(results, "fig10", "valet", "RemoteOnly")
+    os_lat = _get(results, "fig10", "os-swap", "RemoteOnly")
+    is_lat = _get(results, "fig10", "infiniswap", "RemoteOnly")
+    nb_lat = _get(results, "fig10", "nbdx", "RemoteOnly")
+    remote_best = None
+    if is_lat is not None or nb_lat is not None:
+        remote_best = min(x for x in (is_lat, nb_lat) if x is not None)
+
+    rows = []
+
+    def claim(label, paper, measured, unit, better="higher"):
+        held = None
+        if measured is not None:
+            held = measured > (1.0 if unit == "x" else 0.0)
+        rows.append((label, paper, measured, unit, held))
+
+    claim("Throughput vs OS swap (RemoteOnly)", "up to 226x",
+          _ratio(os_lat, v_lat), "x")
+    claim("Latency cut vs OS swap (RemoteOnly)", "up to 98%",
+          _cut(v_lat, os_lat), "%")
+    claim("Throughput vs remote paging (RemoteOnly)", "up to 5.5x",
+          _ratio(remote_best, v_lat), "x")
+    claim("Latency cut vs remote paging (RemoteOnly)", "up to 78.4%",
+          _cut(v_lat, remote_best), "%")
+    claim("Cross-container pooling vs static split (§3.4)", "> 1x",
+          _get(results, "multi_tenant", "speedup"), "x")
+    claim("Async orchestration p99 cut (Remote Sender Thread)", "tail ↓",
+          _cut(_get(results, "tail_latency", "async_p99_us"),
+               _get(results, "tail_latency", "sync_p99_us")), "%")
+    return rows
+
+
+def workload_rows(results):
+    """(workload, hit ratio, p50, p99, p999, thr/GB, fairness) rows."""
+    rows = []
+    for name in ("ycsb_a", "ycsb_b", "ycsb_c", "ycsb_d", "ml_trace"):
+        sync = _get(results, name, "sync")
+        if sync is None:
+            rows.append((name, None, None, None, None, None, None))
+            continue
+        rows.append((name, sync.get("hit_local"), sync.get("p50_us"),
+                     sync.get("p99_us"), sync.get("p999_us"),
+                     sync.get("throughput_per_gb"), None))
+    mt = results.get("mixed_tenant_workload")
+    if isinstance(mt, dict):
+        for ten in mt.get("coordinated", []):
+            rows.append((f"mixed/{ten['tenant']}", ten.get("hit_local"),
+                         ten.get("p50_us"), ten.get("p99_us"),
+                         ten.get("p999_us"), None, None))
+        rows.append(("mixed (aggregate)", None, None, None, None,
+                     mt.get("throughput_per_gb"), mt.get("fairness")))
+    else:
+        rows.append(("mixed_tenant_workload", None, None, None, None,
+                     None, None))
+    return rows
+
+
+def render(results) -> str:
+    out = ["# Paper-fidelity report", ""]
+    out += ["## Paper comparisons (measured this run vs published)", "",
+            "| claim | paper | measured | direction held |",
+            "|---|---|---|---|"]
+    for label, paper, measured, unit, held in paper_rows(results):
+        m = _fmt(measured, "{:.1f}" + ("x" if unit == "x" else "%"))
+        h = "—" if held is None else ("✅" if held else "❌")
+        out.append(f"| {label} | {paper} | {m} | {h} |")
+    out += ["",
+            "The simulator reproduces the paper's *mechanisms* on its cost",
+            "profile (Table 1), not the absolute hardware numbers — the",
+            "check is that every published ordering survives: Valet beats",
+            "OS swap by orders of magnitude, beats remote paging, pooling",
+            "beats static partitioning, and the async engine cuts the",
+            "tail.", ""]
+    out += ["## Workload matrix (SLO-grade, deterministic simulated us)",
+            "",
+            "| workload | hit ratio (local) | p50 us | p99 us | p999 us "
+            "| ops/s/GB | Jain fairness |",
+            "|---|---|---|---|---|---|---|"]
+    for name, hit, p50, p99, p999, thr, fair in workload_rows(results):
+        out.append("| {} | {} | {} | {} | {} | {} | {} |".format(
+            name, _fmt(hit, "{:.4f}"), _fmt(p50), _fmt(p99), _fmt(p999),
+            _fmt(thr, "{:,.0f}"), _fmt(fair, "{:.3f}")))
+    out += ["",
+            "Async-mode deltas and per-tenant static-vs-coordinated",
+            "breakdowns live in `bench_results.json` (uploaded as a CI",
+            "artifact every run).", ""]
+    return "\n".join(out)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results",
+                    default=os.path.join(ART, "bench_results.json"))
+    ap.add_argument("--out",
+                    default=os.path.join(ART, "fidelity_report.md"))
+    args = ap.parse_args()
+
+    if not os.path.exists(args.results):
+        print(f"FAIL: results file not found: {args.results} "
+              f"(run `python -m benchmarks.run` first)")
+        return 2
+    try:
+        with open(args.results) as f:
+            results = json.load(f)
+    except ValueError as e:
+        print(f"FAIL: results file {args.results} is not valid JSON: {e}")
+        return 2
+    if not isinstance(results, dict):
+        print(f"FAIL: results file {args.results} must hold a JSON object")
+        return 2
+
+    report = render(results)
+    with open(args.out, "w") as f:
+        f.write(report)
+    print(report)
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(report + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

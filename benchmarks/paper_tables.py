@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, latency_summary, timeit
+from benchmarks.common import drive_arrays, emit, latency_summary, timeit
 from repro.core import (OrchestrationConfig, TieredPageStore, POLICIES,
                         PAPER_COSTS, TPU_COSTS)
 from repro.data.pipeline import TraceConfig, generate_trace
@@ -40,25 +40,11 @@ def _trace_arrays(trace):
 
 
 def _drive(store, trace, tick_every=32, batch=256):
-    """Drive a trace through ``access_batch`` in chunks.
-
-    Chunk boundaries land exactly where the scalar loop ran its
-    ``background_tick`` (after every op index divisible by ``tick_every``),
-    so the result is bitwise identical to the old per-op loop — just much
-    faster.  Returns the per-op critical-path latency array."""
+    """Drive a ("read"|"write", page) trace through ``access_batch`` with the
+    standard tick cadence (see ``common.drive_arrays`` for the chunking
+    contract).  Returns the per-op critical-path latency array."""
     pages, is_write = _trace_arrays(trace)
-    n = len(pages)
-    lats = np.empty(n, np.float64)
-    i = 0
-    while i < n:
-        nxt = i if i % tick_every == 0 else (i // tick_every + 1) * tick_every
-        end = min(n, i + batch, nxt + 1)
-        lats[i:end] = store.access_batch(pages[i:end], is_write[i:end])
-        if (end - 1) % tick_every == 0:
-            store.background_tick()
-        i = end
-    store.background_tick()
-    return lats
+    return drive_arrays(store, pages, is_write, tick_every, batch)
 
 
 def _populate(store, n_pages, tick_every=32, batch=256):

@@ -89,16 +89,26 @@ class LatencyReservoir:
     def p99(self) -> float:
         return self.percentile(99.0)
 
+    def p999(self) -> float:
+        """99.9th percentile — the SLO-grade tail the workload suite gates.
+
+        Resolution note: p999 needs >= ~1000 retained samples to sit above
+        p99; the default 64Ki cap keeps exact streams up to 64Ki ops and a
+        stride-decimated systematic sample beyond, which is still an
+        unbiased p999 estimator for the deterministic traces we replay."""
+        return self.percentile(99.9)
+
     def summary(self) -> dict:
-        """p50/p90/p99/max over the retained sample plus sample counts."""
+        """p50/p90/p99/p999/max over the retained sample plus counts."""
         if self._n == 0:
             return {"count": 0, "p50_us": 0.0, "p90_us": 0.0,
-                    "p99_us": 0.0, "max_us": 0.0}
+                    "p99_us": 0.0, "p999_us": 0.0, "max_us": 0.0}
         live = self._buf[:self._n]
         return {
             "count": self._seen,
             "p50_us": float(np.percentile(live, 50.0)),
             "p90_us": float(np.percentile(live, 90.0)),
             "p99_us": float(np.percentile(live, 99.0)),
+            "p999_us": float(np.percentile(live, 99.9)),
             "max_us": float(live.max()),
         }

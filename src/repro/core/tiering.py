@@ -82,6 +82,10 @@ class Stats:
         """99th-percentile critical-path op latency (us)."""
         return self.lat.p99()
 
+    def latency_p999(self) -> float:
+        """99.9th-percentile critical-path op latency (us, SLO tail)."""
+        return self.lat.p999()
+
     def hit_ratio(self) -> Dict[str, float]:
         n = max(self.local_hits + self.remote_hits + self.host_hits
                 + self.cold_hits, 1)

@@ -87,6 +87,10 @@ class EngineStats:
         """99th-percentile per-step critical-path latency (simulated us)."""
         return self.lat.p99()
 
+    def latency_p999(self) -> float:
+        """99.9th-percentile per-step critical-path latency (simulated us)."""
+        return self.lat.p999()
+
 
 class ValetServeEngine:
     def __init__(self, params, cfg: ArchConfig, ctx: ParallelCtx, *,

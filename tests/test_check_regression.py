@@ -7,12 +7,30 @@ import sys
 
 REPO = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
 
+# must cover every TRACKED (bench, metric) pair, including the workload
+# suite's ycsb_a/hit_ratio, ml_trace/speedup and
+# mixed_tenant_workload/fairness
 FULL = {"batch_speedup": {"speedup": 4.0},
         "pressure_speedup": {"speedup": 1.0},
         "reclaim_speedup": {"speedup": 3.6},
         "reclaim_floor": {"speedup": 2.0},
         "multi_tenant": {"speedup": 1.3},
-        "tail_latency": {"speedup": 15.0}}
+        "tail_latency": {"speedup": 15.0},
+        "ycsb_a": {"hit_ratio": 0.78},
+        "ml_trace": {"speedup": 1.35},
+        "mixed_tenant_workload": {"fairness": 0.99}}
+
+
+def test_tracked_covers_workload_suite_keys():
+    """The gate really tracks the three workload-suite keys (the FULL dict
+    above would silently go stale otherwise)."""
+    sys.path.insert(0, REPO)
+    from benchmarks.check_regression import TRACKED
+    assert ("ycsb_a", "hit_ratio") in TRACKED
+    assert ("ml_trace", "speedup") in TRACKED
+    assert ("mixed_tenant_workload", "fairness") in TRACKED
+    for bench, metric in TRACKED:
+        assert metric in FULL[bench], f"FULL missing {bench}/{metric}"
 
 
 def run_gate(tmp_path, results, baseline, *extra):
@@ -38,7 +56,7 @@ def test_gate_passes_on_matching_results(tmp_path):
 
 
 def test_gate_fails_on_regression(tmp_path):
-    bad = {k: {"speedup": v["speedup"] * 0.5} for k, v in FULL.items()}
+    bad = {k: {m: x * 0.5 for m, x in v.items()} for k, v in FULL.items()}
     proc, _ = run_gate(tmp_path, bad, FULL)
     assert proc.returncode == 1
     assert "REGRESSION" in proc.stdout
@@ -50,6 +68,29 @@ def test_missing_tracked_key_fails_clearly(tmp_path):
     assert proc.returncode == 1
     assert "multi_tenant/speedup missing from results" in proc.stdout
     assert "Traceback" not in proc.stderr
+
+
+def test_missing_workload_suite_keys_fail_clearly(tmp_path):
+    """Dropping any of the new workload-suite benches from the results must
+    fail with the same clear per-key message, not pass silently."""
+    for i, (bench, metric) in enumerate((("ycsb_a", "hit_ratio"),
+                                         ("ml_trace", "speedup"),
+                                         ("mixed_tenant_workload",
+                                          "fairness"))):
+        partial = {k: v for k, v in FULL.items() if k != bench}
+        proc, _ = run_gate(tmp_path / str(i), partial, FULL)
+        assert proc.returncode == 1
+        assert f"{bench}/{metric} missing from results" in proc.stdout
+        assert "Traceback" not in proc.stderr
+
+
+def test_workload_metric_regression_fails(tmp_path):
+    """A hit-ratio / fairness drop >20% trips the gate like a speedup."""
+    bad = json.loads(json.dumps(FULL))
+    bad["ycsb_a"]["hit_ratio"] = 0.5          # 0.78 -> 0.5 is > 20% down
+    proc, _ = run_gate(tmp_path, bad, FULL)
+    assert proc.returncode == 1
+    assert "REGRESSION" in proc.stdout
 
 
 def test_missing_results_file_fails_clearly(tmp_path):

@@ -1,0 +1,75 @@
+"""LatencyReservoir p999: the stride-doubling systematic sample is pinned
+exactly — the SLO-grade workload suite gates on these percentiles, so the
+sampling semantics must not drift."""
+import numpy as np
+
+from repro.core.reservoir import LatencyReservoir
+from repro.core.tiering import Stats
+from repro.serve.engine import EngineStats
+
+
+def test_p999_exact_below_cap():
+    """Under the cap, no decimation: p999 is np.percentile of the stream."""
+    res = LatencyReservoir(cap=1 << 16)
+    xs = np.arange(10_000, dtype=np.float64)
+    res.record_many(xs)
+    assert res.p999() == float(np.percentile(xs, 99.9))
+    assert res.p999() >= res.p99() >= res.p50()
+
+
+def test_p999_pinned_under_stride_doubling():
+    """Past the cap, the retained set is exactly every ``stride``-th
+    observation of the stream (the documented systematic sample), so p999
+    is np.percentile over that deterministic subsample — pinned here so
+    the decimation scheme cannot silently change."""
+    cap = 1024
+    res = LatencyReservoir(cap=cap)
+    xs = np.arange(5000, dtype=np.float64)
+    res.record_many(xs)
+    stride = res._stride
+    assert stride > 1, "test must exercise the decimated regime"
+    expected = xs[::stride]
+    retained = res._buf[:len(res)]
+    np.testing.assert_array_equal(retained, expected)
+    assert res.p999() == float(np.percentile(expected, 99.9))
+    # and the whole path is deterministic: a second identical stream gives
+    # bitwise-identical percentiles
+    res2 = LatencyReservoir(cap=cap)
+    res2.record_many(xs)
+    assert res2.p999() == res.p999()
+
+
+def test_p999_chunked_feed_matches_single_feed():
+    """Chunk boundaries must not change the systematic sample."""
+    xs = np.arange(5000, dtype=np.float64)
+    one = LatencyReservoir(cap=1024)
+    one.record_many(xs)
+    many = LatencyReservoir(cap=1024)
+    for i in range(0, len(xs), 257):
+        many.record_many(xs[i:i + 257])
+    assert many.p999() == one.p999()
+    assert many.p99() == one.p99()
+
+
+def test_summary_and_stats_wiring():
+    """summary() exposes p999_us; Stats/EngineStats expose latency_p999."""
+    res = LatencyReservoir()
+    assert res.summary()["p999_us"] == 0.0       # empty
+    res.record_many(np.arange(2000, dtype=np.float64))
+    s = res.summary()
+    assert s["p999_us"] == res.p999()
+    assert s["p99_us"] <= s["p999_us"] <= s["max_us"]
+
+    for stats in (Stats(), EngineStats()):
+        stats.lat.record_many(np.arange(2000, dtype=np.float64))
+        assert stats.latency_p999() == stats.lat.p999()
+        assert stats.latency_p999() >= stats.latency_p99()
+
+
+def test_latency_summary_helper_includes_p999():
+    from benchmarks.common import latency_summary
+    st = Stats()
+    st.lat.record_many(np.arange(4000, dtype=np.float64))
+    out = latency_summary(st)
+    assert out["p999_us"] == st.latency_p999()
+    assert out["p50_us"] == st.latency_p50()

@@ -1,0 +1,190 @@
+"""Trace-driven workload suite (repro.data.workloads): determinism, YCSB
+mix ratios, hotset-rotation phase shifts, ML sweep structure, mixed-tenant
+op conservation, and a small end-to-end replay determinism check."""
+import numpy as np
+import pytest
+
+from repro.data.workloads import (MLTraceConfig, MixedTenantConfig,
+                                  WorkloadTrace, YCSBConfig, YCSB_MIXES,
+                                  interleave_tenants, mixed_tenant_traces,
+                                  ml_trace, phase_segments, ycsb_trace)
+
+
+# -- determinism --------------------------------------------------------------
+
+@pytest.mark.parametrize("letter", sorted(YCSB_MIXES))
+def test_ycsb_deterministic_under_fixed_seed(letter):
+    a = ycsb_trace(YCSBConfig(letter, seed=5))
+    b = ycsb_trace(YCSBConfig(letter, seed=5))
+    np.testing.assert_array_equal(a.pages, b.pages)
+    np.testing.assert_array_equal(a.is_write, b.is_write)
+    c = ycsb_trace(YCSBConfig(letter, seed=6))
+    assert not np.array_equal(a.pages, c.pages), "seed must matter"
+
+
+def test_ml_and_mixed_deterministic_under_fixed_seed():
+    a, b = ml_trace(MLTraceConfig(seed=3)), ml_trace(MLTraceConfig(seed=3))
+    np.testing.assert_array_equal(a.pages, b.pages)
+    np.testing.assert_array_equal(a.is_write, b.is_write)
+    ta = mixed_tenant_traces(MixedTenantConfig())
+    tb = mixed_tenant_traces(MixedTenantConfig())
+    for x, y in zip(ta, tb):
+        np.testing.assert_array_equal(x.pages, y.pages)
+        np.testing.assert_array_equal(x.is_write, y.is_write)
+
+
+# -- YCSB mix ratios ----------------------------------------------------------
+
+@pytest.mark.parametrize("letter", sorted(YCSB_MIXES))
+def test_ycsb_mix_ratio_matches_spec(letter):
+    cfg = YCSBConfig(letter, n_ops=40_000, seed=1)
+    trace = ycsb_trace(cfg)
+    spec_read = YCSB_MIXES[letter]["read"]
+    assert trace.read_fraction() == pytest.approx(spec_read, abs=0.01)
+    assert len(trace) == cfg.n_ops
+    assert trace.pages.min() >= 0
+    assert trace.pages.max() < cfg.n_pages
+
+
+def test_ycsb_c_is_strictly_read_only():
+    assert not ycsb_trace(YCSBConfig("C", seed=2)).is_write.any()
+
+
+# -- hotset rotation ----------------------------------------------------------
+
+def _top_pages(pages, k=50):
+    vals, cnt = np.unique(pages, return_counts=True)
+    return set(vals[np.argsort(-cnt)[:k]].tolist())
+
+
+def test_hotset_rotation_shifts_the_hot_set():
+    """Each rotation phase's most-frequent pages must be (almost) disjoint
+    from the previous phase's — that is the point of rotation."""
+    cfg = YCSBConfig("B", n_ops=40_000, n_phases=4, seed=4)
+    trace = ycsb_trace(cfg)
+    assert len(trace.phase_bounds) == cfg.n_phases - 1
+    cuts = [0, *trace.phase_bounds, len(trace)]
+    hotsets = [_top_pages(trace.pages[s:e])
+               for s, e in zip(cuts[:-1], cuts[1:])]
+    for h0, h1 in zip(hotsets[:-1], hotsets[1:]):
+        overlap = len(h0 & h1) / len(h0)
+        assert overlap < 0.2, f"hot set did not rotate: overlap={overlap}"
+
+
+def test_ycsb_d_hot_set_drifts_toward_latest_inserts():
+    """Workload D's reads skew to recently inserted keys, so the hot set of
+    the last quarter of the trace sits at higher key ids than the first's
+    (before any wrap: keyspace starts half-full)."""
+    cfg = YCSBConfig("D", n_ops=20_000, n_pages=4096, seed=4)
+    trace = ycsb_trace(cfg)
+    assert int(trace.is_write.sum()) < cfg.n_pages // 2, "no wrap expected"
+    q = len(trace) // 4
+    early = np.median(trace.pages[:q])
+    late = np.median(trace.pages[-q:])
+    assert late > early
+
+
+# -- ML working-set trace -----------------------------------------------------
+
+def test_ml_trace_forward_write_backward_read_sweeps():
+    cfg = MLTraceConfig(n_steps=2, total_pages=512, seed=0)
+    trace = ml_trace(cfg)
+    # 2 sweeps per step, bounds between each
+    assert len(trace.phase_bounds) == 2 * cfg.n_steps - 1
+    cuts = [0, *trace.phase_bounds, len(trace)]
+    segs = list(zip(cuts[:-1], cuts[1:]))
+    for i, (s, e) in enumerate(segs):
+        sweep_writes = trace.is_write[s:e]
+        if i % 2 == 0:                      # forward sweep
+            assert sweep_writes.all()
+        else:                               # backward sweep
+            assert not sweep_writes.any()
+        # every sweep touches the whole activation working set exactly once
+        np.testing.assert_array_equal(np.sort(trace.pages[s:e]),
+                                      np.arange(trace.n_pages))
+    # forward order ascends by layer; backward starts from the last layer
+    fwd, bwd = segs[0], segs[1]
+    assert trace.pages[fwd[0]] == 0
+    assert trace.pages[bwd[0]] > trace.n_pages // 2
+
+
+def test_ml_trace_sized_off_the_model_zoo():
+    small = ml_trace(MLTraceConfig(arch="gemma3-4b", total_pages=256))
+    big = ml_trace(MLTraceConfig(arch="gemma3-4b", total_pages=1024))
+    # per-layer rounding (>=1 page per layer) may overshoot a little
+    assert small.n_pages == pytest.approx(256, rel=0.1)
+    assert big.n_pages == pytest.approx(1024, rel=0.1)
+    with pytest.raises(KeyError):
+        ml_trace(MLTraceConfig(arch="not-a-real-arch"))
+
+
+# -- mixed tenants ------------------------------------------------------------
+
+def test_mixed_tenant_conserves_per_tenant_op_counts():
+    cfg = MixedTenantConfig()
+    traces = mixed_tenant_traces(cfg)
+    n_tenants = len(cfg.kv) + len(cfg.ml)
+    assert len(traces) == n_tenants
+    for t, trace in enumerate(traces):
+        segs = phase_segments(trace)
+        assert len(segs) == n_tenants
+        # segments tile the trace exactly: no op lost, none duplicated
+        assert segs[0][0] == 0 and segs[-1][1] == len(trace)
+        for (_, e0), (s1, _) in zip(segs[:-1], segs[1:]):
+            assert e0 == s1
+        # the hot segment carries the tenant's full workload trace
+        hot_s, hot_e = segs[t]
+        if t < len(cfg.kv):
+            assert hot_e - hot_s == cfg.kv[t].n_ops
+            # cold phases are the keyspace-head trickle
+            for p, (s, e) in enumerate(segs):
+                if p != t:
+                    assert e - s == cfg.idle_ops
+                    assert trace.pages[s:e].max() < cfg.idle_pages
+        else:
+            ml_len = len(ml_trace(cfg.ml[t - len(cfg.kv)]))
+            assert hot_e - hot_s == ml_len
+            for p, (s, e) in enumerate(segs):
+                if p != t:
+                    assert e == s, "ML tenants are silent off-phase"
+
+
+def test_interleave_schedule_conserves_and_reorders_nothing():
+    lengths = [1000, 257, 0, 513]
+    sched = interleave_tenants(lengths, slice_ops=128)
+    for t, n in enumerate(lengths):
+        slices = [(s, e) for tt, s, e in sched if tt == t]
+        assert sum(e - s for s, e in slices) == n
+        # in order and gapless
+        pos = 0
+        for s, e in slices:
+            assert s == pos and e > s
+            pos = e
+        assert pos == n
+    with pytest.raises(ValueError):
+        interleave_tenants([10], 0)
+
+
+# -- end-to-end replay determinism -------------------------------------------
+
+def test_workload_replay_is_deterministic_through_the_store():
+    """Two replays of the same trace through fresh stores produce identical
+    simulated stats — the property the CI workload gates rely on."""
+    from repro.core import (OrchestrationConfig, POLICIES, PAPER_COSTS,
+                            TieredPageStore)
+
+    trace = ycsb_trace(YCSBConfig("A", n_pages=256, n_ops=4000, seed=9))
+
+    def run():
+        st = TieredPageStore.from_config(OrchestrationConfig(
+            policy=POLICIES["valet"], costs=PAPER_COSTS,
+            pool_capacity=64, min_pool=64, max_pool=64,
+            n_peers=4, peer_capacity_blocks=256, pages_per_block=16,
+            seed=0))
+        st.access_batch(np.arange(trace.n_pages), np.ones(trace.n_pages,
+                                                          bool))
+        st.drain()
+        st.access_batch(trace.pages, trace.is_write)
+        return st.stats
+
+    assert run() == run()
