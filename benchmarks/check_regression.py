@@ -35,7 +35,10 @@ ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
 # ratio under hotset rotation, ml_trace/speedup the sync/async simulated
 # wall-clock ratio on the activation-cycling trace, and
 # mixed_tenant_workload/fairness Jain's index over per-tenant
-# coordinated-vs-static speedups.
+# coordinated-vs-static speedups.  serve_qps/tokens_per_s is the
+# zero-restore vs bulk-restore serving speedup (sim-time ratio on identical
+# request streams, geomean across archs — benchmarks/serve_qps.py); it
+# regresses if bulk KV scatters creep back into the restore path.
 TRACKED = [
     ("batch_speedup", "speedup"),
     ("pressure_speedup", "speedup"),
@@ -46,6 +49,7 @@ TRACKED = [
     ("ycsb_a", "hit_ratio"),
     ("ml_trace", "speedup"),
     ("mixed_tenant_workload", "fairness"),
+    ("serve_qps", "tokens_per_s"),
 ]
 
 

@@ -8,7 +8,7 @@ numbers, plus the SLO-grade workload matrix — rendered as markdown.
 match the paper?" is answered on every push, as an artifact, not a one-off
 claim.
 
-Two sections:
+Three sections:
 
 * **Paper comparisons** — the paper's headline ratios (226x throughput /
   98% latency cut over OS swap; 5.5x / 78.4% over remote paging; the §3.4
@@ -19,6 +19,10 @@ Two sections:
 * **Workload matrix** — per workload class (YCSB A-D, ML trace, mixed
   tenants): hit ratio, p50/p99/p999 simulated latency, throughput per GB
   of slab, and Jain fairness for the mixed-tenant case.
+* **Serving (zero-restore)** — the ``serve_qps`` continuous-batching
+  bench: per arch and restore mode, sim-time throughput,
+  admission-to-first-token p50/p99/p999, the repoint/stream restore
+  split, and the daemon fence-wait histogram (count/p50/p99).
 
 Missing benches render as ``—`` (a smoke run only refreshes a subset).
 """
@@ -126,6 +130,29 @@ def workload_rows(results):
     return rows
 
 
+def serving_rows(results):
+    """(arch/mode, tok/s, attft p50/p99/p999, repointed, streamed,
+    fences, fence p50, fence p99) rows from the serve_qps bench."""
+    sq = results.get("serve_qps")
+    if not isinstance(sq, dict):
+        return None, []
+    rows = []
+    for arch, entry in sq.items():
+        if not isinstance(entry, dict) or "zero" not in entry:
+            continue
+        for mode in ("zero", "bulk"):
+            r = entry.get(mode)
+            if not isinstance(r, dict):
+                continue
+            f = r.get("fences") or {}
+            rows.append((f"{arch}/{mode}", r.get("tok_s_sim"),
+                         r.get("attft_p50_us"), r.get("attft_p99_us"),
+                         r.get("attft_p999_us"), r.get("repointed"),
+                         r.get("streamed"), f.get("count"),
+                         f.get("p50_us"), f.get("p99_us")))
+    return sq.get("tokens_per_s"), rows
+
+
 def render(results) -> str:
     out = ["# Paper-fidelity report", ""]
     out += ["## Paper comparisons (measured this run vs published)", "",
@@ -151,6 +178,29 @@ def render(results) -> str:
         out.append("| {} | {} | {} | {} | {} | {} | {} |".format(
             name, _fmt(hit, "{:.4f}"), _fmt(p50), _fmt(p99), _fmt(p999),
             _fmt(thr, "{:,.0f}"), _fmt(fair, "{:.3f}")))
+    speedup, srows = serving_rows(results)
+    out += ["", "## Serving (zero-restore vs bulk restore, `serve_qps`)",
+            ""]
+    if srows:
+        out += ["| arch/mode | tok/s (sim) | attft p50 us | attft p99 us "
+                "| attft p999 us | repointed | streamed | fences "
+                "| fence p50 us | fence p99 us |",
+                "|---|---|---|---|---|---|---|---|---|---|"]
+        for (name, tok_s, p50, p99, p999, rp, st, fc, fp50,
+             fp99) in srows:
+            out.append(
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |"
+                .format(name, _fmt(tok_s, "{:,.0f}"), _fmt(p50, "{:.1f}"),
+                        _fmt(p99, "{:.1f}"), _fmt(p999, "{:.1f}"),
+                        _fmt(rp, "{:d}"), _fmt(st, "{:d}"),
+                        _fmt(fc, "{:d}"), _fmt(fp50, "{:.1f}"),
+                        _fmt(fp99, "{:.1f}")))
+        out += ["",
+                f"Zero-restore throughput speedup (gated, geomean): "
+                f"**{_fmt(speedup, '{:.3f}x')}** — restores that repoint "
+                "cost nothing; only reused slots stream a page back.", ""]
+    else:
+        out += ["— (`serve_qps` not in this run)", ""]
     out += ["",
             "Async-mode deltas and per-tenant static-vs-coordinated",
             "breakdowns live in `bench_results.json` (uploaded as a CI",

@@ -40,6 +40,7 @@ BENCHES = [
     ("ml_trace", "workloads", "ml_trace_bench"),
     ("mixed_tenant_workload", "workloads", "mixed_tenant_workload"),
     ("roofline", "roofline_table", "run"),
+    ("serve_qps", "serve_qps", "serve_qps"),
 ]
 
 BENCH_NAMES = [name for name, _, _ in BENCHES]

@@ -14,9 +14,11 @@ from repro.core.policies import (Policy, CostModel, POLICIES, VALET,
                                  VALET_MASS, INFINISWAP, NBDX, OS_SWAP,
                                  PAPER_COSTS, TPU_COSTS)
 from repro.core.tiering import TieredPageStore, PeerState, Stats
-from repro.core.config import OrchestrationConfig, config_from_legacy_kwargs
-from repro.core.async_engine import AsyncOrchestrator
+from repro.core.tiers import PageTier, DeviceTier, HostTier
+from repro.core.config import (OrchestrationConfig, config_from_legacy_kwargs,
+                               LEGACY_STORE_KWARGS, LEGACY_SERVE_KWARGS)
+from repro.core.async_engine import AsyncOrchestrator, DaemonClock
 from repro.core.invariants import (InvariantChecker, InvariantError,
                                    stats_close, stats_delta)
-from repro.core.reservoir import LatencyReservoir
+from repro.core.reservoir import LatencyReservoir, LatencyStatsMixin
 from repro.core import device_ops

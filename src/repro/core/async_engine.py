@@ -42,6 +42,32 @@ from typing import Optional
 import numpy as np
 
 
+class DaemonClock:
+    """Simulated background-daemon clock (us, same axis as ``time_us``).
+
+    ``at_us`` is the time at which the daemon becomes idle.  ``charge``
+    appends work starting from ``max(at_us, now)`` (the daemon can't start
+    before it is free *or* before the work exists); ``wait_for`` is the
+    fence wait ``max(0, at_us - now)``.  ``AsyncOrchestrator`` keeps its
+    inline ``daemon_clock`` float for bit-stability of the existing suites;
+    the serve engine's async mode charges its demote/flush daemon through
+    one of these.
+    """
+
+    def __init__(self):
+        self.at_us = 0.0
+
+    def charge(self, cost_us: float, now_us: float) -> float:
+        """Schedule ``cost_us`` of daemon work at ``now_us``; returns it."""
+        self.at_us = max(self.at_us, now_us) + cost_us
+        return cost_us
+
+    def wait_for(self, now_us: float) -> float:
+        """Fence wait if the foreground synchronizes at ``now_us``."""
+        w = self.at_us - now_us
+        return w if w > 0.0 else 0.0
+
+
 class AsyncOrchestrator:
     """Background daemon + epoch/fence protocol for one ``TieredPageStore``.
 
@@ -175,6 +201,7 @@ class AsyncOrchestrator:
         wait = self.daemon_clock - st.time_us
         wait = wait if wait > 0.0 else 0.0
         st.fence_wait_us += wait
+        st.fence_lat.record(wait)
         store.pool.commit_holds()
         if store.pool.free_count() == 0:
             store._reclaim(max(1, store.pages_per_block))

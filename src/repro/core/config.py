@@ -66,6 +66,23 @@ class OrchestrationConfig:
     daemon_budget: int = 256              # pages of daemon work per epoch
     real_thread: bool = False             # real daemon thread (not determ.)
 
+    # -- device tier / zero-restore (PR 8) -------------------------------
+    # trace store: remember reclaimed pages' slots and repoint on re-access
+    # while the slot is untouched (off by default: it improves hit ratios,
+    # so the bitwise scalar/batch parity suites run without it)
+    device_tier: bool = False
+    # serve engine: preemption demotes KV pages in place (no copy); restore
+    # repoints block-table entries and streams only reused slots.  False =
+    # legacy bulk gather/scatter spill/restore (the comparison baseline).
+    zero_restore: bool = True
+
+    # -- serving knobs (ValetServeEngine.from_config) --------------------
+    page: int = 16                        # tokens per KV page
+    max_batch: int = 8                    # concurrent decode slots
+    max_seq: int = 512                    # max tokens per sequence
+    pool_slots: Optional[int] = None      # KV pool slots; None -> pool_capacity
+    step_cost_us: float = 0.0             # simulated cost per decode step
+
     # -- simulation plumbing ---------------------------------------------
     seed: int = 0
     free_memory_fn: Optional[Callable[[], int]] = field(
@@ -97,17 +114,34 @@ LEGACY_STORE_KWARGS = {
 }
 
 
+# legacy ValetServeEngine.from_config keyword -> OrchestrationConfig field
+# (PR 8 moved the serving knobs onto the config; the loose kwargs stay as
+# deprecated aliases behind the same CI gate as the store's)
+LEGACY_SERVE_KWARGS = {
+    "max_batch": "max_batch",
+    "max_seq": "max_seq",
+    "page": "page",
+    "pool_slots": "pool_slots",
+    "step_cost_us": "step_cost_us",
+}
+
+
 def config_from_legacy_kwargs(base: OrchestrationConfig,
                               kwargs: dict,
                               *, owner: str,
-                              stacklevel: int = 3) -> OrchestrationConfig:
+                              stacklevel: int = 3,
+                              alias_map: Optional[dict] = None
+                              ) -> OrchestrationConfig:
     """Fold deprecated constructor keywords into a config, warning per key.
 
     Unknown keys raise ``TypeError`` exactly as the old signature would.
+    ``alias_map`` defaults to the store's map; the serve engine passes
+    ``LEGACY_SERVE_KWARGS``.
     """
+    aliases = LEGACY_STORE_KWARGS if alias_map is None else alias_map
     mapped = {}
     for key, val in kwargs.items():
-        tgt = LEGACY_STORE_KWARGS.get(key)
+        tgt = aliases.get(key)
         if tgt is None:
             raise TypeError(
                 f"{owner}() got an unexpected keyword argument {key!r}")

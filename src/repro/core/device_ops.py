@@ -11,6 +11,7 @@ the oracle + CPU path.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -87,6 +88,28 @@ def local_write_batch(pool: KVPool, k_pages, v_pages, slots) -> KVPool:
         pool.k.at[slots].set(k_pages),
         pool.v.at[slots].set(v_pages),
     )
+
+
+@partial(jax.jit, donate_argnums=(0, 1))
+def _stream_page_jit(pk, pv, k, v, slot):
+    return pk.at[slot].set(k), pv.at[slot].set(v)
+
+
+def stream_page(pool: KVPool, k, v, slot) -> KVPool:
+    """On-demand single-page stream-in (the zero-restore miss path).
+
+    k/v: one page ``(page, n_kv, hd)``; ``slot`` a scalar index.  Restore in
+    the zero-restore engine is block-table repointing for every page whose
+    slot survived preemption untouched; only pages whose slot was *reused*
+    come back through here, one host read each, instead of the legacy bulk
+    per-layer ``local_write_batch`` scatter over the whole sequence.  The
+    pool buffers are donated (in-place scatter, no pool-sized copy) and the
+    slot is a traced argument, so every streamed page of a layer shares one
+    compiled program."""
+    return KVPool(*_stream_page_jit(
+        pool.k, pool.v,
+        jnp.asarray(k, pool.k.dtype), jnp.asarray(v, pool.v.dtype),
+        jnp.asarray(slot, jnp.int32)))
 
 
 def copy_block(pool: KVPool, src_slot: jax.Array, dst_slot: jax.Array) -> KVPool:

@@ -32,6 +32,12 @@ class Tier(enum.IntEnum):
     PEER = 2       # another device's spill pool (RDMA MR analogue)
     HOST = 3       # host DRAM (pinned) tier
     COLD = 4       # disk / recompute analogue
+    # demoted-but-resident: the page's pool slot was released (preemption /
+    # reclaim) but its bytes are still untouched in device memory, so a
+    # later access can *repoint* to the old slot instead of reading a copy
+    # back (zero-restore serving; see core/tiers.DeviceTier).  Stored in the
+    # remote columns with ``slot`` = the shadow pool slot.
+    DEVICE = 5
 
 
 @dataclass(frozen=True)

@@ -161,6 +161,12 @@ class ValetMempool:
         self.last_step = np.zeros(capacity, np.int64)  # last write activity
         self.update_flag = np.zeros(capacity, bool)    # §5.2 newer set pends
         self.reclaim_flag = np.zeros(capacity, bool)   # §5.2 replica exists
+        # per-slot allocation generation: bumped every FREE -> IN_USE
+        # transition.  The device tier (core/tiers.py) validates its
+        # demoted-but-resident entries against this lazily — a slot reused
+        # since demotion has a newer generation — so no alloc hot path pays
+        # a callback hook for zero-restore tracking.
+        self.gen = np.zeros(capacity, np.int64)
         self._free_arr = np.empty(capacity, np.int64)  # free stack (LIFO)
         self._free_top = 0
         # epoch-tagged holds (async engine): slots the background daemon has
@@ -179,6 +185,7 @@ class ValetMempool:
         self.n_alloc_from_pool = 0
         self.n_alloc_failed = 0
         self.n_reclaimed = 0
+        self.n_claimed = 0       # zero-restore repoints (claim_batch)
 
     @property
     def _free(self) -> List[int]:
@@ -207,6 +214,10 @@ class ValetMempool:
                 state[self.size:new_size] == _UNBACKED)
             if back.size:
                 state[back] = _FREE
+                # re-backed memory is fresh pages, not the old bytes — bump
+                # the generation so stale device-tier shadows never validate
+                # against a slot that was unbacked in between
+                self.gen[back] += 1
                 top = self._free_top
                 self._free_arr[top:top + back.size] = back
                 self._free_top = top + back.size
@@ -431,6 +442,7 @@ class ValetMempool:
         self.state[slot] = _IN_USE
         self.owner[slot] = logical_page
         self.last_step[slot] = step
+        self.gen[slot] += 1
         if slot < self.size:
             self._used += 1
         self.n_alloc_from_pool += 1
@@ -453,6 +465,7 @@ class ValetMempool:
         self.state[sl] = _IN_USE          # FREE ⇒ flags already clear
         self.owner[sl] = pages
         self.last_step[sl] = steps
+        self.gen[sl] += 1
         if self.size == self.capacity:         # no stranded tail possible
             self._used += n
         else:
@@ -512,6 +525,7 @@ class ValetMempool:
             state[slot] = _IN_USE         # FREE ⇒ flags already clear
             owner[slot] = pg
             last[slot] = stp
+            self.gen[slot] += 1
             out.append(slot)
             if slot < size:
                 used += 1
@@ -611,6 +625,43 @@ class ValetMempool:
 
     def free_count(self) -> int:
         return self._free_top
+
+    # -- zero-restore repoint (device tier) ----------------------------------
+
+    def free_gen(self, slot: int) -> Optional[int]:
+        """Current generation of ``slot`` if it is claimable (FREE, inside
+        the effective pool size — i.e. on the free list, not an epoch hold),
+        else ``None``.  This is the validity probe behind the device tier's
+        lazy demoted-entry validation."""
+        s = int(slot)
+        if s >= self.size or self.state[s] != _FREE:
+            return None
+        if self._held and any(s in h[2] for h in self._held):
+            return None
+        return int(self.gen[s])
+
+    def claim_batch(self, slots, pages, step: int) -> None:
+        """Re-claim *specific* FREE slots off the free list (zero-restore
+        repoint): the same FREE -> IN_USE transition as ``alloc`` but
+        targeting the exact slots whose data is still resident, so no bytes
+        move.  Preserves the relative free-stack order of the remaining
+        slots.  Callers validate claimability first (``free_gen``)."""
+        sl = np.asarray(slots, np.int64)
+        if not sl.size:
+            return
+        assert (self.state[sl] == _FREE).all(), "claim of non-FREE slot"
+        fl = self._free_arr[:self._free_top]
+        keep = fl[~np.isin(fl, sl)]
+        assert keep.size == self._free_top - sl.size, \
+            "claimed slot not on the free list (held or duplicated)"
+        self._free_arr[:keep.size] = keep
+        self._free_top = int(keep.size)
+        self.state[sl] = _IN_USE          # FREE ⇒ flags already clear
+        self.owner[sl] = np.asarray(pages, np.int64)
+        self.last_step[sl] = step
+        self.gen[sl] += 1
+        self._used += int(np.count_nonzero(sl < self.size))
+        self.n_claimed += int(sl.size)
 
     # -- epoch-tagged holds (async orchestration engine) ---------------------
 

@@ -112,3 +112,54 @@ class LatencyReservoir:
             "p999_us": float(np.percentile(live, 99.9)),
             "max_us": float(live.max()),
         }
+
+
+from dataclasses import dataclass, field  # noqa: E402  (mixin below)
+
+
+@dataclass
+class LatencyStatsMixin:
+    """Shared reservoir-backed latency surface for stats dataclasses.
+
+    ``Stats`` (trace store) and ``EngineStats`` (serving engine) both carry
+    a per-op critical-path reservoir behind ``latency_p50/p99/p999`` and —
+    since the async engines fence on the background daemon — a per-fence
+    wait reservoir behind ``fence_wait_p50/p99``.  Both stats classes
+    inherit this mixin instead of copy-pasting the accessors.
+
+    The reservoirs are excluded from dataclass equality: two bitwise-equal
+    drivers may sample through different entry points (scalar loop vs
+    ``access_batch``), and the parity suites compare the counters, not the
+    sampling stream.
+    """
+
+    # per-op critical-path latency samples (us)
+    lat: LatencyReservoir = field(default_factory=LatencyReservoir,
+                                  compare=False, repr=False)
+    # per-fence simulated wait samples (us); empty in synchronous mode
+    fence_lat: LatencyReservoir = field(default_factory=LatencyReservoir,
+                                        compare=False, repr=False)
+
+    def latency_p50(self) -> float:
+        """Median critical-path op latency (simulated us)."""
+        return self.lat.p50()
+
+    def latency_p99(self) -> float:
+        """99th-percentile critical-path op latency (simulated us)."""
+        return self.lat.p99()
+
+    def latency_p999(self) -> float:
+        """99.9th-percentile critical-path op latency (us, SLO tail)."""
+        return self.lat.p999()
+
+    def fence_wait_p50(self) -> float:
+        """Median simulated wait absorbed by one daemon fence (us)."""
+        return self.fence_lat.p50()
+
+    def fence_wait_p99(self) -> float:
+        """99th-percentile simulated wait absorbed by one fence (us)."""
+        return self.fence_lat.p99()
+
+    def fence_summary(self) -> dict:
+        """Reservoir summary of per-fence waits (count/p50/p99/... us)."""
+        return self.fence_lat.summary()

@@ -15,7 +15,7 @@ Policy knobs (``policies.py``) select between Valet and the baseline systems
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -30,7 +30,8 @@ from repro.core.policies import CostModel, Policy
 from repro.core.pool import SlotState, ValetMempool
 from repro.core.queues import WritePipeline
 from repro.core.replication import ReplicaPlacer, fail_peer
-from repro.core.reservoir import LatencyReservoir
+from repro.core.reservoir import LatencyStatsMixin
+from repro.core.tiers import DeviceTier
 
 _IN_USE = int(SlotState.IN_USE)
 _RECLAIMABLE = int(SlotState.RECLAIMABLE)
@@ -50,7 +51,10 @@ class PeerState:
 
 
 @dataclass
-class Stats:
+class Stats(LatencyStatsMixin):
+    """Trace-store counters.  The latency/fence reservoirs and their
+    percentile accessors live on the shared ``LatencyStatsMixin`` (also
+    inherited by the serve engine's ``EngineStats``)."""
     time_us: float = 0.0
     ops: int = 0
     local_hits: int = 0
@@ -68,23 +72,11 @@ class Stats:
     fences: int = 0
     fence_wait_us: float = 0.0
     daemon_us: float = 0.0
-    # bounded per-op latency reservoir behind latency_p50/p99; excluded from
-    # equality — two bitwise-equal drivers may sample through different
-    # entry points (scalar loop vs access_batch)
-    lat: LatencyReservoir = field(default_factory=LatencyReservoir,
-                                  compare=False, repr=False)
-
-    def latency_p50(self) -> float:
-        """Median critical-path op latency (us) over the sampled stream."""
-        return self.lat.p50()
-
-    def latency_p99(self) -> float:
-        """99th-percentile critical-path op latency (us)."""
-        return self.lat.p99()
-
-    def latency_p999(self) -> float:
-        """99.9th-percentile critical-path op latency (us, SLO tail)."""
-        return self.lat.p999()
+    # device-tier repoints (zero in the default bitwise-parity mode): reads
+    # served by repointing a demoted-but-resident page back to its old pool
+    # slot instead of reading a copy from host/remote.  Counted inside
+    # local_hits too (after the repoint the page IS local).
+    device_hits: int = 0
 
     def hit_ratio(self) -> Dict[str, float]:
         n = max(self.local_hits + self.remote_hits + self.host_hits
@@ -209,6 +201,12 @@ class TieredPageStore:
         # _reclaim appends every page whose local mapping it drops, so the
         # engine re-classifies exactly the invalidated pages afterwards
         self._unmap_log: Optional[list] = None
+        # PR 8 device tier: remember each reclaimed page's (slot, gen) so a
+        # re-access while the slot is still FREE repoints instead of reading
+        # the host/remote copy.  Opt-in — the default keeps the bitwise
+        # scalar/batch parity of the reference suites (repoints change hit
+        # classification and free-stack order).
+        self.device = DeviceTier() if cfg.device_tier else None
         self.host_capacity = host_capacity
         # the engine sees encoded block ids (peer<<20|slot); decode for the
         # slot-level data/metadata callbacks
@@ -649,9 +647,51 @@ class TieredPageStore:
         self.stats.ops += 1
         return lat
 
+    def _device_repoint(self, pages) -> int:
+        """Zero-copy device-tier hits (PR 8, opt-in via ``device_tier``).
+
+        Pages whose reclaimed pool slot is still FREE with an unchanged
+        generation are *repointed*: the slot is claimed back off the free
+        list and the page mapped local again with pure metadata moves — no
+        host/remote read.  The repointed slot re-enters the store exactly
+        like a cache fill (RECLAIMABLE + on the reclaimable queue, remote
+        copy kept as the replica), so the invariant checker's no-lost-writes
+        and staging invariants keep holding.  Stale shadows — a page that
+        re-entered the pool through a write since its demotion — are dropped
+        here, never claimed.  Returns the number of pages repointed."""
+        dt = self.device
+        if dt is None or not dt.shadow:
+            return 0
+        cand = []
+        for pg in pages:
+            pg = int(pg)
+            if pg not in dt:
+                continue
+            if self.gpt.local_slot(pg) is not None:
+                dt.drop((pg,))      # stale: page already local via a write
+            else:
+                cand.append(pg)
+        if not cand:
+            return 0
+        rp_pages, rp_slots, _ = dt.split(cand, self.pool.free_gen)
+        if not rp_pages:
+            return 0
+        self.pool.claim_batch(rp_slots, rp_pages, self.step)
+        self.gpt.map_local_batch(np.asarray(rp_pages, np.int64),
+                                 np.asarray(rp_slots, np.int64))
+        for pg, sl in zip(rp_pages, rp_slots):
+            self.pool.mark_reclaimable(sl)
+            self.pipeline.reclaimable.push_row(pg, sl)
+        self.stats.device_hits += len(rp_pages)
+        return len(rp_pages)
+
     def read(self, page: int) -> float:
         """Read (page-in) one page.  Returns critical-path latency (us)."""
         self.step += 1
+        if self.device is not None:
+            # device-tier pre-check: a still-resident demoted page becomes
+            # LOCAL here, so the classification below counts a local hit
+            self._device_repoint((page,))
         lat = 0.0
         loc = self.gpt.lookup(page)
         if loc.tier == Tier.LOCAL:
@@ -708,6 +748,10 @@ class TieredPageStore:
         n = pages.size
         lats = np.empty(n, np.float64)
         iw = np.broadcast_to(np.asarray(is_write, bool), (n,))
+        if self.device is not None and self.device.shadow:
+            # device-tier pre-pass: repoint still-resident demoted pages this
+            # batch will read, so the snapshot below classifies them LOCAL
+            self._device_repoint(np.unique(pages[~iw]))
         if self._lease is not None:
             # per-container demand signal (§3.4): recently busy containers
             # are reclaimed from last under host pressure.  Accounting only —
@@ -1528,8 +1572,16 @@ class TieredPageStore:
                 # a page freed twice in one burst matches at most one of its
                 # slots, exactly like the sequential check-then-unmap (freed
                 # pages were mapped once, so the growth check is skipped)
-                live = pages[self.gpt.local_slots_known(pages) == slots]
+                mask = self.gpt.local_slots_known(pages) == slots
+                live = pages[mask]
                 if live.size:
+                    if self.device is not None:
+                        # demoted-but-resident: the bytes stay in the FREE
+                        # slot until someone allocates it, so remember
+                        # (slot, gen) for a zero-copy repoint on re-access
+                        lsl = slots[mask]
+                        self.device.demote(live.tolist(), lsl.tolist(),
+                                           self.pool.gen[lsl].tolist())
                     self.gpt._l_slot[live] = -1
                     if self._unmap_log is not None:
                         self._unmap_log.append(live.tolist())
@@ -1538,6 +1590,9 @@ class TieredPageStore:
         dropped = [] if self._unmap_log is not None else None
         for slot, pg in freed:
             if self.gpt.local_slot(pg) == slot:
+                if self.device is not None:
+                    self.device.demote((pg,), (slot,),
+                                       (int(self.pool.gen[slot]),))
                 self.gpt.unmap_local(pg)
                 if dropped is not None:
                     dropped.append(pg)

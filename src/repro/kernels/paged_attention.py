@@ -19,6 +19,15 @@ Layout:
   lengths:      (B,)   valid token count per sequence
 Grid: (B, Hkv, P) with the page axis innermost/sequential; softmax state in
 VMEM scratch.
+
+Zero-restore contract (PR 8): because the kernel reads KV *through* the
+block table, restoring a preempted sequence needs no bulk KV copy — the
+serve engine repoints block-table entries at pool slots whose bytes
+survived preemption untouched (validated by the pool's per-slot generation
+counter), and only pages whose slot was reused in the meantime are streamed
+back one at a time via ``device_ops.stream_page`` before the next decode
+step.  The kernel itself is unchanged either way: any (B, P) table whose
+live entries index valid pool pages is a correct input.
 """
 from __future__ import annotations
 

@@ -7,25 +7,40 @@ The engine is the paper's sender node in serving clothes:
   sequences (the paper's local mempool; exact attention requires residency);
 * when admission/growth needs pages that aren't free, the policy acts:
     - ``valet``: pause the least-active sequence (Non-Activity-Duration over
-      its pages) and *spill* its pages to the host tier (data preserved —
-      the migration-not-deletion principle).  Spills are lazy/off the
-      critical path; resuming restores pages (remote-read analogue).
+      its pages) and *demote* its pages (the migration-not-deletion
+      principle).  Demotion is a metadata move: the slots return to the free
+      list but the KV bytes stay in place, tracked by the **device tier**;
+      a background flush secures host copies off the critical path.
     - ``infiniswap``: *delete* a random victim's pages; resuming must
       re-prefill from the prompt (the cold/disk path).
     - ``os-swap``: synchronous spill AND restore in the critical path.
 * every page write/read updates activity tags; hit-ratio and latency
   accounting mirror the paper's Stats.
 
-The data plane stays exact: spilled pages round-trip bit-identically, and
+**Zero-restore (PR 8).**  Because the decode kernel reads KV *through* the
+block table (``kernels/paged_attention.py``), restore needs no bulk copy:
+``_restore`` repoints block-table entries at pool slots whose bytes survived
+preemption untouched (validated against the pool's per-slot generation
+counter) and streams only the pages whose slot was reused in the meantime,
+one ``device_ops.stream_page`` host read each.  The legacy bulk per-layer
+``local_write_batch`` scatter and the ad-hoc ``host_store`` dict are gone
+from the restore critical path; the host blobs live in a first-class
+``HostTier`` fed by the background flush.  ``zero_restore=False`` keeps the
+legacy bulk spill/restore as the comparison baseline (and ``os-swap`` /
+``infiniswap`` keep their defining eager/delete behavior either way).
+
+The data plane stays exact: demoted pages come back bit-identically
+(repointed bytes never moved; streamed ones round-trip through host), and
 deleted pages are recomputed by a real re-prefill.  Tests pin engine output
-to the no-pressure reference decode.
+to the no-pressure reference decode in both restore modes.
 """
 from __future__ import annotations
 
 import time
 import warnings
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import numpy as np
 
@@ -35,11 +50,14 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core import device_ops as dev
 from repro.core.activity import ActivityTracker
-from repro.core.config import OrchestrationConfig
+from repro.core.async_engine import DaemonClock
+from repro.core.config import (OrchestrationConfig, config_from_legacy_kwargs,
+                               LEGACY_SERVE_KWARGS)
 from repro.core.page_table import GlobalPageTable, Tier
 from repro.core.policies import Policy, CostModel, VALET, TPU_COSTS
 from repro.core.pool import ValetMempool
-from repro.core.reservoir import LatencyReservoir
+from repro.core.reservoir import LatencyStatsMixin
+from repro.core.tiers import DeviceTier, HostTier
 from repro.models import decode as D
 from repro.models.transformer import ParallelCtx
 
@@ -56,14 +74,23 @@ class Request:
     tokens_out: List[int] = field(default_factory=list)
     last_active_step: int = 0
     n_recomputes: int = 0
+    # admission-to-first-token bookkeeping (simulated us; -1 = not yet).
+    # ``submit_us`` is stamped at submit() (or the caller's arrival time),
+    # ``first_token_us`` when the prefill emits the first generated token —
+    # their difference is the ATTFT the serve_qps benchmark reports.
+    submit_us: float = -1.0
+    first_token_us: float = -1.0
 
 
 @dataclass
-class EngineStats:
+class EngineStats(LatencyStatsMixin):
+    """Serving counters.  The per-step latency and fence-wait reservoirs and
+    their percentile accessors come from the shared ``LatencyStatsMixin``
+    (same one the trace store's ``Stats`` inherits)."""
     steps: int = 0
     tokens: int = 0
-    spilled_pages: int = 0
-    restored_pages: int = 0
+    spilled_pages: int = 0           # pages pushed out of the pool (any mode)
+    restored_pages: int = 0          # pages brought back (repoint + stream)
     deleted_pages: int = 0
     recomputes: int = 0
     pauses: int = 0
@@ -74,22 +101,11 @@ class EngineStats:
     fences: int = 0                  # restores that waited on the daemon
     fence_wait_us: float = 0.0       # simulated wait absorbed by fences
     daemon_us: float = 0.0           # spill traffic charged to the daemon
-    # bounded per-scheduler-iteration latency reservoir (admit + resume +
-    # fence + decode step); excluded from dataclass equality
-    lat: LatencyReservoir = field(default_factory=LatencyReservoir,
-                                  compare=False, repr=False)
-
-    def latency_p50(self) -> float:
-        """Median per-step critical-path latency (simulated us)."""
-        return self.lat.p50()
-
-    def latency_p99(self) -> float:
-        """99th-percentile per-step critical-path latency (simulated us)."""
-        return self.lat.p99()
-
-    def latency_p999(self) -> float:
-        """99.9th-percentile per-step critical-path latency (simulated us)."""
-        return self.lat.p999()
+    # zero-restore breakdown (all zero with zero_restore=False)
+    demoted_pages: int = 0           # metadata-only preemptions
+    repointed_pages: int = 0         # restores that were pure repoints
+    streamed_pages: int = 0          # restores that paid a per-page host read
+    flushed_pages: int = 0           # background write-backs to the host tier
 
 
 class ValetServeEngine:
@@ -101,7 +117,8 @@ class ValetServeEngine:
                  coordinator=None, container_name: Optional[str] = None,
                  container_weight: Optional[float] = None,
                  weight: Optional[float] = None,
-                 async_mode: bool = False):
+                 async_mode: bool = False,
+                 zero_restore: bool = True, flush_batch: int = 64):
         if container_weight is not None:
             warnings.warn(
                 "ValetServeEngine(container_weight=...) is deprecated; use "
@@ -156,16 +173,30 @@ class ValetServeEngine:
                                   size_fn=lambda: self.pool.size)
         self.gpt = GlobalPageTable()
         self.tracker = ActivityTracker()
-        self.host_store: Dict[int, Dict[int, Tuple[np.ndarray, np.ndarray]]] = {}
+        # first-class tiers of the KV page store (PR 8): the device tier
+        # tracks demoted-but-resident pages (bytes still in their released
+        # pool slot, validated lazily against the pool's generation
+        # counter); the host tier holds the spilled blobs the background
+        # flush writes back.  Both replace the old private ``host_store``.
+        self.device = DeviceTier()
+        self.host = HostTier()
+        self._flush_q: deque = deque()   # demoted pages awaiting write-back
+        self.flush_batch = flush_batch
         self.stats = EngineStats()
-        # async orchestration (tentpole, engine side): the engine owns its
-        # own pool (no TieredPageStore), so it carries its own light daemon
-        # clock — lazy spill traffic advances it instead of ``bg_time_us``,
+        # zero-restore applies to lazy migrate policies (valet/valet-mass);
+        # os-swap's eager synchronous spill/restore and infiniswap's delete
+        # are those baselines' defining behavior and stay untouched
+        self.zero_restore = zero_restore
+        self._zero = (bool(zero_restore) and policy.lazy_send
+                      and policy.evict_action == "migrate")
+        # async orchestration (engine side): the engine owns its own pool
+        # (no TieredPageStore), so it carries its own light daemon clock —
+        # lazy spill/flush traffic advances it instead of ``bg_time_us``,
         # and a restore that needs those bytes FENCES on it (waits out the
         # daemon's in-flight work) rather than pretending the overlap was
         # free.  Synchronous mode (default) is bitwise unchanged.
         self.async_mode = async_mode
-        self._daemon_clock_us = 0.0
+        self.daemon = DaemonClock()
         self.step_counter = 0
         self._next_page_id = 0
         self._slots_free = list(range(max_batch))
@@ -175,28 +206,44 @@ class ValetServeEngine:
         self._decode_jit = jax.jit(self._decode_fn)
         self._prefill_jit = {}
 
+    @property
+    def host_store(self) -> Dict[int, dict]:
+        """Deprecated spelling of the host tier's blob map (pre-PR 8)."""
+        return self.host.blobs
+
     @classmethod
     def from_config(cls, params, cfg: ArchConfig, ctx: ParallelCtx,
-                    config: OrchestrationConfig, *, max_batch: int,
-                    max_seq: int, page: int = 16,
-                    step_cost_us: float = 0.0) -> "ValetServeEngine":
+                    config: Optional[OrchestrationConfig] = None,
+                    **legacy) -> "ValetServeEngine":
         """Build an engine from the unified ``OrchestrationConfig``.
 
-        The config's store-level knobs map onto the engine's pool:
-        ``pool_capacity`` -> ``pool_slots``, ``min_pool`` -> ``min_pool``;
-        policy/costs/seed/coordinator/weight/async_mode carry over
-        directly.  Model-plumbing arguments (params, arch, parallel ctx,
-        batch geometry) stay explicit — they are not orchestration."""
+        Every orchestration knob — including the serving geometry
+        (``page``/``max_batch``/``max_seq``/``pool_slots``/``step_cost_us``)
+        that used to ride as loose keywords — comes from the config:
+        ``pool_slots`` (``pool_capacity`` when unset) sizes the KV pool,
+        ``min_pool`` its floor; policy/costs/seed/coordinator/weight/
+        async_mode/zero_restore/flush_batch carry over directly.  The old
+        loose keywords still work as *deprecated aliases*: each emits a
+        ``DeprecationWarning`` naming the config field (the same CI gate as
+        the store's legacy kwargs).  Model-plumbing arguments (params, arch,
+        parallel ctx) stay explicit — they are not orchestration."""
+        base = config if config is not None else OrchestrationConfig()
+        c = config_from_legacy_kwargs(base, legacy, owner="ValetServeEngine",
+                                      alias_map=LEGACY_SERVE_KWARGS)
+        pool_slots = c.pool_slots if c.pool_slots is not None \
+            else c.pool_capacity
         return cls(params, cfg, ctx,
-                   max_batch=max_batch, max_seq=max_seq, page=page,
-                   pool_slots=config.pool_capacity,
-                   min_pool=config.min_pool,
-                   policy=config.policy, costs=config.costs,
-                   step_cost_us=step_cost_us, seed=config.seed,
-                   coordinator=config.coordinator,
-                   container_name=config.container_name,
-                   weight=config.weight,
-                   async_mode=config.async_mode)
+                   max_batch=c.max_batch, max_seq=c.max_seq, page=c.page,
+                   pool_slots=pool_slots,
+                   min_pool=c.min_pool,
+                   policy=c.policy, costs=c.costs,
+                   step_cost_us=c.step_cost_us, seed=c.seed,
+                   coordinator=c.coordinator,
+                   container_name=c.container_name,
+                   weight=c.weight,
+                   async_mode=c.async_mode,
+                   zero_restore=c.zero_restore,
+                   flush_batch=c.flush_batch)
 
     # ------------------------------------------------------------------ jit
 
@@ -246,6 +293,89 @@ class ValetServeEngine:
 
     # --------------------------------------------------------------- paging
 
+    def _note_allocated(self, slots) -> None:
+        """Fresh data is about to land in ``slots``: evict any demoted page
+        still shadowed there.  Clean pages (host copy already flushed) just
+        lose device residency; dirty ones are extracted to the host tier
+        NOW — a forced synchronous copy charged to the critical path,
+        because the overwrite cannot wait for the lazy flush."""
+        if not self.device.shadow:
+            return
+        pairs = self.device.evict_slots(slots)
+        if not pairs:
+            return
+        dirty = [(pg, sl) for pg, sl in pairs if pg not in self.host]
+        if dirty:
+            idx = jnp.asarray(np.asarray([sl for _, sl in dirty], np.int32))
+            layer_kv = {}
+            for li in self.paged_layers:
+                pool = self.caches["layers"][li]["pool"]
+                layer_kv[li] = (dev.to_host_tier(pool.k[idx]),
+                                dev.to_host_tier(pool.v[idx]))
+            for i, (pg, _) in enumerate(dirty):
+                self.host.put(pg, {li: (kv[0][i], kv[1][i])
+                                   for li, kv in layer_kv.items()})
+            self.stats.sim_time_us += self.costs.host_write * len(dirty)
+            self.stats.flushed_pages += len(dirty)
+        # every evicted page is host-resident now: retier DEVICE -> HOST
+        parr = np.asarray([pg for pg, _ in pairs], np.int64)
+        m = int(parr.size)
+        self.gpt.map_remote_batch(parr, [int(Tier.HOST)] * m,
+                                  [-1] * m, [-1] * m, None)
+
+    def _flush_demoted(self, budget: Optional[int] = None) -> int:
+        """Background write-back daemon: secure host copies for up to
+        ``budget`` demoted pages (all of them when ``None``).  A flushed
+        page becomes *clean* — it keeps device residency (still repointable
+        for free) and gains a host blob, so a later slot reuse costs
+        nothing.  Charged off the critical path: ``bg_time_us`` in sync
+        mode, the daemon clock (+ ``daemon_us``) in async mode."""
+        q = self._flush_q
+        if not q:
+            return 0
+        n = len(q) if budget is None else min(int(budget), len(q))
+        todo, slots = [], []
+        for _ in range(n):
+            pg = q.popleft()
+            # skip pages that left the device tier (evicted / repointed /
+            # freed) or were already flushed by an earlier queue entry
+            sl = self.device.slot_of(pg)
+            if sl is not None and pg not in self.host:
+                todo.append(pg)
+                slots.append(sl)
+        if not todo:
+            return 0
+        idx = jnp.asarray(np.asarray(slots, np.int32))
+        layer_kv = {}
+        for li in self.paged_layers:
+            pool = self.caches["layers"][li]["pool"]
+            layer_kv[li] = (dev.to_host_tier(pool.k[idx]),
+                            dev.to_host_tier(pool.v[idx]))
+        for i, pg in enumerate(todo):
+            self.host.put(pg, {li: (kv[0][i], kv[1][i])
+                               for li, kv in layer_kv.items()})
+        m = len(todo)
+        self.stats.flushed_pages += m
+        cost = self.costs.host_write * m
+        if self.async_mode:
+            self.daemon.charge(cost, self.stats.sim_time_us)
+            self.stats.daemon_us += cost
+        else:
+            self.stats.bg_time_us += cost
+        return m
+
+    def _fence(self) -> float:
+        """Wait out the daemon's in-flight write-backs (true data
+        dependency before reading host bytes back)."""
+        st = self.stats
+        wait = self.daemon.wait_for(st.sim_time_us)
+        if wait > 0.0:
+            st.sim_time_us += wait
+            st.fence_wait_us += wait
+        st.fences += 1
+        st.fence_lat.record(wait)
+        return wait
+
     def _alloc_page(self, req: Request) -> Optional[int]:
         """Allocate one logical page backed by a pool slot (all layers)."""
         pg = self._next_page_id
@@ -255,6 +385,7 @@ class ValetServeEngine:
                 slot = self.pool.alloc(pg, self.step_counter)
         if slot is None:
             return None
+        self._note_allocated((slot,))
         self._next_page_id += 1
         self.gpt.map_local(pg, slot)
         self.tracker.on_write([pg], self.step_counter)
@@ -270,7 +401,10 @@ class ValetServeEngine:
     def _host_donate(self, n_pages: int) -> int:
         """Coordinator-requested donation: shed FREE slots back to the
         shared slab (an idle engine's drained sequences are exactly the
-        unused memory §3.4 wants to hand to a busy co-tenant)."""
+        unused memory §3.4 wants to hand to a busy co-tenant).  The shrink
+        unbacks FREE slots — exactly where demoted pages keep their bytes —
+        so every dirty demoted page is flushed to the host tier first."""
+        self._flush_demoted(None)
         return self.pool.shrink_by(n_pages)
 
     def _alloc_pages(self, req: Request, n: int) -> bool:
@@ -284,6 +418,7 @@ class ValetServeEngine:
         slots = self.pool.alloc_batch(pgs, [self.step_counter] * n)
         if slots is None:           # cannot happen: free_count checked above
             raise RuntimeError(f"pool refused batch of {n} pages")
+        self._note_allocated(slots)
         self._next_page_id += n
         self.gpt.map_local_batch(np.asarray(pgs, np.int64),
                                  np.asarray(slots, np.int64))
@@ -299,10 +434,9 @@ class ValetServeEngine:
             if mask.any():
                 self.pool.release_batch(lslots[mask].tolist())
                 self.gpt.unmap_local_batch(parr[mask])
+            self.device.drop(req.pages)
             if delete_host:
-                hs = self.host_store
-                for pg in req.pages:
-                    hs.pop(pg, None)
+                self.host.drop(req.pages)
             self.gpt.drop_remote_batch(parr)
         req.pages = []
 
@@ -321,41 +455,47 @@ class ValetServeEngine:
             else:
                 victim = victims_order.pop(0)
             freed += self._preempt(victim)
+        if self._zero and freed:
+            # the freed slots are about to be handed out: flush the newly
+            # demoted pages now so the reuse finds them clean (the write-
+            # back overlaps the admit/prefill compute — still off the
+            # critical path, like the paper's lazy sender)
+            self._flush_demoted(None)
         return self.pool.free_count() >= n_pages
 
     def _restore(self, req: Request) -> bool:
-        """Bring a paused sequence's pages back into the pool, in bulk.
+        """Bring a paused sequence's pages back into the pool.
 
-        One ``local_slots_batch`` gather finds the missing pages, one
-        ``alloc_batch`` claims their slots, and the KV data lands with a
-        single scatter per paged layer instead of one device update per
-        (page, layer) pair.  The restored bytes are bit-identical to the
-        per-page path."""
+        Zero-restore mode: one ``local_slots_batch`` gather finds the
+        missing pages, then every page whose old slot is still untouched
+        (device tier hit, validated by the pool's generation counter) is
+        *repointed* — ``claim_batch`` + a block-table remap, zero bytes
+        moved — and only pages whose slot was reused stream back from the
+        host tier one ``device_ops.stream_page`` read each.  Legacy mode
+        keeps the bulk per-layer ``local_write_batch`` scatter over the
+        whole sequence.  Either way the restored bytes are bit-identical."""
         if not req.pages:
             return True
         parr = np.asarray(req.pages, np.int64)
         needed = parr[self.gpt.local_slots_batch(parr) < 0]
-        n = needed.size
+        n = int(needed.size)
+        if n == 0:
+            return True
         if self.pool.free_count() < n:
             if not self._reserve(n):
                 return False
-        if n == 0:
-            return True
+        needed_l = needed.tolist()
+        if self._zero:
+            return self._restore_zero(needed, needed_l, n)
         if self.async_mode:
             # the spill daemon may still be writing these bytes out: a
             # restore is a true data dependency, so it fences — waits out
             # the daemon's in-flight work — before reading them back
-            st = self.stats
-            wait = self._daemon_clock_us - st.sim_time_us
-            if wait > 0.0:
-                st.sim_time_us += wait
-                st.fence_wait_us += wait
-            st.fences += 1
-        needed_l = needed.tolist()
+            self._fence()
         slots = self.pool.alloc_batch(needed_l, [self.step_counter] * n)
         if slots is None:           # cannot happen: free_count checked above
             raise RuntimeError(f"pool refused batch of {n} restore pages")
-        blobs = [self.host_store.pop(pg) for pg in needed_l]
+        blobs = [self.host.pop(pg) for pg in needed_l]
         idx = jnp.asarray(np.asarray(slots, np.int32))
         for li in self.paged_layers:
             ks = jnp.asarray(np.stack([np.asarray(b[li][0]) for b in blobs]))
@@ -371,11 +511,63 @@ class ValetServeEngine:
         self.stats.sim_time_us += self.costs.host_read * n
         return True
 
+    def _restore_zero(self, needed: np.ndarray, needed_l: List[int],
+                      n: int) -> bool:
+        """Repoint-first restore (the caller verified ``n`` free slots)."""
+        in_dev = [pg for pg in needed_l if pg in self.device]
+        rp_pages, rp_slots, missed = self.device.split(in_dev,
+                                                       self.pool.free_gen)
+        dset = set(in_dev)
+        stream = missed + [pg for pg in needed_l if pg not in dset]
+        if rp_pages:
+            # zero-copy path: claim the exact old slots back and repoint
+            # the block table at them — no data movement, no sim cost
+            self.pool.claim_batch(rp_slots, rp_pages, self.step_counter)
+            self.gpt.map_local_batch(np.asarray(rp_pages, np.int64),
+                                     np.asarray(rp_slots, np.int64))
+            # a clean flushed copy goes stale the moment the sequence
+            # appends into its partial page again, so drop it; the next
+            # preemption re-flushes
+            self.host.drop(rp_pages)
+            self.stats.repointed_pages += len(rp_pages)
+        if stream:
+            if self.async_mode:
+                # streamed bytes come from the host tier the flush daemon
+                # writes — a true data dependency, so fence on it.  Pure
+                # repoints never fence: the bytes never left the device.
+                self._fence()
+            k = len(stream)
+            slots = self.pool.alloc_batch(stream, [self.step_counter] * k)
+            if slots is None:       # cannot happen: free_count checked above
+                raise RuntimeError(f"pool refused batch of {k} stream pages")
+            self._note_allocated(slots)
+            for pg, sl in zip(stream, slots):
+                blob = self.host.pop(pg)
+                for li in self.paged_layers:
+                    self.caches["layers"][li]["pool"] = dev.stream_page(
+                        self.caches["layers"][li]["pool"],
+                        blob[li][0], blob[li][1], sl)
+            self.gpt.map_local_batch(np.asarray(stream, np.int64),
+                                     np.asarray(slots, np.int64))
+            self.stats.streamed_pages += k
+            self.stats.sim_time_us += self.costs.host_read * k
+        self.gpt.drop_remote_batch(needed)
+        self.tracker.on_write(needed_l, self.step_counter)
+        self.stats.restored_pages += n
+        return True
+
     # ------------------------------------------------------------ scheduling
 
-    def submit(self, prompt: np.ndarray, max_new: int) -> int:
+    def submit(self, prompt: np.ndarray, max_new: int, *,
+               submit_us: Optional[float] = None) -> int:
+        """Queue a request.  ``submit_us`` overrides the arrival timestamp
+        (simulated us; defaults to the current simulated clock) — the
+        serve_qps benchmark stamps Poisson arrivals through it."""
         rid = len(self._requests)
-        self._requests[rid] = Request(rid, np.asarray(prompt), max_new)
+        req = Request(rid, np.asarray(prompt), max_new)
+        req.submit_us = (self.stats.sim_time_us if submit_us is None
+                         else float(submit_us))
+        self._requests[rid] = req
         return rid
 
     def _pages_for(self, n_tokens: int) -> int:
@@ -396,6 +588,8 @@ class ValetServeEngine:
         req.tokens_out.append(int(jnp.argmax(logits[0])))
         self.stats.tokens += 1
         self.stats.sim_time_us += self.costs.local_write * need
+        if req.first_token_us < 0:
+            req.first_token_us = self.stats.sim_time_us
         req.status = "active"
         req.last_active_step = self.step_counter
         if len(req.tokens_out) >= req.max_new:
@@ -477,33 +671,45 @@ class ValetServeEngine:
 
     # ----------------------------------------------------------------- run
 
+    def step(self, greedy: bool = True) -> bool:
+        """One scheduler iteration: admissions + resumes, one background
+        flush slice, one batched decode step over the active set.  Returns
+        ``False`` once nothing is waiting, paused, or active — the
+        serve_qps benchmark drives this directly, interleaving arrivals
+        between iterations; ``run()`` just loops it."""
+        sim_before = self.stats.sim_time_us
+        pending = [r for r in self._requests.values()
+                   if r.status in ("waiting", "paused")]
+        for r in pending:
+            if r.status == "waiting":
+                self._admit(r)
+            else:
+                self._resume(r)
+        # background write-back slice: secure host copies for recently
+        # demoted pages while the foreground decodes
+        self._flush_demoted(self.flush_batch)
+        active = [r for r in self._requests.values() if r.status == "active"]
+        if not active:
+            # True while something is still pending (deadlock guard: the
+            # caller retries, admissions force room next iteration)
+            return any(r.status in ("waiting", "paused")
+                       for r in self._requests.values())
+        self._step_active(active, greedy)
+        # one scheduler iteration = one critical-path latency sample
+        # (admit + resume/fence + decode); the reservoir backs
+        # EngineStats.latency_p50/p99
+        self.stats.lat.record(self.stats.sim_time_us - sim_before)
+        return True
+
     def run(self, max_steps: int = 10_000, greedy: bool = True):
         """Drive until all requests are done (or max_steps)."""
         t0 = time.monotonic()
-        while max_steps > 0:
+        while max_steps > 0 and self.step(greedy):
             max_steps -= 1
-            sim_before = self.stats.sim_time_us
-            pending = [r for r in self._requests.values()
-                       if r.status in ("waiting", "paused")]
-            for r in pending:
-                if r.status == "waiting":
-                    self._admit(r)
-                else:
-                    self._resume(r)
-            active = [r for r in self._requests.values()
-                      if r.status == "active"]
-            if not active:
-                if any(r.status in ("waiting", "paused")
-                       for r in self._requests.values()):
-                    # deadlock guard: force room
-                    continue
-                break
-            self._step_active(active, greedy)
-            # one scheduler iteration = one critical-path latency sample
-            # (admit + resume/fence + decode); the reservoir backs
-            # EngineStats.latency_p50/p99
-            self.stats.lat.record(self.stats.sim_time_us - sim_before)
-        self.stats.wall_time_s = time.monotonic() - t0
+        # write back whatever is still demoted (paused survivors) so no
+        # spilled byte ever goes uncharged
+        self._flush_demoted(None)
+        self.stats.wall_time_s += time.monotonic() - t0
         return [r for r in self._requests.values()]
 
     def _step_active(self, active: List[Request], greedy: bool):
@@ -575,8 +781,9 @@ class ValetServeEngine:
                 r.slot = -1
 
     def _preempt(self, req: Request) -> int:
-        """Pause a sequence: spill (valet/os-swap) or delete (infiniswap)
-        its pool pages + save its per-slot (ring/ssm/cross) caches."""
+        """Pause a sequence: demote (zero-restore), spill (legacy valet /
+        os-swap) or delete (infiniswap) its pool pages + save its per-slot
+        (ring/ssm/cross) caches."""
         n = len(req.pages)
         self.stats.pauses += 1
         if req.slot >= 0:
@@ -590,8 +797,6 @@ class ValetServeEngine:
             self.stats.deleted_pages += n
             self._seq_blobs.pop(req.rid, None)
             return n
-        # bulk spill: one gather + host transfer per paged layer (instead of
-        # one per (page, layer)), then grouped release / unmap / remote-map
         live = np.empty(0, np.int64)
         if req.pages:
             parr = np.asarray(req.pages, np.int64)
@@ -599,17 +804,34 @@ class ValetServeEngine:
             mask = lslots >= 0
             live = parr[mask]
             live_slots = lslots[mask]
-        if live.size:
+        if live.size and self._zero:
+            # zero-restore demote: a pure metadata move.  The slots return
+            # to the free list but the KV bytes stay put, registered with
+            # the device tier under the pool's current generation; the
+            # background flush secures host copies before any reuse.  No
+            # device traffic, no critical-path cost here.
+            m = int(live.size)
+            self.device.demote(live.tolist(), live_slots.tolist(),
+                               self.pool.gen[live_slots].tolist())
+            self.pool.release_batch(live_slots.tolist())
+            self.gpt.unmap_local_batch(live)
+            self.gpt.map_remote_batch(live, [int(Tier.DEVICE)] * m,
+                                      [-1] * m, live_slots.tolist(), None)
+            self._flush_q.extend(live.tolist())
+            self.stats.demoted_pages += m
+            self.stats.spilled_pages += m
+        elif live.size:
+            # legacy bulk spill: one gather + host transfer per paged layer,
+            # then grouped release / unmap / remote-map
             idx = jnp.asarray(live_slots.astype(np.int32))
             layer_kv = {}
             for li in self.paged_layers:
                 pool = self.caches["layers"][li]["pool"]
                 layer_kv[li] = (dev.to_host_tier(pool.k[idx]),
                                 dev.to_host_tier(pool.v[idx]))
-            hs = self.host_store
             for i, pg in enumerate(live.tolist()):
-                hs[pg] = {li: (kv[0][i], kv[1][i])
-                          for li, kv in layer_kv.items()}
+                self.host.put(pg, {li: (kv[0][i], kv[1][i])
+                                   for li, kv in layer_kv.items()})
             self.pool.release_batch(live_slots.tolist())
             self.gpt.unmap_local_batch(live)
             m = int(live.size)
@@ -621,9 +843,7 @@ class ValetServeEngine:
                 if self.async_mode:
                     # charge the daemon clock: the spill overlaps decode,
                     # but a restore of these pages must fence on it
-                    self._daemon_clock_us = max(
-                        self._daemon_clock_us,
-                        self.stats.sim_time_us) + cost
+                    self.daemon.charge(cost, self.stats.sim_time_us)
                     self.stats.daemon_us += cost
                 else:
                     self.stats.bg_time_us += cost

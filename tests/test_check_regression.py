@@ -18,7 +18,8 @@ FULL = {"batch_speedup": {"speedup": 4.0},
         "tail_latency": {"speedup": 15.0},
         "ycsb_a": {"hit_ratio": 0.78},
         "ml_trace": {"speedup": 1.35},
-        "mixed_tenant_workload": {"fairness": 0.99}}
+        "mixed_tenant_workload": {"fairness": 0.99},
+        "serve_qps": {"tokens_per_s": 1.2}}
 
 
 def test_tracked_covers_workload_suite_keys():

@@ -19,7 +19,8 @@ import pytest
 from repro import (OrchestrationConfig, TieredPageStore, ValetServeEngine,
                    HostMemoryCoordinator)
 from repro.core import POLICIES, PAPER_COSTS
-from repro.core.config import LEGACY_STORE_KWARGS, config_from_legacy_kwargs
+from repro.core.config import (LEGACY_STORE_KWARGS, LEGACY_SERVE_KWARGS,
+                               config_from_legacy_kwargs)
 
 
 def small_trace(seed=0, n_pages=300, n_ops=2000):
@@ -175,12 +176,65 @@ def test_engine_container_weight_alias_warns(tiny_model):
 
 
 def test_engine_from_config_maps_orchestration_fields(tiny_model):
+    """PR 8: the serving knobs (page/max_batch/max_seq/pool_slots/
+    step_cost_us) ride the config too — from_config takes no loose
+    orchestration kwargs."""
     params, cfg, ctx = tiny_model
     ocfg = OrchestrationConfig(policy=POLICIES["valet"], pool_capacity=8,
                                min_pool=8, weight=2.5, seed=11,
-                               async_mode=True)
-    eng = ValetServeEngine.from_config(params, cfg, ctx, ocfg,
-                                       max_batch=2, max_seq=32, page=4)
+                               async_mode=True,
+                               max_batch=2, max_seq=32, page=4,
+                               step_cost_us=3.0, zero_restore=False)
+    eng = ValetServeEngine.from_config(params, cfg, ctx, ocfg)
     assert eng.weight == 2.5
     assert eng.async_mode is True
     assert eng.policy is POLICIES["valet"]
+    assert eng.max_batch == 2 and eng.page == 4
+    assert eng.max_pages == 32 // 4
+    assert eng.pool.size == 8                     # pool_slots -> pool_capacity
+    assert eng.step_cost_us == 3.0
+    assert eng.zero_restore is False and eng._zero is False
+
+
+def test_engine_from_config_pool_slots_overrides_capacity(tiny_model):
+    params, cfg, ctx = tiny_model
+    ocfg = OrchestrationConfig(pool_capacity=64, min_pool=8, pool_slots=16,
+                               max_batch=2, max_seq=32, page=4)
+    eng = ValetServeEngine.from_config(params, cfg, ctx, ocfg)
+    assert eng.pool.max_pages == 16
+
+
+# one representative value per legacy serve keyword (every alias in the map)
+LEGACY_SERVE_VALUES = {
+    "max_batch": 2,
+    "max_seq": 32,
+    "page": 4,
+    "pool_slots": 8,
+    "step_cost_us": 5.0,
+}
+
+
+def test_serve_values_cover_the_alias_map():
+    assert set(LEGACY_SERVE_VALUES) == set(LEGACY_SERVE_KWARGS)
+
+
+@pytest.mark.parametrize("key", sorted(LEGACY_SERVE_KWARGS))
+def test_every_legacy_serve_kwarg_warns_and_round_trips(key):
+    val = LEGACY_SERVE_VALUES[key]
+    with pytest.warns(DeprecationWarning, match=key):
+        cfg = config_from_legacy_kwargs(OrchestrationConfig(), {key: val},
+                                        owner="ValetServeEngine",
+                                        alias_map=LEGACY_SERVE_KWARGS)
+    assert getattr(cfg, LEGACY_SERVE_KWARGS[key]) == val
+
+
+def test_engine_from_config_legacy_kwargs_warn_but_work(tiny_model):
+    params, cfg, ctx = tiny_model
+    ocfg = OrchestrationConfig(pool_capacity=8, min_pool=8)
+    with pytest.warns(DeprecationWarning) as rec:
+        eng = ValetServeEngine.from_config(params, cfg, ctx, ocfg,
+                                           max_batch=2, max_seq=32, page=4)
+    assert len([w for w in rec if w.category is DeprecationWarning]) == 3
+    assert eng.max_batch == 2 and eng.page == 4
+    with pytest.raises(TypeError, match="unexpected keyword.*bogus"):
+        ValetServeEngine.from_config(params, cfg, ctx, ocfg, bogus=1)

@@ -64,12 +64,16 @@ def test_unconstrained_pool_never_preempts(setup):
     assert stats.spilled_pages == 0
 
 
-def test_preempt_restore_roundtrips_kv_exactly(setup):
-    """Bulk spill (_preempt) then bulk restore (_restore) must return every
-    KV page to the pool bit-identically, with host blobs fully drained."""
+@pytest.mark.parametrize("mode", ["zero", "legacy"])
+def test_preempt_restore_roundtrips_kv_exactly(setup, mode):
+    """Preempt then restore must return every KV page to the pool
+    bit-identically.  Legacy mode spills to / drains from host blobs;
+    zero-restore mode demotes in place (device tier) and comes back as a
+    pure block-table repoint — same bytes, zero copies."""
     cfg, params, prompts, _ = setup
     eng = ValetServeEngine(params, cfg, CTX, max_batch=2, max_seq=64,
-                           page=4, pool_slots=32, policy=POLICIES["valet"])
+                           page=4, pool_slots=32, policy=POLICIES["valet"],
+                           zero_restore=(mode == "zero"))
     rid = eng.submit(prompts[0], max_new=8)
     req = eng._requests[rid]
     assert eng._admit(req) and req.status == "active"
@@ -87,7 +91,19 @@ def test_preempt_restore_roundtrips_kv_exactly(setup):
     assert eng.stats.spilled_pages == len(req.pages)
     for pg in req.pages:
         assert eng.gpt.local_slot(pg) is None
-        assert pg in eng.host_store                # spilled, not deleted
+        if mode == "zero":
+            assert pg in eng.device                # demoted, bytes in place
+            assert pg not in eng.host              # no copy made yet
+        else:
+            assert pg in eng.host                  # spilled, not deleted
+
+    if mode == "zero":
+        # the background flush secures host copies without losing device
+        # residency (clean pages stay repointable)
+        assert eng._flush_demoted(None) == len(req.pages)
+        assert eng.stats.bg_time_us > 0
+        for pg in req.pages:
+            assert pg in eng.device and pg in eng.host
 
     assert eng._resume(req) and req.status == "active"
     for li in eng.paged_layers:
@@ -100,8 +116,15 @@ def test_preempt_restore_roundtrips_kv_exactly(setup):
             np.testing.assert_array_equal(np.asarray(pool.v[s]),
                                           before[li][pg][1])
     for pg in req.pages:
-        assert pg not in eng.host_store            # blobs drained on restore
+        assert pg not in eng.host                  # blobs drained on restore
     assert eng.stats.restored_pages == eng.stats.spilled_pages
+    if mode == "zero":
+        # nothing was reallocated in between: every page repoints to its
+        # exact old slot, zero streamed
+        assert eng.stats.repointed_pages == len(req.pages)
+        assert eng.stats.streamed_pages == 0
+        for pg, s in slots.items():
+            assert eng.gpt.local_slot(pg) == s
 
 
 def test_engine_hybrid_arch_with_rings():
