@@ -39,6 +39,11 @@ ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
 # zero-restore vs bulk-restore serving speedup (sim-time ratio on identical
 # request streams, geomean across archs — benchmarks/serve_qps.py); it
 # regresses if bulk KV scatters creep back into the restore path.
+# fault_recovery/durability is recovered/(recovered+lost) for a replica-
+# covered single-peer crash (1.0 when the recovery sweep finds every
+# replica) and fault_recovery/degraded_throughput the SUSPECT-phase us/op
+# ratio against the healthy baseline (the retry/backoff degradation bound)
+# — both from the seeded sync schedule in benchmarks/fault_recovery.py.
 TRACKED = [
     ("batch_speedup", "speedup"),
     ("pressure_speedup", "speedup"),
@@ -50,6 +55,8 @@ TRACKED = [
     ("ml_trace", "speedup"),
     ("mixed_tenant_workload", "fairness"),
     ("serve_qps", "tokens_per_s"),
+    ("fault_recovery", "durability"),
+    ("fault_recovery", "degraded_throughput"),
 ]
 
 

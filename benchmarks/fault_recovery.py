@@ -1,0 +1,126 @@
+"""``bench: fault_recovery`` — seeded fault schedule, recovery + degradation.
+
+Replays one seeded trace against a replication-1 Valet store while the
+``FaultInjector`` fires the canonical four-phase ``standard_schedule``
+(paper §5.1/§5.3, Table 3):
+
+  phase 1  transient blip   — one peer turns SUSPECT: every access to it
+           pays the retry/backoff ladder, placement routes around it, and
+           the phase's us/op against the healthy baseline is the
+           ``degraded_throughput`` ratio (gated; higher is better, < 1).
+  phase 2  permanent crash  — one peer drops; the batched recovery sweep
+           repoints every page to its replica.  ``durability`` (gated) is
+           recovered / (recovered + lost) for this crash — with one
+           replica per block and no prior failure it must be exactly 1.0.
+  phase 3  correlated crash — two peers die at once (rack failure); pages
+           whose primary and only replica shared the pair are genuinely
+           lost.  Reported (``durability_correlated``), not gated.
+  phase 4  recovery storm   — all three dead peers rejoin; background
+           repair re-replicates onto them.  After a drain barrier the run
+           asserts ``check_replication_restored()`` plus the full
+           ``InvariantChecker`` — recovery must end *complete*, not
+           merely quiet.
+
+The schedule runs against the sync store and the async engine (events land
+between driven chunks, i.e. mid-epoch for async); the gated keys come from
+the sync run, whose numbers are deterministic simulated microseconds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import drive_arrays, emit
+from benchmarks.paper_tables import _config, _populate
+from repro.core import (FaultInjector, InvariantChecker, TieredPageStore,
+                        standard_schedule)
+
+N_OPS = 30_000
+N_PAGES = 2048
+POOL = 256
+PEERS = 6
+BLOCKS = 1024
+SEED = 11
+# the blip phase must stay SUSPECT for its full scheduled window — the
+# escalation timeout is exercised by unit tests, not the benchmark
+NO_TIMEOUT_US = 1e15
+
+
+def _trace(seed: int):
+    rng = np.random.default_rng(seed)
+    pages = rng.integers(0, N_PAGES, size=N_OPS, dtype=np.int64)
+    is_write = rng.random(N_OPS) < 0.3
+    return pages, is_write
+
+
+def _run_schedule(async_mode: bool):
+    """Drive the trace in event-aligned segments; return phase metrics."""
+    st = TieredPageStore.from_config(
+        _config("valet", pool=POOL, min_pool=POOL, peers=PEERS,
+                blocks=BLOCKS, seed=SEED, async_mode=async_mode,
+                suspect_timeout_us=NO_TIMEOUT_US))
+    _populate(st, N_PAGES)
+    st.drain()
+    pages, is_write = _trace(SEED)
+    events = standard_schedule(N_OPS, blip_peer=0, crash_peer=1,
+                               correlated_peers=(2, 3))
+    inj = FaultInjector(st, events)
+    cuts = sorted({0, N_OPS, *(e.at_op for e in events)})
+    seg_us = {}
+    s = st.stats
+    for a, b in zip(cuts, cuts[1:]):
+        t0 = s.time_us
+        drive_arrays(st, pages[a:b], is_write[a:b], tick_every=256,
+                     batch=256)
+        seg_us[a] = (s.time_us - t0) / max(b - a, 1)
+        inj.advance(b - a)
+    st.drain()
+    st.repair_quiesce()
+    chk = InvariantChecker(st)
+    chk.check()
+    chk.check_replication_restored()
+
+    blip_at = events[0].at_op
+    heal_at = events[1].at_op
+    crashes = [(op, peer, res) for (op, kind, peer, res) in inj.log
+               if kind == "crash"]
+    single = crashes[0]
+    rec, lost = single[2]
+    corr_rec = sum(r[2][0] for r in crashes[1:])
+    corr_lost = sum(r[2][1] for r in crashes[1:])
+    return {
+        "healthy_us_per_op": seg_us[0],
+        "degraded_us_per_op": seg_us[blip_at],
+        "degraded_throughput": seg_us[0] / max(seg_us[blip_at], 1e-12),
+        "recovered": rec, "lost": lost,
+        "durability": rec / max(rec + lost, 1),
+        "correlated_recovered": corr_rec, "correlated_lost": corr_lost,
+        "durability_correlated": corr_rec / max(corr_rec + corr_lost, 1),
+        "repair_pages": s.repair_pages, "repair_us": s.repair_us,
+        "retries": s.retries, "retry_wait_us": s.retry_wait_us,
+        "repair_backlog": len(st.repairq),
+        "health_transitions": len(st.health.transitions),
+        "events_fired": len(inj.log),
+        "post_heal_us_per_op": seg_us[heal_at],
+    }
+
+
+def fault_recovery(rows):
+    """``bench: fault_recovery`` — gated durability + degraded throughput."""
+    sync = _run_schedule(async_mode=False)
+    asy = _run_schedule(async_mode=True)
+    art = {
+        # gated: replica-covered crash loses nothing
+        "durability": sync["durability"],
+        # gated: retry/backoff degrades, it must not collapse
+        "degraded_throughput": sync["degraded_throughput"],
+        "sync": sync, "async": asy,
+    }
+    emit(rows, "fault_recovery/sync", sync["degraded_us_per_op"],
+         durability=round(sync["durability"], 4),
+         degraded_throughput=round(sync["degraded_throughput"], 4),
+         repair_pages=sync["repair_pages"])
+    emit(rows, "fault_recovery/async", asy["degraded_us_per_op"],
+         durability=round(asy["durability"], 4),
+         degraded_throughput=round(asy["degraded_throughput"], 4),
+         repair_pages=asy["repair_pages"])
+    return art

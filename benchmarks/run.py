@@ -41,6 +41,7 @@ BENCHES = [
     ("mixed_tenant_workload", "workloads", "mixed_tenant_workload"),
     ("roofline", "roofline_table", "run"),
     ("serve_qps", "serve_qps", "serve_qps"),
+    ("fault_recovery", "fault_recovery", "fault_recovery"),
 ]
 
 BENCH_NAMES = [name for name, _, _ in BENCHES]

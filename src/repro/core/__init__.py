@@ -9,7 +9,12 @@ from repro.core.activity import (ActivityTracker, select_victims_nad,
                                  select_victims_mass, select_victims_random,
                                  select_victims_topk, power_of_two_choices)
 from repro.core.migration import MigrationEngine, Migration, Phase
-from repro.core.replication import ReplicaPlacer, FaultConfig, fail_peer
+from repro.core.replication import (ReplicaPlacer, FaultConfig, fail_peer,
+                                    fail_peer_batched)
+from repro.core.faults import (HealthState, PeerHealth, RepairQueue,
+                               FaultEvent, FaultInjector, transient_blip,
+                               crash, correlated_crash, recovery_storm,
+                               standard_schedule, random_schedule)
 from repro.core.policies import (Policy, CostModel, POLICIES, VALET,
                                  VALET_MASS, INFINISWAP, NBDX, OS_SWAP,
                                  PAPER_COSTS, TPU_COSTS)

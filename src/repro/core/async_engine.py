@@ -241,10 +241,26 @@ class AsyncOrchestrator:
             self.daemon_clock = max(self.daemon_clock, now) + charged
             st.daemon_us += charged
             self.n_daemon_flush_pages += min(n, staged)
+        # 1b. re-replication repair: drain the degraded-block queue at the
+        # daemon's pipelined rate — repairs overlap foreground ops exactly
+        # like flushes (the repair copies are sender-driven block writes)
+        if store.repairq:
+            before = st.repair_us
+            pages = store._drain_repairs(
+                min(budget, store.config.repair_rate))
+            if pages:
+                charged = (st.repair_us - before) / self.FLUSH_PIPELINE_DEPTH
+                self.daemon_clock = max(self.daemon_clock, now) + charged
+                st.daemon_us += charged
+            if store.repairq and store._lease is not None:
+                note = getattr(store.coordinator, "note_degraded", None)
+                if note is not None:
+                    note(store._lease.cid, len(store.repairq))
         # 2. pool sizing (same cadence as the sync background_tick)
         if store.policy.dynamic_pool:
             store.pool.shrink_for_pressure()
-            store.pool.maybe_grow()
+            if not store.repairq:
+                store.pool.maybe_grow()
         # 3. restock ahead of demand: drain the reclaimable queue into a
         # hold that commits once the daemon's clock catches up (at the
         # earliest, the next epoch boundary).  The target is capped at half

@@ -66,6 +66,20 @@ class OrchestrationConfig:
     daemon_budget: int = 256              # pages of daemon work per epoch
     real_thread: bool = False             # real daemon thread (not determ.)
 
+    # -- fault handling (core/faults.py) ---------------------------------
+    # retry/backoff against a SUSPECT peer: each access pays
+    # ``backoff_base_us * (2^retry_limit - 1)`` of simulated wait (the
+    # full exponential ladder — deterministic, so the parity suites hold
+    # whenever no fault is injected)
+    retry_limit: int = 3
+    backoff_base_us: float = 8.0
+    # simulated us a peer may stay SUSPECT before the health poll
+    # escalates it to DOWN (fail_peer)
+    suspect_timeout_us: float = 50_000.0
+    # re-replication repair drain rate: pages copied per background tick
+    # (sync) or per daemon slice (async)
+    repair_rate: int = 256
+
     # -- device tier / zero-restore (PR 8) -------------------------------
     # trace store: remember reclaimed pages' slots and repoint on re-access
     # while the slot is untouched (off by default: it improves hit ratios,

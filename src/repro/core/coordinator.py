@@ -60,6 +60,7 @@ class ContainerRecord:
     pages_leased_total: int = 0
     pages_donated_total: int = 0
     peer_blocks_freed_total: int = 0
+    degraded_blocks: int = 0       # latest repair-backlog report (0 = healthy)
 
 
 @dataclass
@@ -71,6 +72,7 @@ class CoordinatorStats:
     pages_reclaimed: int = 0       # pages pulled back from donors
     n_peer_pressure_events: int = 0   # coordinated remote-pressure fan-outs
     peer_blocks_freed: int = 0        # MR blocks freed across containers
+    n_degraded_reports: int = 0       # repair-backlog reports (fault path)
 
 
 class LeaseClient:
@@ -178,6 +180,16 @@ class HostMemoryCoordinator:
         """Record container activity (ops served); decayed at arbitration
         time so stale bursts fade and idle containers donate first."""
         self._containers[cid].demand += n_ops
+
+    def note_degraded(self, cid: int, n_blocks: int) -> None:
+        """A container reports its re-replication backlog (blocks still
+        below their replication factor after a drain round).  The
+        coordinator records it as an admission-throttle signal — a degraded
+        container's lease asks arbitrate against a live repair debt, and
+        operators can watch ``stats.n_degraded_reports`` /
+        ``ContainerRecord.degraded_blocks`` for stuck repairs."""
+        self._containers[cid].degraded_blocks = int(n_blocks)
+        self.stats.n_degraded_reports += 1
 
     # -- accounting ----------------------------------------------------------
 

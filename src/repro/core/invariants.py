@@ -82,6 +82,7 @@ class InvariantChecker:
         self._check_replica_index()
         self._check_gpt_block_containment()
         self._check_host_tier()
+        self._check_peer_health()
 
     # -- 1. no lost writes ----------------------------------------------------
 
@@ -224,6 +225,80 @@ class InvariantChecker:
         if dense != keys:
             _fail("host_pages dict and dense mask diverge: "
                   f"{sorted(dense ^ keys)[:8]}")
+
+    # -- 6. peer health / fault handling (§5.1, Table 3) ----------------------
+
+    def _check_peer_health(self):
+        """A DOWN peer holds nothing: no mapped page, no live MR block,
+        no replica tuple on a survivor still naming it — and the dense
+        failure cache agrees with the per-peer flags."""
+        s = self.store
+        gpt = s.gpt
+        from repro.core.page_table import Tier
+        peer_t = int(Tier.PEER)
+        for p, peer in enumerate(s.peers):
+            if bool(s._peer_failed[p]) != peer.failed:
+                _fail(f"peer {p}: _peer_failed cache "
+                      f"{bool(s._peer_failed[p])} != PeerState.failed "
+                      f"{peer.failed}")
+            if not peer.failed:
+                continue
+            mapped = (gpt._r_tier == peer_t) & (gpt._r_peer == p) \
+                & gpt._r_mapped
+            if np.any(mapped):
+                pg = int(np.argmax(mapped))
+                _fail(f"page {pg} still mapped on DOWN peer {p}")
+            hi = s._next_block_slot[p]
+            if np.any(s._blk_live[p][:hi]):
+                sl = int(np.argmax(s._blk_live[p][:hi]))
+                _fail(f"DOWN peer {p} still holds live block slot {sl}")
+            if peer.used != 0:
+                _fail(f"DOWN peer {p} reports used={peer.used}")
+        failed = {p for p, peer in enumerate(s.peers) if peer.failed}
+        if failed:
+            for pg, reps in gpt._replicas.items():
+                for r in reps:
+                    if r[0] in failed:
+                        _fail(f"page {pg} keeps stale replica {tuple(r)} "
+                              f"on DOWN peer {r[0]}")
+            for rep in s._replica_of:
+                if rep[0] in failed:
+                    _fail(f"replica block {rep} lives on DOWN peer "
+                          f"{rep[0]}")
+
+    # -- 7. repair quiesced => replication restored (opt-in barrier) ----------
+
+    def check_replication_restored(self, factor: int = None):
+        """After ``repair_quiesce`` the store must be back at full
+        durability: an empty repair queue and every live primary block
+        that still backs mapped pages carrying >= ``factor`` replicas
+        (default ``policy.replication``).  Not part of ``check()`` — mid-
+        trace a degraded block is legal; this is the recovery benchmark's
+        end-of-phase assertion."""
+        self.n_checks += 1
+        s = self.store
+        R = s.policy.replication if factor is None else int(factor)
+        if R <= 0:
+            return
+        if len(s.repairq):
+            _fail(f"repair queue still holds {len(s.repairq)} degraded "
+                  "blocks after quiesce")
+        gpt = s.gpt
+        from repro.core.page_table import Tier
+        peer_t = int(Tier.PEER)
+        referenced = set()
+        for pg in np.flatnonzero((gpt._r_tier == peer_t)
+                                 & gpt._r_mapped).tolist():
+            loc = gpt.remote_location(pg)
+            if loc is not None:
+                referenced.add((loc.peer, loc.slot))
+        for key in referenced:
+            if key in s._replica_of:
+                continue               # replicas are counted via the primary
+            have = len(tuple(s.block_replicas.get(key, ())))
+            if have < R:
+                _fail(f"block {key} still degraded after quiesce: "
+                      f"{have}/{R} replicas")
 
 
 # -- statistical equivalence ---------------------------------------------------

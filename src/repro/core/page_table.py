@@ -151,17 +151,68 @@ class GlobalPageTable:
             & self._r_mapped
         return [int(p) for p in np.flatnonzero(mask)]
 
-    def repoint_replica(self, page: int) -> bool:
-        """Peer failure: promote the first replica to primary (Table 3)."""
+    def repoint_replica(self, page: int, alive=None) -> bool:
+        """Peer failure: promote the first replica to primary (Table 3).
+
+        ``alive`` (optional ``peer -> bool``) filters the candidate set: a
+        replica on a DOWN peer is never promoted and is dropped from the
+        surviving tuple (correlated failures would otherwise promote a
+        dead copy)."""
         page = int(page)
         reps = self._replicas.get(page)
         if page >= self._r_mapped.shape[0] or not self._r_mapped[page] \
                 or not reps:
             return False
+        if alive is not None:
+            reps = tuple(r for r in reps if alive(r[0]))
+            if not reps:
+                return False
         (peer, slot), rest = reps[0], reps[1:]
         self.map_remote(page, Location(Tier(int(self._r_tier[page])),
                                        peer=peer, slot=slot, replicas=rest))
         return True
+
+    def purge_replicas_on_peer(self, peer: int) -> int:
+        """Strip every replica tuple entry living on ``peer`` (peer death):
+        a surviving primary's page must never carry — let alone later
+        promote — a replica on a DOWN peer.  Returns pages touched."""
+        rd = self._replicas
+        if not rd:
+            return 0
+        n = 0
+        for pg in list(rd):
+            reps = rd[pg]
+            kept = tuple(r for r in reps if r[0] != peer)
+            if len(kept) != len(reps):
+                n += 1
+                if kept:
+                    rd[pg] = kept
+                else:
+                    del rd[pg]
+        return n
+
+    def add_replica_batch(self, pages, primary: Tuple[int, int],
+                          rep: Tuple[int, int]) -> int:
+        """Append replica ``rep`` to every page still mapped with
+        ``primary`` as its remote block (the re-replication repair path:
+        one mask over the block's page list instead of per-page lookups).
+        Pages that moved on — overwritten, migrated, promoted — are
+        skipped.  Returns pages updated."""
+        parr = np.asarray(pages, np.int64)
+        if not parr.size:
+            return 0
+        self._ensure(int(parr.max()))
+        mask = (self._r_tier[parr] == int(Tier.PEER)) \
+            & (self._r_peer[parr] == primary[0]) \
+            & (self._r_slot[parr] == primary[1]) \
+            & self._r_mapped[parr]
+        hit = parr[mask]
+        rd = self._replicas
+        for pg in hit.tolist():
+            cur = rd.get(pg, ())
+            if rep not in cur:
+                rd[pg] = cur + (rep,)
+        return int(hit.size)
 
     def __len__(self):
         return int(np.count_nonzero((self._l_slot >= 0) | self._r_mapped))

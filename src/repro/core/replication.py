@@ -32,26 +32,34 @@ class ReplicaPlacer:
         self.rng = rng or np.random.default_rng(1)
 
     def place(self, primary: int, free_counts: Sequence[int],
-              n_replicas: int) -> List[int]:
+              n_replicas: int, *,
+              exclude: Sequence[int] = ()) -> List[int]:
+        """``exclude`` bars additional peers beyond the primary — the
+        repair path passes the peers already holding a copy, so a block
+        never gets two replicas on one peer."""
         chosen: List[int] = []
+        base = [primary, *exclude]
         for _ in range(n_replicas):
             p = power_of_two_choices(free_counts, self.rng,
-                                     exclude=[primary] + chosen)
+                                     exclude=base + chosen)
             if p is None:
                 break
             chosen.append(p)
         return chosen
 
 
-def fail_peer(gpt: GlobalPageTable, peer: int, *, cold_fetch=None
-              ) -> Tuple[int, int]:
+def fail_peer(gpt: GlobalPageTable, peer: int, *, cold_fetch=None,
+              peer_alive=None) -> Tuple[int, int]:
     """Handle a peer failure: repoint pages to replicas, else cold tier.
 
+    The scalar reference sweep (``fail_peer_batched`` is pinned bitwise
+    against it).  ``peer_alive`` (optional ``peer -> bool``) keeps a
+    correlated failure from promoting a replica on another DOWN peer.
     Returns (recovered_via_replica, lost_or_cold).
     """
     recovered = lost = 0
     for pg in list(gpt.pages_on_peer(peer)):
-        if gpt.repoint_replica(pg):
+        if gpt.repoint_replica(pg, alive=peer_alive):
             recovered += 1
         else:
             if cold_fetch is not None:
@@ -61,3 +69,59 @@ def fail_peer(gpt: GlobalPageTable, peer: int, *, cold_fetch=None
                 gpt.drop_remote(pg)
             lost += 1
     return recovered, lost
+
+
+def fail_peer_batched(gpt: GlobalPageTable, peer: int, *, cold_fetch=None,
+                      peer_alive=None) -> Tuple[int, int]:
+    """Bulk ``fail_peer``: the recovery-storm hot path.
+
+    One masked ``flatnonzero`` finds every page on the dead peer, the
+    replica dict is probed once per page (sparse — only replicated pages
+    carry tuples), and the page table is updated with two scatters: one
+    ``map_remote_batch`` promotes every recoverable page to its first
+    live replica, one ``drop_remote_batch`` (or a COLD remap, per the
+    Table-3 mode) clears the lost ones.  Final page-table state and the
+    ``(recovered, lost)`` counts are bitwise identical to the scalar
+    reference — promotions and drops touch disjoint pages, so the
+    scatter order cannot matter.
+    """
+    mask = (gpt._r_tier == int(Tier.PEER)) & (gpt._r_peer == peer) \
+        & gpt._r_mapped
+    pages = np.flatnonzero(mask)
+    if not pages.size:
+        return 0, 0
+    rd = gpt._replicas
+    peer_t = int(Tier.PEER)
+    promote: List[int] = []
+    new_peer: List[int] = []
+    new_slot: List[int] = []
+    new_reps: List[Tuple[Tuple[int, int], ...]] = []
+    lost_pages: List[int] = []
+    if rd:
+        for pg in pages.tolist():
+            reps = rd.get(pg)
+            if reps:
+                if peer_alive is not None:
+                    reps = tuple(r for r in reps if peer_alive(r[0]))
+                if reps:
+                    promote.append(pg)
+                    new_peer.append(reps[0][0])
+                    new_slot.append(reps[0][1])
+                    new_reps.append(reps[1:])
+                    continue
+            lost_pages.append(pg)
+    else:
+        lost_pages = pages.tolist()
+    if promote:
+        gpt.map_remote_batch(promote, [peer_t] * len(promote),
+                             new_peer, new_slot, new_reps)
+    if lost_pages:
+        if cold_fetch is not None:
+            for pg in lost_pages:
+                cold_fetch(pg)
+            m = len(lost_pages)
+            gpt.map_remote_batch(lost_pages, [int(Tier.COLD)] * m,
+                                 [-1] * m, [-1] * m, None)
+        else:
+            gpt.drop_remote_batch(lost_pages)
+    return len(promote), len(lost_pages)

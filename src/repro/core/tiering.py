@@ -24,12 +24,14 @@ from repro.core.activity import (ActivityTracker,
                                  PairSampler,
                                  select_victims_random)
 from repro.core.config import OrchestrationConfig, config_from_legacy_kwargs
+from repro.core.faults import PeerHealth, RepairQueue
 from repro.core.migration import MigrationEngine
 from repro.core.page_table import GlobalPageTable, Location, Tier
 from repro.core.policies import CostModel, Policy
 from repro.core.pool import SlotState, ValetMempool
 from repro.core.queues import WritePipeline
-from repro.core.replication import ReplicaPlacer, fail_peer
+from repro.core.replication import (ReplicaPlacer, fail_peer,
+                                    fail_peer_batched)
 from repro.core.reservoir import LatencyStatsMixin
 from repro.core.tiers import DeviceTier
 
@@ -77,6 +79,14 @@ class Stats(LatencyStatsMixin):
     # slot instead of reading a copy from host/remote.  Counted inside
     # local_hits too (after the repoint the page IS local).
     device_hits: int = 0
+    # fault handling (core/faults.py; all zero until a fault is injected,
+    # so the bitwise dataclass-equality parity asserts keep holding):
+    # retry/backoff waits against SUSPECT peers, and re-replication repair
+    # traffic (informational — repair runs off the critical path)
+    retries: int = 0
+    retry_wait_us: float = 0.0
+    repair_pages: int = 0
+    repair_us: float = 0.0
 
     def hit_ratio(self) -> Dict[str, float]:
         n = max(self.local_hits + self.remote_hits + self.host_hits
@@ -197,6 +207,24 @@ class TieredPageStore:
         # cached peer-failed vector (invalidated by fail_peer) — peers only
         # ever fail through fail_peer, so the batch paths never rebuild it
         self._peer_failed = np.zeros(max(n_peers, 1), bool)
+        # fault subsystem (core/faults.py): per-peer health state machine,
+        # the cached SUSPECT vector (placement avoidance + retry/backoff
+        # pricing), and the re-replication repair queue.  All dormant — and
+        # bitwise invisible to the parity suites — until a fault is injected
+        # (mark_suspect / fail_peer / the FaultInjector).
+        self.health = PeerHealth(n_peers,
+                                 suspect_timeout_us=cfg.suspect_timeout_us)
+        self._peer_suspect = np.zeros(max(n_peers, 1), bool)
+        self._any_suspect = False
+        # True while some peer is SUSPECT or REJOINING: the scalar ops poll
+        # the health machine (timeout escalation, rejoin activation) only
+        # behind this flag, keeping the healthy hot path untouched
+        self._health_dirty = False
+        self.repairq = RepairQueue()
+        # the full exponential backoff ladder, paid per access to a SUSPECT
+        # peer: base * (2^0 + 2^1 + ... + 2^(retry_limit-1))
+        self._retry_penalty_us = \
+            cfg.backoff_base_us * ((1 << cfg.retry_limit) - 1)
         # boundary events of the plan-once batch engine install a list here;
         # _reclaim appends every page whose local mapping it drops, so the
         # engine re-classifies exactly the invalidated pages afterwards
@@ -213,7 +241,9 @@ class TieredPageStore:
         dec = lambda bid: bid % (1 << 20)
         self.migrator = MigrationEngine(
             self.gpt, self.tracker,
-            free_counts_fn=lambda: [p.free() for p in self.peers],
+            free_counts_fn=lambda: [
+                0 if self._peer_suspect[i] else p.free()
+                for i, p in enumerate(self.peers)],
             copy_fn=lambda sp, sb, dp_, ds: self._copy_block(sp, dec(sb), dp_, ds),
             alloc_fn=self._alloc_block_slot,
             free_fn=lambda p, b: self._free_block(p, dec(b)),
@@ -276,7 +306,7 @@ class TieredPageStore:
 
     def _alloc_block_slot(self, peer: int) -> Optional[int]:
         p = self.peers[peer]
-        if p.failed or p.free() <= 0:
+        if p.failed or self._peer_suspect[peer] or p.free() <= 0:
             return None
         slot = self._next_block_slot[peer]
         self._next_block_slot[peer] += 1
@@ -370,11 +400,12 @@ class TieredPageStore:
         if not self.policy.use_remote:
             return None
         peers = self.peers
+        susp = self._peer_suspect
         if self._pairs is not None:
             a, b = self._pairs.draw()
             pa, pb = peers[a], peers[b]
-            fa = 0 if pa.failed else pa.capacity - pa.used
-            fb = 0 if pb.failed else pb.capacity - pb.used
+            fa = 0 if pa.failed or susp[a] else pa.capacity - pa.used
+            fb = 0 if pb.failed or susp[b] else pb.capacity - pb.used
             peer, best_free = (a, fa) if fa >= fb else (b, fb)
         elif peers:
             peer, best_free = 0, peers[0].free()
@@ -392,7 +423,8 @@ class TieredPageStore:
             # replicas are allocated at BLOCK granularity alongside the primary
             reps = []
             if self.policy.replication > 0:
-                free = [p.free() for p in peers]
+                free = [0 if susp[j] else p.free()
+                        for j, p in enumerate(peers)]
                 for rp in self.placer.place(peer, free,
                                             self.policy.replication):
                     rslot = self._alloc_block_slot(rp)
@@ -403,6 +435,10 @@ class TieredPageStore:
             # tuple, like the bulk placement path: block_replicas values are
             # immutable once the block closes
             self.block_replicas[blk] = tuple(reps)
+            if len(reps) < self.policy.replication:
+                # degraded from birth (no live peer had room): queue for
+                # background re-replication once the topology improves
+                self.repairq.push(blk)
         self.blocks[blk].append(page)
         self.tracker.touch(self._block_id(*blk), self.step)
         reps = self.block_replicas.get(blk, ())
@@ -475,7 +511,11 @@ class TieredPageStore:
         n_peers = len(peers)
         cap = [p.capacity for p in peers]
         used = [p.used for p in peers]
-        failed = [p.failed for p in peers]
+        # SUSPECT peers are unplaceable exactly like failed ones (the scalar
+        # helper zeroes their free counts the same way), so one merged list
+        # serves every free-count probe below
+        susp = self._peer_suspect
+        failed = [p.failed or bool(susp[j]) for j, p in enumerate(peers)]
         connected = [p.connected for p in peers]
         mapped = [p.mapped_blocks for p in peers]
         next_slot = list(self._next_block_slot)
@@ -572,6 +612,11 @@ class TieredPageStore:
                         entry = [slot, lst, tuple(reps), rep_lists,
                                  peer * (1 << 20) + slot]
                         block_replicas[(peer, slot)] = entry[2]
+                        if len(reps) < repl:
+                            # degraded from birth — same enqueue (and same
+                            # condition) as the scalar helper, so the
+                            # parity traces agree on the repair queue too
+                            self.repairq.push((peer, slot))
                         open_cache[peer] = entry
                 if entry is not None:
                     entry[1].append(pg)
@@ -608,6 +653,8 @@ class TieredPageStore:
     def write(self, page: int) -> float:
         """Write (page-out) one page.  Returns critical-path latency (us)."""
         self.step += 1
+        if self._health_dirty:
+            self._poll_health()
         self.stats.writes += 1
         lat = 0.0
 
@@ -688,6 +735,8 @@ class TieredPageStore:
     def read(self, page: int) -> float:
         """Read (page-in) one page.  Returns critical-path latency (us)."""
         self.step += 1
+        if self._health_dirty:
+            self._poll_health()
         if self.device is not None:
             # device-tier pre-check: a still-resident demoted page becomes
             # LOCAL here, so the classification below counts a local hit
@@ -702,6 +751,11 @@ class TieredPageStore:
             lat = self.costs.remote_read
             if self.policy.receiver_side_cpu:
                 lat += self.costs.receiver_cpu
+            if self._any_suspect and self._peer_suspect[loc.peer]:
+                # SUSPECT peer: the op times out and retries with
+                # exponential backoff — latency degrades, durability
+                # doesn't (the data is still there)
+                lat += self._suspect_penalty()
             self._cache_fill(page)
         elif loc.tier == Tier.HOST or page in self.host_pages:
             self.stats.host_hits += 1
@@ -748,6 +802,21 @@ class TieredPageStore:
         n = pages.size
         lats = np.empty(n, np.float64)
         iw = np.broadcast_to(np.asarray(is_write, bool), (n,))
+        if self._health_dirty:
+            self._poll_health()
+        if self._any_suspect and self.orchestrator is None:
+            # degraded mode: the plan-once engine's cost LUT cannot price
+            # the per-peer retry/backoff ladder, so faulted batches replay
+            # the scalar ops (the async orchestrator is already per-op and
+            # prices the penalty inside read()).  Healthy batches never
+            # reach this branch — the fast paths below stay bitwise intact.
+            if self._lease is not None:
+                self.coordinator.note_activity(self._lease.cid, n)
+            for k in range(n):
+                lats[k] = self.write(int(pages[k])) if iw[k] \
+                    else self.read(int(pages[k]))
+            self.stats.lat.record_many(lats)
+            return lats
         if self.device is not None and self.device.shadow:
             # device-tier pre-pass: repoint still-resident demoted pages this
             # batch will read, so the snapshot below classifies them LOCAL
@@ -1726,9 +1795,19 @@ class TieredPageStore:
             return
         if self.policy.lazy_send:
             self._flush(flush_batch)
+        if self.repairq:
+            # background re-replication repair, off the critical path
+            self._drain_repairs(self.config.repair_rate)
+            if self.repairq and self._lease is not None:
+                note = getattr(self.coordinator, "note_degraded", None)
+                if note is not None:
+                    note(self._lease.cid, len(self.repairq))
         if self.policy.dynamic_pool:
             self.pool.shrink_for_pressure()
-            self.pool.maybe_grow()
+            # admission throttle while degraded: don't grow the local pool
+            # until the repair backlog drains (repairs need peer headroom)
+            if not self.repairq:
+                self.pool.maybe_grow()
         # reclaim only when pool is tight (use-pool-first otherwise)
         if self.pool.free_count() == 0:
             self._reclaim(flush_batch)
@@ -1846,13 +1925,202 @@ class TieredPageStore:
             self.stats.evictions += 1
         return len(victims)
 
+    # -- fault handling (core/faults.py; paper §5.1/§5.3, Table 3) -----------------
+
+    def _peer_alive(self, peer: int) -> bool:
+        return not bool(self._peer_failed[peer])
+
+    def _suspect_penalty(self) -> float:
+        """Price one access against a SUSPECT peer: the op retries
+        ``retry_limit`` times with exponential backoff before succeeding
+        (the peer is slow, not gone)."""
+        self.stats.retries += self.config.retry_limit
+        self.stats.retry_wait_us += self._retry_penalty_us
+        return self._retry_penalty_us
+
+    def _poll_health(self) -> None:
+        """Lazy health poll (runs only while a peer is SUSPECT/REJOINING):
+        escalate timed-out suspects to DOWN, activate rejoined peers that
+        survived to the next access (REJOINING -> UP)."""
+        now = self.stats.time_us
+        for p in self.health.expired_suspects(now):
+            self.fail_peer(p)
+        for p in self.health.rejoining_peers():
+            self.health.activate(p, now)
+        self._any_suspect = bool(self._peer_suspect.any())
+        self._health_dirty = self.health.any_transient()
+
+    def mark_suspect(self, peer: int) -> bool:
+        """Transient fault observed (UP -> SUSPECT): every access to the
+        peer now pays the retry/backoff ladder and no new block lands
+        there, but its data stays readable — latency degrades before
+        durability (the paper's replication-first ordering).  Escalates to
+        DOWN through ``fail_peer`` once ``suspect_timeout_us`` of simulated
+        time passes without a ``clear_suspect``."""
+        if self.peers[peer].failed:
+            return False
+        if not self.health.suspect(peer, now=self.stats.time_us):
+            return False
+        self._peer_suspect[peer] = True
+        self._any_suspect = True
+        self._health_dirty = True
+        return True
+
+    def clear_suspect(self, peer: int) -> bool:
+        """The blip healed (SUSPECT -> UP): penalties stop, placement
+        resumes."""
+        if not self.health.recover(peer, now=self.stats.time_us):
+            return False
+        self._peer_suspect[peer] = False
+        self._any_suspect = bool(self._peer_suspect.any())
+        self._health_dirty = self.health.any_transient()
+        return True
+
     def fail_peer(self, peer: int) -> Tuple[int, int]:
-        """Hard peer failure (fault-tolerance path, Table 3)."""
-        self.peers[peer].failed = True
+        """Hard peer failure (-> DOWN): the batched recovery sweep.
+
+        Every page on the peer is repointed to its first *live* replica
+        (bulk ``map_remote_batch``) or dropped to cold/NONE per the
+        Table-3 mode; stale replica tuples referencing the dead peer are
+        purged from surviving pages; every MR block the peer held is
+        released (its capacity died with it — used returns to 0, and a
+        later ``rejoin_peer`` starts empty); and each block left degraded
+        — a surviving primary that lost a replica, or a promoted
+        ex-replica now holding the only copy — enters the repair queue for
+        background re-replication.  Returns ``(recovered, lost)`` page
+        counts, bitwise identical between the scalar and batched sweeps."""
+        p = self.peers[peer]
+        if p.failed:
+            return 0, 0
+        p.failed = True
         self._peer_failed[peer] = True
-        return fail_peer(self.gpt, peer,
-                         cold_fetch=(lambda pg: None)
-                         if self.policy.cold_backup else None)
+        self.health.down(peer, now=self.stats.time_us)
+        if self._peer_suspect[peer]:
+            self._peer_suspect[peer] = False
+            self._any_suspect = bool(self._peer_suspect.any())
+        self._health_dirty = self.health.any_transient()
+        cold = (lambda pg: None) if self.policy.cold_backup else None
+        sweep = fail_peer_batched if self.batch_reclaim else fail_peer
+        recovered, lost = sweep(self.gpt, peer, cold_fetch=cold,
+                                peer_alive=self._peer_alive)
+        # no surviving page may still carry a replica on the dead peer
+        self.gpt.purge_replicas_on_peer(peer)
+        # release every MR block the peer held, collecting the blocks the
+        # failure degraded: surviving primaries that lost a replica here,
+        # and promoted ex-replicas (now sole copies) the free cascade kept
+        # because pages still resolve to them
+        repair: List[Tuple[int, int]] = []
+        hi = self._next_block_slot[peer]
+        for s in np.flatnonzero(self._blk_live[peer][:hi]).tolist():
+            key = (peer, int(s))
+            prim = self._replica_of.get(key)
+            reps = tuple(self.block_replicas.get(key, ()))
+            self._free_block(peer, int(s), free_replicas=True)
+            if prim is not None and prim in self.blocks:
+                repair.append(prim)
+            for r in reps:
+                if r in self.blocks:
+                    repair.append(r)
+        self._open_block.pop(peer, None)
+        p.connected = False            # a rejoin must reconnect
+        if self.policy.replication > 0:
+            for key in repair:
+                self.repairq.push(key)
+        return recovered, lost
+
+    def rejoin_peer(self, peer: int) -> bool:
+        """A crashed peer came back (DOWN -> REJOINING): its capacity
+        returns empty (the crash lost its contents) and placement may use
+        it immediately — queued repairs re-replicate onto it on the next
+        drain.  The next health poll activates it (REJOINING -> UP)."""
+        p = self.peers[peer]
+        if not p.failed:
+            return False
+        if not self.health.rejoin(peer, now=self.stats.time_us):
+            return False
+        p.failed = False
+        self._peer_failed[peer] = False
+        self._health_dirty = True
+        return True
+
+    def _drain_repairs(self, max_pages: int) -> int:
+        """Drain the re-replication repair queue (off the critical path).
+
+        Pops degraded primary blocks and places fresh replica blocks via
+        the ``ReplicaPlacer`` (DOWN/SUSPECT peers and peers already
+        holding a copy excluded) until each is back at
+        ``policy.replication`` copies or ``max_pages`` pages were copied
+        this round.  A block that cannot be fully repaired — no live peer
+        has room — is re-queued and, when nothing at all is placeable,
+        the round stops instead of spinning: graceful degradation (the
+        store keeps serving from the remaining copies with host/cold
+        spill) until a rejoin or eviction changes the topology.  Returns
+        pages copied; their cost accrues to ``stats.repair_us``, never
+        ``time_us``."""
+        R = self.policy.replication
+        q = self.repairq
+        if R <= 0 or not q:
+            return 0
+        st = self.stats
+        copied = 0
+        blocked: List[Tuple[int, int]] = []
+        page_cost = self.costs.remote_read + self.costs.remote_write
+        susp = self._peer_suspect
+        while q and copied < max_pages:
+            key = q.pop()
+            # the block may have died (eviction / migration / failure) or
+            # become a replica itself since it was queued
+            if key not in self.blocks or key in self._replica_of \
+                    or self.peers[key[0]].failed:
+                continue
+            reps = tuple(self.block_replicas.get(key, ()))
+            deficit = R - len(reps)
+            if deficit <= 0:
+                q.n_repaired += 1
+                continue
+            free = [0 if susp[j] else pr.free()
+                    for j, pr in enumerate(self.peers)]
+            progressed = False
+            for rp in self.placer.place(key[0], free, deficit,
+                                        exclude=[r[0] for r in reps]):
+                rslot = self._alloc_block_slot(rp)
+                if rslot is None:
+                    break
+                blist = list(self.blocks[key])
+                self.blocks[(rp, rslot)] = blist
+                self._replica_of[(rp, rslot)] = key
+                self._blk_replica[rp][rslot] = True
+                reps = reps + ((rp, rslot),)
+                self.block_replicas[key] = reps
+                self.gpt.add_replica_batch(blist, key, (rp, rslot))
+                copied += len(blist)
+                st.repair_pages += len(blist)
+                st.repair_us += len(blist) * page_cost
+                progressed = True
+            if len(reps) < R:
+                blocked.append(key)
+                if not progressed:
+                    break
+            else:
+                q.n_repaired += 1
+        for key in blocked:
+            q.requeue(key)
+        return copied
+
+    def repair_quiesce(self, max_rounds: int = 1 << 10) -> int:
+        """Drain the repair queue to empty (or to a stuck under-provisioned
+        state: no live peer has room).  Test/benchmark barrier — production
+        drains ride the background ticks and the async daemon.  Returns
+        pages copied."""
+        total = 0
+        for _ in range(max_rounds):
+            if not self.repairq:
+                break
+            n = self._drain_repairs(self.config.repair_rate)
+            total += n
+            if n == 0:
+                break
+        return total
 
     # -- local pool pressure (container imbalance, §3.4) ---------------------------
 

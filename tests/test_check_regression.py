@@ -19,7 +19,9 @@ FULL = {"batch_speedup": {"speedup": 4.0},
         "ycsb_a": {"hit_ratio": 0.78},
         "ml_trace": {"speedup": 1.35},
         "mixed_tenant_workload": {"fairness": 0.99},
-        "serve_qps": {"tokens_per_s": 1.2}}
+        "serve_qps": {"tokens_per_s": 1.2},
+        "fault_recovery": {"durability": 1.0,
+                           "degraded_throughput": 0.84}}
 
 
 def test_tracked_covers_workload_suite_keys():
@@ -83,6 +85,37 @@ def test_missing_workload_suite_keys_fail_clearly(tmp_path):
         assert proc.returncode == 1
         assert f"{bench}/{metric} missing from results" in proc.stdout
         assert "Traceback" not in proc.stderr
+
+
+def test_missing_fault_recovery_keys_fail_clearly(tmp_path):
+    """Both fault_recovery keys share one bench entry: dropping it must
+    name each tracked metric, and dropping a single metric from the entry
+    must fail on exactly that key."""
+    partial = {k: v for k, v in FULL.items() if k != "fault_recovery"}
+    proc, _ = run_gate(tmp_path / "bench", partial, FULL)
+    assert proc.returncode == 1
+    assert "fault_recovery/durability missing from results" in proc.stdout
+    assert "fault_recovery/degraded_throughput missing from results" \
+        in proc.stdout
+    assert "Traceback" not in proc.stderr
+    one_short = json.loads(json.dumps(FULL))
+    del one_short["fault_recovery"]["degraded_throughput"]
+    proc, _ = run_gate(tmp_path / "metric", one_short, FULL)
+    assert proc.returncode == 1
+    assert "fault_recovery/degraded_throughput missing from results" \
+        in proc.stdout
+    assert "fault_recovery/durability missing" not in proc.stdout
+    assert "Traceback" not in proc.stderr
+
+
+def test_durability_regression_fails(tmp_path):
+    """Lost pages on a replica-covered crash (durability 1.0 -> 0.7) trip
+    the gate."""
+    bad = json.loads(json.dumps(FULL))
+    bad["fault_recovery"]["durability"] = 0.7
+    proc, _ = run_gate(tmp_path, bad, FULL)
+    assert proc.returncode == 1
+    assert "REGRESSION" in proc.stdout
 
 
 def test_workload_metric_regression_fails(tmp_path):

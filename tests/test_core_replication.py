@@ -1,7 +1,11 @@
 """Replication & fault tolerance (paper §5.1, Table 3)."""
+import copy
+
+import numpy as np
 
 from repro.core import TieredPageStore, POLICIES, PAPER_COSTS
 from repro.core.page_table import GlobalPageTable, Location, Tier
+from repro.core.replication import fail_peer, fail_peer_batched
 
 
 def test_repoint_replica():
@@ -62,6 +66,112 @@ def test_table3_cold_backup_mode():
 
 def _sum_used(store):
     return sum(p.used for p in store.peers)
+
+
+# -- batched recovery sweep: bitwise parity against the scalar reference ------
+
+def _synthetic_gpt(seed=0, n_pages=512, n_peers=5):
+    """A page table mixing every recovery case: replicated pages (some with
+    multiple replicas, some whose replicas sit on other dead peers),
+    unreplicated pages, and pages not on the failed peer at all."""
+    rng = np.random.default_rng(seed)
+    gpt = GlobalPageTable()
+    for pg in range(n_pages):
+        peer = int(rng.integers(0, n_peers))
+        n_reps = int(rng.integers(0, 3))
+        reps = tuple((int(rng.integers(0, n_peers)),
+                      int(rng.integers(0, 64))) for _ in range(n_reps))
+        gpt.map_remote(pg, Location(Tier.PEER, peer=peer,
+                                    slot=int(rng.integers(0, 64)),
+                                    replicas=reps))
+    return gpt
+
+
+def _gpt_state(gpt):
+    hi = len(gpt._r_tier)
+    return (gpt._r_tier[:hi].tolist(), gpt._r_peer[:hi].tolist(),
+            gpt._r_slot[:hi].tolist(), gpt._r_mapped[:hi].tolist(),
+            dict(gpt._replicas))
+
+
+def test_fail_peer_batched_bitwise_parity():
+    """Satellite: the bulk sweep is pinned bitwise against the scalar
+    reference — identical (recovered, lost) and identical page-table state
+    — across cold-fetch modes and a correlated-failure alive filter."""
+    dead_also = {3}
+    for cold in (None, lambda pg: None):
+        for alive in (None, lambda q: q not in dead_also):
+            a = _synthetic_gpt()
+            b = copy.deepcopy(a)
+            ra = fail_peer(a, 1, cold_fetch=cold, peer_alive=alive)
+            rb = fail_peer_batched(b, 1, cold_fetch=cold, peer_alive=alive)
+            assert ra == rb
+            assert _gpt_state(a) == _gpt_state(b)
+    # empty sweep: nothing on the peer
+    g = GlobalPageTable()
+    assert fail_peer_batched(g, 0) == fail_peer(g, 0) == (0, 0)
+
+
+def test_store_fail_peer_parity_scalar_vs_batched():
+    """Store level: batch_reclaim toggles the sweep implementation; the
+    crash outcome and the surviving state must match exactly."""
+    outcomes = []
+    for batched in (False, True):
+        st = TieredPageStore(POLICIES["valet"], PAPER_COSTS,
+                             pool_capacity=128, min_pool=16, n_peers=6,
+                             peer_capacity_blocks=128, pages_per_block=16,
+                             seed=2, batch_reclaim=batched)
+        for p in range(800):
+            st.write(p)
+        st.drain()
+        res = st.fail_peer(1)
+        outcomes.append((res, _gpt_state(st.gpt), sorted(st.blocks),
+                         sorted(st.block_replicas.items()),
+                         sorted(st._replica_of.items()),
+                         sorted(st.repairq._set),
+                         [p.used for p in st.peers]))
+    assert outcomes[0] == outcomes[1]
+
+
+# -- stale replica tuples on survivors are purged -----------------------------
+
+def test_crash_purges_stale_replica_tuples():
+    """Satellite regression: after a crash, no surviving page may keep a
+    replica tuple naming the DOWN peer — a later repoint (second failure)
+    would otherwise promote into dead memory."""
+    st = TieredPageStore(POLICIES["valet"], PAPER_COSTS, pool_capacity=128,
+                         min_pool=16, n_peers=6, peer_capacity_blocks=128,
+                         pages_per_block=16, seed=5)
+    for p in range(800):
+        st.write(p)
+    st.drain()
+    assert any(r[0] == 2 for reps in st.gpt._replicas.values()
+               for r in reps)              # peer 2 actually holds replicas
+    st.fail_peer(2)
+    for pg, reps in st.gpt._replicas.items():
+        assert all(r[0] != 2 for r in reps), (pg, reps)
+    assert all(rep[0] != 2 for rep in st._replica_of)
+    assert all(r[0] != 2 for reps in st.block_replicas.values()
+               for r in reps)
+    # a second failure after the purge promotes only live replicas
+    st.repair_quiesce()
+    rec, lost = st.fail_peer(3)
+    assert lost == 0
+
+
+def test_purge_replicas_on_peer_unit():
+    gpt = GlobalPageTable()
+    gpt.map_remote(0, Location(Tier.PEER, peer=0, slot=1,
+                               replicas=((2, 5), (3, 6))))
+    gpt.map_remote(1, Location(Tier.PEER, peer=1, slot=2,
+                               replicas=((2, 7),)))
+    gpt.map_remote(2, Location(Tier.PEER, peer=1, slot=3,
+                               replicas=((3, 8),)))
+    assert gpt.purge_replicas_on_peer(2) == 2
+    assert gpt._replicas[0] == ((3, 6),)
+    assert 1 not in gpt._replicas          # emptied entry is deleted
+    assert gpt._replicas[2] == ((3, 8),)
+    assert gpt.purge_replicas_on_peer(2) == 0
 
 
 def test_delete_eviction_frees_unreferenced_replica_blocks():

@@ -1,0 +1,333 @@
+"""Fault-injection subsystem (core/faults.py + the store's fault API).
+
+Pins the four layers the recovery benchmark stacks on top of each other:
+
+* the ``PeerHealth`` state machine (legal edges taken, illegal edges are
+  no-ops, SUSPECT deadlines escalate),
+* the store-side degradation semantics — retry/backoff pricing on SUSPECT
+  accesses, placement steering away from sick peers, timeout escalation to
+  a full ``fail_peer``,
+* background re-replication — the repair queue restores
+  ``policy.replication`` after crashes and rejoin storms (asserted by
+  ``check_replication_restored``), degrades gracefully when nothing is
+  placeable, and never touches a healthy run,
+* the deterministic ``FaultInjector`` — replayed seeded schedules produce
+  identical logs, including mid-epoch schedules against the async engine.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (FaultEvent, FaultInjector, HealthState,
+                        InvariantChecker, OrchestrationConfig, PeerHealth,
+                        RepairQueue, TieredPageStore, POLICIES, PAPER_COSTS,
+                        random_schedule, standard_schedule)
+
+
+def make_store(*, pool=128, min_pool=None, n_peers=6, blocks=256, seed=0,
+               async_mode=False, policy="valet", **kw):
+    cfg = OrchestrationConfig(
+        policy=POLICIES[policy], costs=PAPER_COSTS, pool_capacity=pool,
+        min_pool=pool if min_pool is None else min_pool, max_pool=pool,
+        n_peers=n_peers, peer_capacity_blocks=blocks, pages_per_block=16,
+        seed=seed, async_mode=async_mode, **kw)
+    return TieredPageStore.from_config(cfg)
+
+
+def populate(store, n_pages):
+    for p in range(n_pages):
+        store.write(p)
+    store.drain()
+    return store
+
+
+# -- PeerHealth state machine -------------------------------------------------
+
+def test_health_legal_cycle():
+    h = PeerHealth(4, suspect_timeout_us=100.0)
+    assert h.state_of(0) is HealthState.UP
+    assert h.suspect(0, now=10.0)
+    assert h.state_of(0) is HealthState.SUSPECT
+    assert h.recover(0, now=20.0)
+    assert h.state_of(0) is HealthState.UP
+    assert h.down(1, now=30.0)
+    assert h.rejoin(1, now=40.0)
+    assert h.state_of(1) is HealthState.REJOINING
+    assert h.activate(1, now=50.0)
+    assert h.state_of(1) is HealthState.UP
+    # the log carries every taken edge, in order, with timestamps
+    assert [(p, a, b) for p, a, b, _ in h.transitions] == [
+        (0, "UP", "SUSPECT"), (0, "SUSPECT", "UP"), (1, "UP", "DOWN"),
+        (1, "DOWN", "REJOINING"), (1, "REJOINING", "UP")]
+
+
+def test_health_illegal_edges_are_noops():
+    h = PeerHealth(3)
+    assert not h.recover(0, now=0.0)       # UP -> UP via recover
+    assert not h.rejoin(0, now=0.0)        # UP -> REJOINING
+    assert not h.activate(0, now=0.0)      # UP -> UP via activate
+    h.down(1, now=1.0)
+    assert not h.suspect(1, now=2.0)       # DOWN -> SUSPECT
+    assert not h.down(1, now=2.0)          # DOWN -> DOWN
+    assert h.state_of(1) is HealthState.DOWN
+    # a rejoining peer may crash again
+    h.rejoin(1, now=3.0)
+    assert h.down(1, now=4.0)
+
+
+def test_suspect_deadline_expiry():
+    h = PeerHealth(2, suspect_timeout_us=100.0)
+    h.suspect(0, now=50.0)
+    assert h.expired_suspects(now=149.0) == []
+    assert h.expired_suspects(now=150.0) == [0]
+    # recovering clears the deadline
+    h.recover(0, now=60.0)
+    assert h.expired_suspects(now=1e9) == []
+    assert not h.any_transient()
+
+
+def test_repair_queue_dedup_and_counters():
+    q = RepairQueue()
+    assert q.push((0, 1)) and not q.push((0, 1))
+    q.push((1, 2))
+    assert len(q) == 2 and (0, 1) in q
+    assert q.pop() == (0, 1)
+    q.requeue((1, 2))                      # already queued: no-op
+    assert len(q) == 1
+    q.requeue((0, 1))
+    assert q.n_enqueued == 2 and q.n_requeued == 1
+    assert q.pop() == (1, 2) and q.pop() == (0, 1)
+    assert not q
+
+
+def test_fault_event_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        FaultEvent(10, "explode", (0,))
+
+
+# -- store-side degradation ---------------------------------------------------
+
+def _peer_page(st, peer=None):
+    """Drop local copies, return a page resident on ``peer`` (or any)."""
+    st.local_pressure(10_000)
+    for p in range(600):
+        loc = st.gpt.lookup(p)
+        if loc.tier.name == "PEER" and (peer is None or loc.peer == peer):
+            return p, loc.peer
+    raise AssertionError("no PEER-resident page found")
+
+
+def test_suspect_access_pays_retry_backoff():
+    st = populate(make_store(), 600)
+    # every PEER read prices identically; reads promote to local, so each
+    # probe re-pressures and picks a page still resident on the peer
+    pg, peer = _peer_page(st)
+    base = st.read(pg)
+    assert st.mark_suspect(peer)
+    pg2, _ = _peer_page(st, peer)
+    degraded = st.read(pg2)
+    ladder = st.config.backoff_base_us * ((1 << st.config.retry_limit) - 1)
+    assert degraded == pytest.approx(base + ladder)
+    assert st.stats.retries == st.config.retry_limit
+    assert st.stats.retry_wait_us == pytest.approx(ladder)
+    # healing stops the penalty
+    assert st.clear_suspect(peer)
+    pg3, _ = _peer_page(st, peer)
+    assert st.read(pg3) == pytest.approx(base)
+
+
+def test_suspect_peer_excluded_from_placement():
+    st = make_store(pool=32, min_pool=32)
+    assert st.mark_suspect(2)
+    populate(st, 600)
+    assert st.peers[2].used == 0           # nothing landed on the suspect
+    assert sum(p.used for p in st.peers) > 0
+
+
+def test_suspect_timeout_escalates_to_down():
+    st = make_store(suspect_timeout_us=50.0)
+    populate(st, 600)
+    assert st.mark_suspect(1)
+    deadline = st.stats.time_us + 50.0
+    p = 0
+    while st.stats.time_us <= deadline:
+        st.read(p % 600)
+        p += 1
+    st.read(p % 600)                       # first op past the deadline polls
+    assert st.peers[1].failed
+    assert st.health.state_of(1) is HealthState.DOWN
+    InvariantChecker(st).check()           # sweep ran: nothing maps peer 1
+
+
+def test_fail_peer_is_idempotent_and_marks_down():
+    st = populate(make_store(), 600)
+    rec, lost = st.fail_peer(1)
+    assert rec + lost > 0
+    assert st.health.state_of(1) is HealthState.DOWN
+    assert st.fail_peer(1) == (0, 0)       # second crash is a no-op
+
+
+# -- background re-replication repair -----------------------------------------
+
+def test_repair_restores_replication_after_crash():
+    st = populate(make_store(), 800)
+    rec, lost = st.fail_peer(1)
+    assert lost == 0 and len(st.repairq) > 0
+    copied = st.repair_quiesce()
+    assert copied > 0 and not st.repairq
+    assert st.stats.repair_pages == copied
+    chk = InvariantChecker(st)
+    chk.check()
+    chk.check_replication_restored()
+
+
+def test_repair_rides_background_ticks():
+    st = populate(make_store(), 800)
+    st.fail_peer(1)
+    assert st.repairq
+    for _ in range(200):
+        if not st.repairq:
+            break
+        st.background_tick()
+    assert not st.repairq                  # drained without an explicit barrier
+    InvariantChecker(st).check_replication_restored()
+
+
+def test_rejoin_storm_reuses_returned_capacity():
+    st = populate(make_store(), 800)
+    st.fail_peer(1)
+    st.fail_peer(2)
+    assert st.rejoin_peer(1) and st.rejoin_peer(2)
+    assert not st.rejoin_peer(3)           # never failed: no-op
+    st.repair_quiesce()
+    chk = InvariantChecker(st)
+    chk.check()
+    chk.check_replication_restored()
+    st.read(0)                             # health poll activates rejoiners
+    assert st.health.state_of(1) is HealthState.UP
+    assert st.health.state_of(2) is HealthState.UP
+
+
+def test_graceful_degradation_when_nothing_placeable():
+    # two peers total: after one dies there is no distinct peer left to
+    # re-replicate onto — the queue must persist (degraded, not crashed)
+    # and the store keeps serving
+    st = populate(make_store(n_peers=2, blocks=128), 400)
+    rec, lost = st.fail_peer(1)
+    assert lost == 0
+    backlog = len(st.repairq)
+    assert backlog > 0
+    assert st.repair_quiesce() == 0        # zero progress, no spin
+    assert len(st.repairq) == backlog
+    for p in range(400):
+        st.read(p)
+    InvariantChecker(st).check()
+    with pytest.raises(AssertionError):
+        InvariantChecker(st).check_replication_restored()
+
+
+def test_healthy_run_never_touches_fault_counters():
+    st = populate(make_store(), 800)
+    for p in range(800):
+        st.read(p)
+    s = st.stats
+    assert s.retries == 0 and s.retry_wait_us == 0.0
+    assert s.repair_pages == 0 and s.repair_us == 0.0
+    assert not st.repairq and not st.health.transitions
+
+
+# -- deterministic injector ---------------------------------------------------
+
+def _drive_with_injector(st, inj, pages, is_write, chunk=100,
+                         check_every=None):
+    chk = InvariantChecker(st)
+    for i in range(0, len(pages), chunk):
+        st.access_batch(pages[i:i + chunk], is_write[i:i + chunk])
+        st.background_tick()
+        inj.advance(min(chunk, len(pages) - i))
+        if check_every and (i // chunk) % check_every == 0:
+            chk.check()
+    st.drain()
+    st.repair_quiesce()
+    chk.check()
+    return chk
+
+
+def test_injector_replay_is_deterministic():
+    rng = np.random.default_rng(5)
+    pages = rng.integers(0, 600, size=4000, dtype=np.int64)
+    is_write = rng.random(4000) < 0.3
+    logs = []
+    for _ in range(2):
+        st = populate(make_store(seed=9), 600)
+        inj = FaultInjector(st, random_schedule(4000, 6, seed=3))
+        _drive_with_injector(st, inj, pages, is_write)
+        logs.append(list(inj.log))
+    assert logs[0] == logs[1]
+    assert len(logs[0]) == 8 and FaultInjector(object(), []).done
+
+
+def test_standard_schedule_on_sync_store():
+    st = populate(make_store(suspect_timeout_us=1e15), 600)
+    rng = np.random.default_rng(6)
+    pages = rng.integers(0, 600, size=6000, dtype=np.int64)
+    inj = FaultInjector(st, standard_schedule(6000))
+    _drive_with_injector(st, inj, pages, np.zeros(6000, bool))
+    assert inj.done
+    crash_results = [r for _, k, _, r in inj.log if k == "crash"]
+    rec, lost = crash_results[0]
+    assert rec > 0 and lost == 0           # replica-covered single crash
+    InvariantChecker(st).check_replication_restored()
+
+
+def test_mid_epoch_faults_async():
+    """Fault events landing mid-epoch (chunks of 100 vs epoch_len 64) keep
+    every invariant, and recovery completes before the trace ends."""
+    st = populate(make_store(async_mode=True, suspect_timeout_us=1e15), 600)
+    rng = np.random.default_rng(7)
+    pages = rng.integers(0, 600, size=6000, dtype=np.int64)
+    is_write = rng.random(6000) < 0.4
+    inj = FaultInjector(st, standard_schedule(6000))
+    chk = _drive_with_injector(st, inj, pages, is_write, chunk=100,
+                               check_every=5)
+    assert chk.n_checks > 2 and inj.done
+    chk.check_replication_restored()
+    # no page may have silently vanished: replication=1 and only the
+    # correlated two-peer crash can lose pages (primary+replica in the pair)
+    from repro.core.page_table import Tier
+    gone = sum(st.gpt.lookup(p).tier is Tier.NONE for p in range(600))
+    crash_lost = sum(r[1] for _, k, _, r in inj.log if k == "crash")
+    assert gone <= crash_lost
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("async_mode", [False, True])
+def test_randomized_fault_fuzz_keeps_invariants(seed, async_mode):
+    """Seeded random fault schedules (redundant/no-op events included)
+    against zipf traces in both orchestration modes: every invariant holds
+    at every checkpoint, including mid-epoch DOWN transitions while staged
+    flushes are in flight."""
+    st = populate(make_store(async_mode=async_mode,
+                             suspect_timeout_us=2_000.0, seed=seed), 500)
+    rng = np.random.default_rng(100 + seed)
+    pages = (np.clip(rng.zipf(1.3, 5000), 1, 500) - 1).astype(np.int64)
+    is_write = rng.random(5000) < 0.4
+    inj = FaultInjector(st, random_schedule(5000, 6, seed=seed,
+                                            n_events=10))
+    chk = _drive_with_injector(st, inj, pages, is_write, chunk=100,
+                               check_every=4)
+    assert chk.n_checks > 3
+    assert len(inj.log) == 10              # every event fired (maybe no-op)
+
+
+def test_async_daemon_drains_repairs():
+    st = populate(make_store(async_mode=True), 800)
+    st.fail_peer(1)
+    assert st.repairq
+    before = st.stats.daemon_us
+    for _ in range(400):
+        if not st.repairq:
+            break
+        st.background_tick()
+    assert not st.repairq
+    assert st.stats.daemon_us > before     # repairs billed to the daemon
+    InvariantChecker(st).check_replication_restored()
