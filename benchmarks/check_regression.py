@@ -44,6 +44,11 @@ ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
 # replica) and fault_recovery/degraded_throughput the SUSPECT-phase us/op
 # ratio against the healthy baseline (the retry/backoff degradation bound)
 # — both from the seeded sync schedule in benchmarks/fault_recovery.py.
+# cluster_tenant/replica_availability is recovered/(recovered+lost) for a
+# whole-rack correlated crash under strictly cross-domain replica
+# placement (must be 1.0 — the bench also hard-asserts it) and
+# cluster_tenant/fairness Jain's index over the full-run survivor
+# containers' throughput under host churn (benchmarks/cluster_tenant.py).
 TRACKED = [
     ("batch_speedup", "speedup"),
     ("pressure_speedup", "speedup"),
@@ -57,6 +62,8 @@ TRACKED = [
     ("serve_qps", "tokens_per_s"),
     ("fault_recovery", "durability"),
     ("fault_recovery", "degraded_throughput"),
+    ("cluster_tenant", "replica_availability"),
+    ("cluster_tenant", "fairness"),
 ]
 
 

@@ -1,0 +1,203 @@
+"""``bench: cluster_tenant`` — seeded multi-host churn over a cluster pool.
+
+Three hosts (two containers each) register with one ``ClusterCoordinator``;
+every container sees the same seeded heterogeneous peer set — 8 remote
+peers striped over 2 failure domains (racks) via ``draw_peer_profiles``,
+with per-peer extra latency so the scalar per-op pricing path runs.  One
+seeded trace per container is driven round-robin in event-aligned segments
+while the canonical churn schedule fires:
+
+  ~40%  rack crash       — every domain-1 peer drops on every live store.
+        Replica placement is strictly cross-domain, so the crash must lose
+        nothing: ``replica_availability`` (gated ``== 1.0``) is
+        recovered / (recovered + lost) summed over every store's crash
+        log.  With the far rack dead, re-replication has nowhere legal to
+        go — repair backlogs grow, the hosts report degraded, and the
+        cluster sheds their slab admission to floor.
+  ~50%  host failure     — one host dies; ``fail_host`` reclaims its whole
+        slab and opens a recovery-storm window (staggered-backoff grants).
+  ~65%  host rejoin      — the host comes back empty with a fresh
+        coordinator and fresh containers (their dead-rack peers are failed
+        at birth), opening a second storm window.
+  ~70%  rack rejoin      — every dead peer rejoins on every live store;
+        the REJOINING warm-up ramp phases them back into placement while
+        background repair drains the accumulated backlog cross-host.
+
+``fairness`` (gated ``>= 0.9``) is Jain's index over the full-run
+survivors' per-container throughput (ops per simulated us): churn on one
+host must not starve the containers on the others.  The run ends with a
+drain + repair barrier and ``ClusterInvariantChecker
+.check_recovery_converged()`` — cluster slab conservation, every DOWN
+slab reclaimed, per-store invariants including the cross-domain replica
+law, and full replication restored on every surviving store.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import drive_arrays, emit
+from benchmarks.paper_tables import _config, _populate
+from benchmarks.workloads import _jain
+from repro.core import (ClusterCoordinator, ClusterInvariantChecker,
+                        FaultInjector, TieredPageStore, cluster_schedule,
+                        domain_recovery_storm, draw_peer_profiles,
+                        peers_in_domain)
+
+N_OPS = 12_000
+N_PAGES = 1024
+N_HOSTS = 3
+CONTAINERS_PER_HOST = 2
+N_PEERS = 8
+N_DOMAINS = 2
+POOL = 256                      # per-container pool ceiling (pages)
+MIN_POOL = 64                   # per-container floor
+BLOCKS = 1024                   # base peer capacity (profiles scatter it)
+MIN_SLAB = 160                  # per-host floor: 2 container floors + slack,
+                                # small enough that growth must lease slab
+                                # (so the rejoin storm actually gates calls)
+MAX_SLAB = 1024                 # per-host slab lease cap
+CLUSTER_PAGES = 4096            # cluster-wide pool
+SEED = 17
+LATENCY_SCALE_US = 2.0          # heterogeneous per-peer extra read latency
+
+RACK_CRASH = 2 * N_OPS // 5
+HOST_FAIL = N_OPS // 2
+HOST_REJOIN = 13 * N_OPS // 20
+RACK_REJOIN = 7 * N_OPS // 10
+
+
+def _trace(seed: int, n_ops: int):
+    rng = np.random.default_rng(seed)
+    pages = rng.integers(0, N_PAGES, size=n_ops, dtype=np.int64)
+    is_write = rng.random(n_ops) < 0.3
+    return pages, is_write
+
+
+def cluster_tenant(rows):
+    """``bench: cluster_tenant`` — gated replica availability + fairness."""
+    profiles = draw_peer_profiles(N_PEERS, N_DOMAINS, seed=SEED,
+                                  base_capacity_blocks=BLOCKS,
+                                  latency_scale_us=LATENCY_SCALE_US)
+    domains = [p.domain for p in profiles]
+    rack = max(domains)
+    rack_peers = peers_in_domain(domains, rack)
+
+    cluster = ClusterCoordinator(CLUSTER_PAGES)
+    stores_by_host = {}
+    containers = []
+
+    def _mk_store(coord, name, seed):
+        return TieredPageStore.from_config(
+            _config("valet", pool=POOL, min_pool=MIN_POOL, peers=N_PEERS,
+                    blocks=BLOCKS, seed=seed, coordinator=coord,
+                    container_name=name, peer_profiles=profiles))
+
+    def _add_container(coord, hid, name, seed, start, events, pre_fail=()):
+        st = _mk_store(coord, name, seed)
+        for p in pre_fail:             # born into a cluster with a dead rack
+            st.fail_peer(p)
+        _populate(st, N_PAGES)
+        st.drain()
+        containers.append({
+            "name": name, "hid": hid, "store": st, "start": start,
+            "trace": _trace(seed, N_OPS - start), "alive": True,
+            "sim_us": 0.0, "ops": 0,
+            "inj": FaultInjector(st, events, ops=start),
+        })
+        stores_by_host[hid].append(st)
+
+    for h in range(N_HOSTS):
+        coord = cluster.register_host(min_slab=MIN_SLAB, max_slab=MAX_SLAB,
+                                      name=f"host{h}")
+        hid = coord.host_id
+        stores_by_host[hid] = []
+        for c in range(CONTAINERS_PER_HOST):
+            _add_container(coord, hid, f"h{h}c{c}", SEED + 10 * h + c,
+                           0, cluster_schedule(N_OPS, domains,
+                                               crash_domain=rack))
+    fail_hid = max(stores_by_host)     # the last host is the churn victim
+
+    cuts = sorted({0, RACK_CRASH, HOST_FAIL, HOST_REJOIN, RACK_REJOIN,
+                   N_OPS})
+    for a, b in zip(cuts, cuts[1:]):
+        for cont in containers:
+            if not cont["alive"]:
+                continue
+            st = cont["store"]
+            lo, hi = a - cont["start"], b - cont["start"]
+            pages, is_write = cont["trace"]
+            t0 = st.stats.time_us
+            drive_arrays(st, pages[lo:hi], is_write[lo:hi],
+                         tick_every=256, batch=256)
+            cont["sim_us"] += st.stats.time_us - t0
+            cont["ops"] += hi - lo
+            cont["inj"].advance(b - a)
+        if b == HOST_FAIL:
+            cluster.fail_host(fail_hid)
+            for cont in containers:
+                if cont["hid"] == fail_hid:
+                    cont["alive"] = False
+        elif b == HOST_REJOIN:
+            coord = cluster.rejoin_host(fail_hid)
+            stores_by_host[fail_hid] = []
+            for c in range(CONTAINERS_PER_HOST):
+                # rack is still dead when the host comes back: its fresh
+                # containers fail those peers at birth and rejoin them via
+                # their own (already-partly-elapsed) schedule
+                _add_container(
+                    coord, fail_hid, f"h{fail_hid}r{c}",
+                    SEED + 100 + c, HOST_REJOIN,
+                    domain_recovery_storm(domains, rack, RACK_REJOIN),
+                    pre_fail=rack_peers)
+
+    live = [c for c in containers if c["alive"]]
+    for cont in live:
+        cont["store"].drain()
+        cont["store"].repair_quiesce()
+    ClusterInvariantChecker(cluster, stores_by_host) \
+        .check_recovery_converged()
+
+    # gated: the rack crash must lose nothing (strict cross-domain replicas)
+    crashes = [(op, peer, res) for c in containers
+               for (op, kind, peer, res) in c["inj"].log if kind == "crash"]
+    recovered = sum(r[2][0] for r in crashes)
+    lost = sum(r[2][1] for r in crashes)
+    availability = recovered / max(recovered + lost, 1)
+    assert lost == 0, f"rack crash lost {lost} replicated pages"
+
+    # gated: churn on one host must not starve the survivors on the others
+    survivors = [c for c in live if c["start"] == 0]
+    tputs = [c["ops"] / max(c["sim_us"], 1e-9) for c in survivors]
+    fairness = _jain(tputs)
+    assert fairness >= 0.9, f"survivor fairness collapsed: {fairness:.3f}"
+
+    cs = cluster.stats
+    total_ops = sum(c["ops"] for c in containers)
+    total_us = sum(c["sim_us"] for c in containers)
+    art = {
+        "replica_availability": availability,       # gated == 1.0
+        "fairness": fairness,                       # gated >= 0.9
+        "recovered": recovered, "lost": lost,
+        "us_per_op": total_us / max(total_ops, 1),
+        "survivor_tputs": tputs,
+        "containers": {c["name"]: {"ops": c["ops"],
+                                   "sim_us": c["sim_us"],
+                                   "alive": c["alive"]}
+                       for c in containers},
+        "cluster": {
+            "n_storms": cs.n_storms,
+            "n_storm_denials": cs.n_storm_denials,
+            "storm_wait_us": cs.storm_wait_us,
+            "n_slab_lease_calls": cs.n_slab_lease_calls,
+            "pages_slab_leased": cs.pages_slab_leased,
+            "n_degraded_reports": cs.n_degraded_reports,
+            "n_degraded_clears": cs.n_degraded_clears,
+            "n_host_failures": cs.n_host_failures,
+            "n_host_rejoins": cs.n_host_rejoins,
+        },
+    }
+    emit(rows, "cluster_tenant/cluster", art["us_per_op"],
+         replica_availability=round(availability, 4),
+         fairness=round(fairness, 4),
+         storms=cs.n_storms, storm_denials=cs.n_storm_denials)
+    return art

@@ -42,6 +42,7 @@ BENCHES = [
     ("roofline", "roofline_table", "run"),
     ("serve_qps", "serve_qps", "serve_qps"),
     ("fault_recovery", "fault_recovery", "fault_recovery"),
+    ("cluster_tenant", "cluster_tenant", "cluster_tenant"),
 ]
 
 BENCH_NAMES = [name for name, _, _ in BENCHES]

@@ -27,7 +27,8 @@ from repro.core import TieredPageStore, OrchestrationConfig, POLICIES, \
 from repro.data.workloads import (MLTraceConfig, MixedTenantConfig,
                                   YCSBConfig, interleave_tenants,
                                   mixed_tenant_traces, ml_trace,
-                                  phase_segments, ycsb_trace)
+                                  phase_segments, tenant_lifetimes,
+                                  ycsb_trace)
 
 PAGE_KIB = 4                      # the paper's 4 KiB page
 _GIB_PAGES = (1 << 30) // (PAGE_KIB << 10)    # pages per GB of slab
@@ -265,4 +266,104 @@ def mixed_tenant_workload(rows):
          speedup=round(art["speedup"], 2),
          fairness=round(art["fairness"], 3),
          thr_per_gb=round(thr_per_gb))
+    art["churn"] = _mixed_tenant_churn(rows)
+    return art
+
+
+def _mixed_tenant_churn(rows):
+    """Tenant-churn sub-run (ROADMAP item 5 follow-up, reported not gated):
+    the same coordinated slab plus one churn KV tenant that registers with
+    the coordinator when its lifetime window opens and deregisters (whole
+    lease, floor included, back to the slab) when it closes.  Asserts op
+    conservation — every tenant drives exactly its trace, churn included —
+    and the coordinator's slab-conservation invariants after the leave."""
+    from repro.core.coordinator import HostMemoryCoordinator
+
+    cfg = MixedTenantConfig(churn_kv=(
+        YCSBConfig("A", n_pages=512, n_ops=6_000, seed=21),))
+    traces = mixed_tenant_traces(cfg)
+    segments = [phase_segments(tr) for tr in traces]
+    lifetimes = tenant_lifetimes(cfg)
+    n_tenants = len(traces)
+    n_phases = len(segments[0])
+    total = 1536
+    min_pool = 64
+    max_pool = total - (n_tenants - 1) * min_pool
+
+    coord = HostMemoryCoordinator(total)
+    stores = [None] * n_tenants
+    driven = [0] * n_tenants
+    t0 = [0.0] * n_tenants
+    sim_us = [0.0] * n_tenants
+
+    def admit(t):
+        st = TieredPageStore.from_config(OrchestrationConfig(
+            policy=POLICIES["valet"], costs=PAPER_COSTS,
+            pool_capacity=total, min_pool=min_pool, max_pool=max_pool,
+            n_peers=4, peer_capacity_blocks=2048, pages_per_block=16,
+            seed=t, grow_step=128, coordinator=coord,
+            container_name=traces[t].name))
+        # pre-touch the tenant's page space so its measured slices never
+        # pay first-touch cold reads, then reset the measured window
+        n = traces[t].n_pages
+        st.access_batch(np.arange(n, dtype=np.int64), np.ones(n, bool))
+        st.background_tick()
+        st.drain()
+        st.stats.lat.reset()
+        stores[t] = st
+        t0[t] = st.stats.time_us
+
+    def retire(t):
+        st = stores[t]
+        st.drain()
+        sim_us[t] = st.stats.time_us - t0[t]
+        coord.deregister(st._lease.cid)
+        stores[t] = None
+
+    for ph in range(n_phases):
+        for t in range(n_tenants):
+            if stores[t] is None and lifetimes[t][0] == ph:
+                admit(t)
+        live = [t for t in range(n_tenants) if stores[t] is not None]
+        arrs = [(t, *segments[t][ph]) for t in live]
+        sched = interleave_tenants([end - start for _, start, end in arrs],
+                                   cfg.slice_ops)
+        for k, i, j in sched:
+            t, start, _ = arrs[k]
+            tr = traces[t]
+            stores[t].access_batch(tr.pages[start + i:start + j],
+                                   tr.is_write[start + i:start + j])
+            stores[t].background_tick()
+            driven[t] += j - i
+        for t in range(n_tenants):
+            if stores[t] is not None and lifetimes[t][1] == ph + 1:
+                retire(t)
+    for t in range(n_tenants):
+        if stores[t] is not None:
+            retire(t)
+
+    # op conservation: churn included, every tenant drove its whole trace
+    for t, tr in enumerate(traces):
+        assert driven[t] == len(tr), \
+            f"tenant {tr.name}: drove {driven[t]} of {len(tr)} ops"
+    coord.check_invariants()
+    assert coord.stats.n_deregistrations == n_tenants, \
+        "every tenant must have deregistered cleanly"
+
+    thr = [len(tr) / max(sim_us[t], 1e-9) for t, tr in enumerate(traces)]
+    n_base = n_tenants - len(cfg.churn_kv)
+    art = {
+        "tenants": [tr.name for tr in traces],
+        "lifetimes": [list(lt) for lt in lifetimes],
+        "ops": driven,
+        "per_tenant_sim_us": sim_us,
+        # fairness across the full-run tenants (ops per simulated us);
+        # the churn tenant's throughput is reported alongside
+        "fairness_base": _jain(thr[:n_base]),
+        "churn_throughput": thr[n_base:],
+        "n_deregistrations": coord.stats.n_deregistrations,
+    }
+    emit(rows, "mixed_tenant_workload/churn", sum(sim_us) / 1e3,
+         fairness_base=round(art["fairness_base"], 3),
+         churn_ops=sum(driven[n_base:]))
     return art

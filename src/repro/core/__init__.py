@@ -14,7 +14,13 @@ from repro.core.replication import (ReplicaPlacer, FaultConfig, fail_peer,
 from repro.core.faults import (HealthState, PeerHealth, RepairQueue,
                                FaultEvent, FaultInjector, transient_blip,
                                crash, correlated_crash, recovery_storm,
-                               standard_schedule, random_schedule)
+                               standard_schedule, random_schedule,
+                               peers_in_domain, domain_correlated_crash,
+                               domain_recovery_storm, cluster_schedule)
+from repro.core.cluster import (ClusterCoordinator, ClusterStats,
+                                ClusterInvariantChecker, HostRecord,
+                                HostState, PeerProfile, draw_peer_profiles,
+                                profile_domains)
 from repro.core.policies import (Policy, CostModel, POLICIES, VALET,
                                  VALET_MASS, INFINISWAP, NBDX, OS_SWAP,
                                  PAPER_COSTS, TPU_COSTS)

@@ -252,10 +252,9 @@ class AsyncOrchestrator:
                 charged = (st.repair_us - before) / self.FLUSH_PIPELINE_DEPTH
                 self.daemon_clock = max(self.daemon_clock, now) + charged
                 st.daemon_us += charged
-            if store.repairq and store._lease is not None:
-                note = getattr(store.coordinator, "note_degraded", None)
-                if note is not None:
-                    note(store._lease.cid, len(store.repairq))
+        # keep the coordinator's degraded-admission signal in sync (note
+        # while the backlog persists, clear_degraded once it drains)
+        store._report_repair_backlog()
         # 2. pool sizing (same cadence as the sync background_tick)
         if store.policy.dynamic_pool:
             store.pool.shrink_for_pressure()

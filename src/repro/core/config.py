@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import warnings
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Tuple
 
 from repro.core.policies import (CostModel, Policy, PAPER_COSTS, VALET)
 
@@ -79,6 +79,18 @@ class OrchestrationConfig:
     # re-replication repair drain rate: pages copied per background tick
     # (sync) or per daemon slice (async)
     repair_rate: int = 256
+
+    # -- cluster-scale knobs (core/cluster.py) ---------------------------
+    # heterogeneous remote peers: a tuple of ``PeerProfile``s (one per
+    # peer: extra latency, capacity override, failure domain — see
+    # ``draw_peer_profiles``).  None keeps the flat homogeneous peer set —
+    # bitwise identical to every pre-cluster run.
+    peer_profiles: Optional[Tuple[Any, ...]] = None
+    # REJOINING warm-up: a rejoined peer's advertised free capacity ramps
+    # linearly over its first ``rejoin_ramp_grants`` block grants instead
+    # of re-entering placement at full weight.  Only activates after a
+    # rejoin event, so fault-free runs are unaffected.  0 disables.
+    rejoin_ramp_grants: int = 16
 
     # -- device tier / zero-restore (PR 8) -------------------------------
     # trace store: remember reclaimed pages' slots and repoint on re-access

@@ -73,6 +73,9 @@ class CoordinatorStats:
     n_peer_pressure_events: int = 0   # coordinated remote-pressure fan-outs
     peer_blocks_freed: int = 0        # MR blocks freed across containers
     n_degraded_reports: int = 0       # repair-backlog reports (fault path)
+    n_degraded_clears: int = 0        # backlog-drained un-throttle events
+    n_degraded_denials: int = 0       # lease asks shed to floor while degraded
+    n_deregistrations: int = 0        # containers that left mid-run (churn)
 
 
 class LeaseClient:
@@ -125,6 +128,11 @@ class HostMemoryCoordinator:
         # schedule deterministic.
         self._cooldown: Dict[int, int] = {}
         self.stats = CoordinatorStats()
+        # cluster federation (core.cluster): set by
+        # ClusterCoordinator.register_host.  With no cluster attached every
+        # path below is bitwise identical to the standalone coordinator.
+        self.cluster = None
+        self.host_id: Optional[int] = None
 
     # -- registration --------------------------------------------------------
 
@@ -134,9 +142,15 @@ class HostMemoryCoordinator:
         """Admit a container: reserve its ``min_pages`` floor immediately.
 
         Raises if the floor does not fit the remaining slab — admission
-        control is what makes the no-starvation guarantee possible."""
+        control is what makes the no-starvation guarantee possible.  With
+        tenant churn a joiner may find the slab fully grown, so a short
+        floor first arbitrates against the existing donors (idle-first,
+        the same two-pass weighted-fair reclamation lease shortfalls use)
+        before admission is refused."""
         assert 0 < min_pages <= max_pages
         assert weight > 0
+        if min_pages > self._free:
+            self._reclaim_for(self._next_cid, min_pages - self._free)
         if min_pages > self._free:
             raise ValueError(
                 f"cannot admit container ({min_pages} floor pages): only "
@@ -149,6 +163,19 @@ class HostMemoryCoordinator:
         self._free -= min_pages
         self._containers[cid] = rec
         return LeaseClient(self, cid)
+
+    def deregister(self, cid: int) -> int:
+        """A container leaves (tenant churn): its whole lease — floor
+        included — returns to the slab, and every cooldown resets (the
+        donor landscape visibly changed).  Returns the pages reclaimed."""
+        rec = self._containers.pop(cid)
+        returned = rec.leased
+        self._free += returned
+        self._cooldown.clear()
+        self.stats.n_deregistrations += 1
+        if rec.degraded_blocks > 0:
+            self._forward_degraded()
+        return returned
 
     def set_donor(self, cid: int, donate_cb: Callable[[int], int],
                   size_fn: Optional[Callable[[], int]] = None) -> None:
@@ -183,13 +210,36 @@ class HostMemoryCoordinator:
 
     def note_degraded(self, cid: int, n_blocks: int) -> None:
         """A container reports its re-replication backlog (blocks still
-        below their replication factor after a drain round).  The
-        coordinator records it as an admission-throttle signal — a degraded
-        container's lease asks arbitrate against a live repair debt, and
-        operators can watch ``stats.n_degraded_reports`` /
-        ``ContainerRecord.degraded_blocks`` for stuck repairs."""
+        below their replication factor after a drain round).  The report
+        is a live admission throttle: while ``degraded_blocks > 0`` the
+        container's lease grants are shed to its ``min_pages`` floor (no
+        growth on top of an unrepaired backlog), and operators can watch
+        ``stats.n_degraded_reports`` / ``ContainerRecord.degraded_blocks``
+        for stuck repairs.  ``clear_degraded`` releases the throttle when
+        the repair queue drains."""
         self._containers[cid].degraded_blocks = int(n_blocks)
         self.stats.n_degraded_reports += 1
+        self._forward_degraded()
+
+    def clear_degraded(self, cid: int) -> None:
+        """The container's repair backlog drained (its ``RepairQueue``
+        emptied): drop the admission throttle so growth resumes.  Without
+        this release path a container that ever reported degraded would be
+        pinned at its floor forever."""
+        rec = self._containers[cid]
+        if rec.degraded_blocks == 0:
+            return
+        rec.degraded_blocks = 0
+        self.stats.n_degraded_clears += 1
+        self._forward_degraded()
+
+    def _forward_degraded(self) -> None:
+        """Aggregate the per-container backlog and fan it in to the cluster
+        coordinator (storm admission watches per-host degradation)."""
+        if self.cluster is None:
+            return
+        total = sum(r.degraded_blocks for r in self._containers.values())
+        self.cluster.note_host_degraded(self.host_id, total)
 
     # -- accounting ----------------------------------------------------------
 
@@ -211,7 +261,22 @@ class HostMemoryCoordinator:
                         for r in self._containers.values()
                         if r.cid != cid and r.donate_cb is not None
                         and r.leased > r.min_pages)
-        return self._free + own + donatable
+        headroom = 0 if self.cluster is None \
+            else self.cluster.headroom_for(self.host_id)
+        return self._free + own + donatable + headroom
+
+    def grantable_for(self, cid: int) -> int:
+        """Lower bound on what ``lease(cid, ...)`` would grant right now
+        without reclamation: the free slab capped at the container's lease
+        room — shed to its floor deficit while it reports a repair backlog
+        (the degraded admission throttle).  The batch planner's capacity
+        prediction uses this instead of the bare free count so it never
+        promises growth the throttle will refuse."""
+        rec = self._containers[cid]
+        room = rec.max_pages - rec.leased
+        if rec.degraded_blocks > 0:
+            room = min(room, max(rec.min_pages - rec.leased, 0))
+        return max(0, min(room, self._free))
 
     def fair_share(self, cid: int) -> int:
         """Weighted fair allocation: the floor plus this container's weight
@@ -233,6 +298,15 @@ class HostMemoryCoordinator:
         rec = self._containers[cid]
         self.stats.n_lease_calls += 1
         want = min(want, rec.max_pages - rec.leased)
+        if rec.degraded_blocks > 0:
+            # degraded-mode shedding: a live repair backlog caps grants at
+            # the min_pages floor (already reserved at register), so a
+            # container cannot grow on top of unreplicated blocks.
+            # clear_degraded lifts the cap when the backlog drains.
+            capped = min(want, max(rec.min_pages - rec.leased, 0))
+            if capped < want:
+                self.stats.n_degraded_denials += 1
+            want = capped
         if want <= 0:
             return 0
         if want > self._free:
@@ -241,6 +315,14 @@ class HostMemoryCoordinator:
                 self._cooldown[cid] = cd - 1
             elif self._reclaim_for(cid, want - self._free) == 0:
                 self._cooldown[cid] = self.FUTILE_COOLDOWN
+            if want > self._free and self.cluster is not None:
+                # still short after local arbitration: ask the cluster pool
+                # for more slab (storm admission may stagger or deny this).
+                got = self.cluster.lease_slab(self.host_id,
+                                              want - self._free)
+                if got > 0:
+                    self.total_pages += got
+                    self._free += got
         granted = min(want, self._free)
         if granted < want:
             self.stats.n_partial_grants += 1

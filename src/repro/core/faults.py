@@ -35,7 +35,7 @@ from __future__ import annotations
 import enum
 from dataclasses import dataclass, field
 from collections import deque
-from typing import Iterable, List, Sequence, Set, Tuple
+from typing import Iterable, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -291,6 +291,50 @@ def standard_schedule(n_ops: int, *, blip_peer: int = 0,
     evs += correlated_crash(correlated_peers, 3 * n_ops // 5)
     evs += recovery_storm((crash_peer,) + tuple(correlated_peers),
                           3 * n_ops // 4)
+    return evs
+
+
+def peers_in_domain(domains: Sequence[int], domain: int) -> Tuple[int, ...]:
+    """Every peer id in one failure domain (rack) — the unit a correlated
+    failure takes out.  ``domains`` maps peer -> domain id (see
+    ``cluster.PeerProfile`` / ``draw_peer_profiles``)."""
+    return tuple(p for p, d in enumerate(domains) if d == domain)
+
+
+def domain_correlated_crash(domains: Sequence[int], domain: int,
+                            at_op: int) -> List[FaultEvent]:
+    """Rack-scale correlated crash: every peer in ``domain`` drops at one
+    op.  With strictly cross-domain replica placement this must never lose
+    a replicated page — the cluster benchmark gates exactly that."""
+    peers = peers_in_domain(domains, domain)
+    assert peers, f"failure domain {domain} holds no peers"
+    return correlated_crash(peers, at_op)
+
+
+def domain_recovery_storm(domains: Sequence[int], domain: int,
+                          at_op: int) -> List[FaultEvent]:
+    """The whole rack rejoins at once — the cross-host repair-drain and
+    storm-admission stress case."""
+    peers = peers_in_domain(domains, domain)
+    assert peers, f"failure domain {domain} holds no peers"
+    return recovery_storm(peers, at_op)
+
+
+def cluster_schedule(n_ops: int, domains: Sequence[int], *,
+                     crash_domain: Optional[int] = None
+                     ) -> List[FaultEvent]:
+    """The canonical cluster churn schedule (``cluster_tenant`` benchmark
+    and the cross-host convergence tests), scaled to an ``n_ops`` trace:
+
+      phase 1 (~40%): correlated crash of one whole failure domain
+      phase 2 (~70%): rack-wide recovery storm — every dead peer rejoins
+
+    ``crash_domain`` defaults to the highest domain id (by convention the
+    far rack).  Identical inputs yield an identical schedule."""
+    if crash_domain is None:
+        crash_domain = max(domains)
+    evs = domain_correlated_crash(domains, crash_domain, 2 * n_ops // 5)
+    evs += domain_recovery_storm(domains, crash_domain, 7 * n_ops // 10)
     return evs
 
 

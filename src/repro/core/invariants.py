@@ -83,6 +83,7 @@ class InvariantChecker:
         self._check_gpt_block_containment()
         self._check_host_tier()
         self._check_peer_health()
+        self._check_domain_disjointness()
 
     # -- 1. no lost writes ----------------------------------------------------
 
@@ -265,6 +266,29 @@ class InvariantChecker:
                 if rep[0] in failed:
                     _fail(f"replica block {rep} lives on DOWN peer "
                           f"{rep[0]}")
+
+    # -- 6b. failure-domain disjointness (cluster-scale placement) ------------
+
+    def _check_domain_disjointness(self):
+        """With failure domains configured (``peer_profiles``), every
+        replica of every block lives in a domain distinct from its
+        primary's and from every sibling replica's — the law that makes a
+        correlated rack failure survivable.  Unconditional because the
+        placer has no same-domain fallback (a short replica set goes to
+        the repair queue instead).  No-op on flat peer sets."""
+        s = self.store
+        doms = getattr(s, "_peer_domain", None)
+        if doms is None:
+            return
+        for prim, reps in s.block_replicas.items():
+            seen = {doms[prim[0]]}
+            for r in reps:
+                d = doms[r[0]]
+                if d in seen:
+                    _fail(f"block {prim} (domain {doms[prim[0]]}) has "
+                          f"replica {tuple(r)} in an already-occupied "
+                          f"failure domain {d}")
+                seen.add(d)
 
     # -- 7. repair quiesced => replication restored (opt-in barrier) ----------
 

@@ -80,6 +80,15 @@ class MigrationEngine:
         self.rng = rng or np.random.default_rng(0)
         self.completed: List[Migration] = []
         self.aborted: List[Migration] = []
+        # failure-domain awareness (core/cluster.py): ``domains`` maps peer
+        # -> failure-domain id and ``replica_peers_fn(block) -> peers``
+        # reports where a block's replicas live.  When both are set, a
+        # migration never lands a primary in a domain already holding one
+        # of its replicas (the correlated-rack-failure guarantee survives
+        # migration).  Left at None, destination choice is untouched —
+        # bitwise identical draws.
+        self.domains: Optional[Sequence[int]] = None
+        self.replica_peers_fn: Optional[Callable[[int], Sequence[int]]] = None
         # counters
         self.n_migrated_blocks = 0
         self.n_migrated_pages = 0
@@ -115,20 +124,39 @@ class MigrationEngine:
 
     # -- destination selection --------------------------------------------------
 
-    def _choose_destination(self, src_peer: int,
-                            free: Sequence[int]) -> Optional[int]:
+    def _choose_destination(self, src_peer: int, free: Sequence[int],
+                            avoid_domains: Sequence[int] = ()
+                            ) -> Optional[int]:
         """p2c over free counts; if both sampled peers are pressured, fall
         back to a full scan (freest peer wins, lowest id breaks ties) before
         giving up — repeated pressure no longer aborts into eviction while a
-        free peer exists."""
-        dst = power_of_two_choices(free, self.rng, exclude=[src_peer])
+        free peer exists.  ``avoid_domains`` (failure-domain ids) strikes
+        whole racks from both the p2c draw and the fallback scan."""
+        exclude = [src_peer]
+        if avoid_domains and self.domains is not None:
+            bad = set(avoid_domains)
+            exclude += [p for p, d in enumerate(self.domains)
+                        if d in bad and p != src_peer]
+        dst = power_of_two_choices(free, self.rng, exclude=exclude)
         if dst is not None and free[dst] > 0:
             return dst
+        barred = set(exclude)
         best, best_free = None, 0
         for i, f in enumerate(free):
-            if i != src_peer and f > best_free:
+            if i not in barred and f > best_free:
                 best, best_free = i, f
         return best
+
+    def _avoid_domains_for(self, block: int, pages: Sequence[int]
+                           ) -> Sequence[int]:
+        """Failure domains holding a replica of this block's pages — the
+        migrated primary must not join them.  Empty when domain awareness
+        is off."""
+        if self.domains is None or self.replica_peers_fn is None:
+            return ()
+        return sorted({self.domains[p]
+                       for p in self.replica_peers_fn(block)
+                       if 0 <= p < len(self.domains)})
 
     # -- one block migration ---------------------------------------------------
 
@@ -138,8 +166,10 @@ class MigrationEngine:
                         dst_peer=-1)
 
         # 2. destination: power-of-two-choices over free counts, != source
+        # (and, with domain awareness, != any rack holding a replica)
         free = list(self.free_counts_fn())
-        dst = self._choose_destination(src_peer, free)
+        dst = self._choose_destination(src_peer, free,
+                                       self._avoid_domains_for(block, pages))
         if dst is None:
             mig.phase = Phase.ABORTED
             mig.log.append(Message("sender", "sender", "NO_DESTINATION"))
@@ -224,7 +254,9 @@ class MigrationEngine:
             mig = Migration(block=blk, pages=pages, src_peer=src_peer,
                             dst_peer=-1)
             migs.append(mig)
-            dst = self._choose_destination(src_peer, free)
+            dst = self._choose_destination(src_peer, free,
+                                           self._avoid_domains_for(blk,
+                                                                   pages))
             if dst is None:
                 mig.phase = Phase.ABORTED
                 mig.log.append(Message("sender", "sender", "NO_DESTINATION"))

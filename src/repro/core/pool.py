@@ -412,11 +412,21 @@ class ValetMempool:
         pages from the free slab into its own lease) and under weighted-fair
         reclamation (a donor's release moves its excess into the free slab),
         so the host cap is read once and holds for the whole simulation.
-        Nothing here mutates the coordinator."""
+        Nothing here mutates the coordinator.
+
+        The budget must be what ``lease()`` would actually grant, not the
+        bare free count: a degraded container's grants are shed to its
+        ``min_pages`` floor, so promising free-slab growth to it makes the
+        alloc path's deficit mode overrun (``grantable_for`` folds the
+        throttle in; for healthy containers it is the free slab capped at
+        the lease room, which the ``cap_sz`` clamp below already implies —
+        bitwise-identical predictions)."""
         coord = getattr(self.lease, "coordinator", None)
         if coord is None:
             return free                 # unknown lease backend: free is safe
-        budget = coord.free()
+        grantable = getattr(coord, "grantable_for", None)
+        budget = coord.free() if grantable is None \
+            else grantable(self.lease.cid)
         host_cap = int(self.free_memory_fn() * self.HOST_FREE_FRACTION)
         cap_sz = min(self.max_pages, max(host_cap, self.min_pages))
         # pre-grows repeat in grow_step chunks until the size cap or the

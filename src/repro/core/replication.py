@@ -26,22 +26,44 @@ class FaultConfig:
 
 
 class ReplicaPlacer:
-    """Choose replica peers distinct from the primary (p2c per replica)."""
+    """Choose replica peers distinct from the primary (p2c per replica).
 
-    def __init__(self, rng: Optional[np.random.Generator] = None):
+    With ``domains`` set (peer -> failure-domain id, e.g. rack), placement
+    is *strictly* cross-domain: a replica never lands in the same failure
+    domain as the primary or any earlier copy, so one correlated rack
+    failure cannot take out every copy.  When no cross-domain peer has
+    room the replica set comes up short — the caller's existing
+    short-replica path (repair-queue push) owns convergence, which keeps
+    the domain-disjointness invariant unconditional instead of
+    "unless we fell back".  ``domains=None`` adds no exclusions and no
+    extra rng draws — bitwise-identical placement to the flat placer.
+    """
+
+    def __init__(self, rng: Optional[np.random.Generator] = None,
+                 domains: Optional[Sequence[int]] = None):
         self.rng = rng or np.random.default_rng(1)
+        self.domains = list(domains) if domains is not None else None
+
+    def _domain_peers(self, taken: Sequence[int]) -> List[int]:
+        """Every peer sharing a failure domain with any peer in ``taken``."""
+        dom = self.domains
+        bad = {dom[q] for q in taken if 0 <= q < len(dom)}
+        return [p for p, d in enumerate(dom) if d in bad]
 
     def place(self, primary: int, free_counts: Sequence[int],
               n_replicas: int, *,
               exclude: Sequence[int] = ()) -> List[int]:
         """``exclude`` bars additional peers beyond the primary — the
         repair path passes the peers already holding a copy, so a block
-        never gets two replicas on one peer."""
+        never gets two replicas on one peer (or, with domains, in one
+        failure domain)."""
         chosen: List[int] = []
         base = [primary, *exclude]
         for _ in range(n_replicas):
-            p = power_of_two_choices(free_counts, self.rng,
-                                     exclude=base + chosen)
+            ex = base + chosen
+            if self.domains is not None:
+                ex = ex + self._domain_peers(ex)
+            p = power_of_two_choices(free_counts, self.rng, exclude=ex)
             if p is None:
                 break
             chosen.append(p)

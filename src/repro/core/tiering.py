@@ -169,8 +169,27 @@ class TieredPageStore:
         self.pipeline = WritePipeline(self.pool,
                                       queue_len=cfg.staging_depth)
         self.gpt = GlobalPageTable()
-        self.peers = [PeerState(capacity=peer_capacity_blocks)
-                      for _ in range(n_peers)]
+        # heterogeneous peer profiles (core/cluster.py): per-peer capacity
+        # overrides, extra read latency, and failure domains.  None (the
+        # default) keeps the flat homogeneous peer set — bitwise identical
+        # to every pre-cluster run.
+        profiles = cfg.peer_profiles
+        if profiles is not None and len(profiles) != n_peers:
+            raise ValueError(f"peer_profiles has {len(profiles)} entries "
+                             f"for {n_peers} peers")
+        self.peers = [PeerState(capacity=(
+            profiles[i].capacity_blocks
+            if profiles is not None
+            and profiles[i].capacity_blocks is not None
+            else peer_capacity_blocks)) for i in range(n_peers)]
+        if profiles is not None:
+            doms = [p.domain for p in profiles]
+            self._peer_domain = doms if len(set(doms)) > 1 else None
+            lat = np.array([p.latency_us for p in profiles], np.float64)
+            self._peer_lat_extra = lat if lat.any() else None
+        else:
+            self._peer_domain = None
+            self._peer_lat_extra = None
         # remote blocks: (peer, block_slot) -> list of logical pages
         self.blocks: Dict[Tuple[int, int], List[int]] = {}
         # dense per-peer block-table membership columns: ``_blk_live[p][s]``
@@ -199,7 +218,7 @@ class TieredPageStore:
         # streams from both generators
         self._pairs = PairSampler(n_peers, self.rng.spawn(1)[0]) \
             if n_peers >= 2 else None
-        self.placer = ReplicaPlacer(self.rng)
+        self.placer = ReplicaPlacer(self.rng, domains=self._peer_domain)
         self.host_pages: Dict[int, bool] = {}
         # dense mirror of host_pages membership (append-only): batch
         # classification gathers it instead of probing the dict per page
@@ -221,6 +240,15 @@ class TieredPageStore:
         # behind this flag, keeping the healthy hot path untouched
         self._health_dirty = False
         self.repairq = RepairQueue()
+        # REJOINING warm-up ramp: block grants left before a rejoined peer
+        # advertises full free capacity again.  All-zero (and _any_ramp
+        # False) until a rejoin event, so fault-free placement never pays
+        # the extra arithmetic and stays bitwise identical.
+        self._ramp_left = np.zeros(max(n_peers, 1), np.int64)
+        self._any_ramp = False
+        # whether the coordinator currently holds a non-zero degraded
+        # report from us (so the backlog-drained clear fires exactly once)
+        self._degraded_reported = False
         # the full exponential backoff ladder, paid per access to a SUSPECT
         # peer: base * (2^0 + 2^1 + ... + 2^(retry_limit-1))
         self._retry_penalty_us = \
@@ -242,13 +270,18 @@ class TieredPageStore:
         self.migrator = MigrationEngine(
             self.gpt, self.tracker,
             free_counts_fn=lambda: [
-                0 if self._peer_suspect[i] else p.free()
+                0 if self._peer_suspect[i] else self._ramp_free(i, p.free())
                 for i, p in enumerate(self.peers)],
             copy_fn=lambda sp, sb, dp_, ds: self._copy_block(sp, dec(sb), dp_, ds),
             alloc_fn=self._alloc_block_slot,
             free_fn=lambda p, b: self._free_block(p, dec(b)),
             park_fn=self._park_pages,
             rng=self.rng)
+        if self._peer_domain is not None:
+            # failure-domain-aware migration: a migrated primary never
+            # lands in a rack already holding one of its replicas
+            self.migrator.domains = self._peer_domain
+            self.migrator.replica_peers_fn = self._block_replica_peers
         # async orchestration engine (tentpole): a background daemon that
         # drains the reclaimable queue / flushes write-sets / charges
         # migration copies off the critical path, with an epoch/fence
@@ -304,10 +337,38 @@ class TieredPageStore:
             g[:cols[peer].shape[0]] = cols[peer]
             cols[peer] = g
 
+    def _ramp_free(self, peer: int, free: int) -> int:
+        """Warm-up discount on a freshly rejoined peer's advertised free
+        count: ramps linearly over its first ``rejoin_ramp_grants`` block
+        grants, never below 1 while room exists (the peer must stay
+        placeable to warm up at all).  Identity while no ramp is live."""
+        if not self._any_ramp or free <= 0:
+            return free
+        left = int(self._ramp_left[peer])
+        if left <= 0:
+            return free
+        k = self.config.rejoin_ramp_grants
+        return max(1, free * (k - left) // k)
+
+    def _ramp_note_grant(self, peer: int) -> None:
+        """A block grant landed on a warming-up peer: one ramp step."""
+        if self._ramp_left[peer] > 0:
+            self._ramp_left[peer] -= 1
+            if not self._ramp_left.any():
+                self._any_ramp = False
+
+    def _block_replica_peers(self, bid: int) -> List[int]:
+        """Peers holding replicas of the (encoded-id) block — the
+        migration engine's domain-avoidance probe."""
+        key = (bid >> 20, bid % (1 << 20))
+        return [r[0] for r in self.block_replicas.get(key, ())]
+
     def _alloc_block_slot(self, peer: int) -> Optional[int]:
         p = self.peers[peer]
         if p.failed or self._peer_suspect[peer] or p.free() <= 0:
             return None
+        if self._any_ramp:
+            self._ramp_note_grant(peer)
         slot = self._next_block_slot[peer]
         self._next_block_slot[peer] += 1
         p.used += 1
@@ -406,6 +467,9 @@ class TieredPageStore:
             pa, pb = peers[a], peers[b]
             fa = 0 if pa.failed or susp[a] else pa.capacity - pa.used
             fb = 0 if pb.failed or susp[b] else pb.capacity - pb.used
+            if self._any_ramp:
+                fa = self._ramp_free(a, fa)
+                fb = self._ramp_free(b, fb)
             peer, best_free = (a, fa) if fa >= fb else (b, fb)
         elif peers:
             peer, best_free = 0, peers[0].free()
@@ -423,7 +487,7 @@ class TieredPageStore:
             # replicas are allocated at BLOCK granularity alongside the primary
             reps = []
             if self.policy.replication > 0:
-                free = [0 if susp[j] else p.free()
+                free = [0 if susp[j] else self._ramp_free(j, p.free())
                         for j, p in enumerate(peers)]
                 for rp in self.placer.place(peer, free,
                                             self.policy.replication):
@@ -551,6 +615,8 @@ class TieredPageStore:
             nonlocal connects, maps, t
             if failed[peer] or cap[peer] - used[peer] <= 0:
                 return None
+            if self._any_ramp:
+                self._ramp_note_grant(peer)
             slot = next_slot[peer]
             next_slot[peer] = slot + 1
             used[peer] += 1
@@ -577,6 +643,9 @@ class TieredPageStore:
                 b = pb_l[i]
                 fa = 0 if failed[a] else cap[a] - used[a]
                 fb = 0 if failed[b] else cap[b] - used[b]
+                if self._any_ramp:
+                    fa = self._ramp_free(a, fa)
+                    fb = self._ramp_free(b, fb)
                 if fa >= fb:
                     peer, best_free = a, fa
                 else:
@@ -584,6 +653,8 @@ class TieredPageStore:
             else:
                 peer = 0
                 best_free = 0 if failed[0] else cap[0] - used[0]
+                if self._any_ramp:
+                    best_free = self._ramp_free(0, best_free)
             placed = False
             if best_free > 0:
                 entry = open_cache.get(peer)
@@ -601,6 +672,9 @@ class TieredPageStore:
                         if repl > 0:
                             free_now = [0 if failed[j] else cap[j] - used[j]
                                         for j in range(n_peers)]
+                            if self._any_ramp:
+                                free_now = [self._ramp_free(j, f)
+                                            for j, f in enumerate(free_now)]
                             for rp in place_reps(peer, free_now, repl):
                                 r = alloc_slot(rp)
                                 if r is not None:
@@ -749,6 +823,9 @@ class TieredPageStore:
         elif loc.tier == Tier.PEER and not self.peers[loc.peer].failed:
             self.stats.remote_hits += 1
             lat = self.costs.remote_read
+            if self._peer_lat_extra is not None:
+                # heterogeneous peers (PeerProfile): far racks cost more
+                lat += self._peer_lat_extra[loc.peer]
             if self.policy.receiver_side_cpu:
                 lat += self.costs.receiver_cpu
             if self._any_suspect and self._peer_suspect[loc.peer]:
@@ -804,12 +881,14 @@ class TieredPageStore:
         iw = np.broadcast_to(np.asarray(is_write, bool), (n,))
         if self._health_dirty:
             self._poll_health()
-        if self._any_suspect and self.orchestrator is None:
+        if (self._any_suspect or self._peer_lat_extra is not None) \
+                and self.orchestrator is None:
             # degraded mode: the plan-once engine's cost LUT cannot price
-            # the per-peer retry/backoff ladder, so faulted batches replay
-            # the scalar ops (the async orchestrator is already per-op and
-            # prices the penalty inside read()).  Healthy batches never
-            # reach this branch — the fast paths below stay bitwise intact.
+            # the per-peer retry/backoff ladder — nor per-peer latency
+            # profiles — so faulted/heterogeneous batches replay the
+            # scalar ops (the async orchestrator is already per-op and
+            # prices both inside read()).  Healthy homogeneous batches
+            # never reach this branch — the fast paths stay bitwise intact.
             if self._lease is not None:
                 self.coordinator.note_activity(self._lease.cid, n)
             for k in range(n):
@@ -1784,6 +1863,25 @@ class TieredPageStore:
             self.stats.write_stall_us += cost
         return cost                     # lazy: returned for daemon charging
 
+    def _report_repair_backlog(self) -> None:
+        """Keep the coordinator's degraded-admission signal in sync with
+        the repair queue: a non-empty backlog is reported (lease grants
+        shed to floor), and the drain-to-empty transition fires
+        ``clear_degraded`` exactly once so growth resumes.  Shared by the
+        sync tick and the async daemon slice."""
+        if self._lease is None:
+            return
+        if self.repairq:
+            note = getattr(self.coordinator, "note_degraded", None)
+            if note is not None:
+                note(self._lease.cid, len(self.repairq))
+                self._degraded_reported = True
+        elif self._degraded_reported:
+            clear = getattr(self.coordinator, "clear_degraded", None)
+            if clear is not None:
+                clear(self._lease.cid)
+            self._degraded_reported = False
+
     def background_tick(self, flush_batch: Optional[int] = None):
         """One async maintenance tick: lazy send + pool sizing."""
         if flush_batch is None:
@@ -1798,10 +1896,7 @@ class TieredPageStore:
         if self.repairq:
             # background re-replication repair, off the critical path
             self._drain_repairs(self.config.repair_rate)
-            if self.repairq and self._lease is not None:
-                note = getattr(self.coordinator, "note_degraded", None)
-                if note is not None:
-                    note(self._lease.cid, len(self.repairq))
+        self._report_repair_backlog()
         if self.policy.dynamic_pool:
             self.pool.shrink_for_pressure()
             # admission throttle while degraded: don't grow the local pool
@@ -1994,6 +2089,11 @@ class TieredPageStore:
             return 0, 0
         p.failed = True
         self._peer_failed[peer] = True
+        if self._ramp_left[peer] > 0:
+            # a crash mid-warm-up ends the ramp (the peer starts over on
+            # its next rejoin)
+            self._ramp_left[peer] = 0
+            self._any_ramp = bool(self._ramp_left.any())
         self.health.down(peer, now=self.stats.time_us)
         if self._peer_suspect[peer]:
             self._peer_suspect[peer] = False
@@ -2041,6 +2141,12 @@ class TieredPageStore:
         p.failed = False
         self._peer_failed[peer] = False
         self._health_dirty = True
+        k = self.config.rejoin_ramp_grants
+        if k > 0:
+            # warm-up bias: the rejoined peer re-enters placement at a
+            # discounted weight, ramping to full over its first k grants
+            self._ramp_left[peer] = k
+            self._any_ramp = True
         return True
 
     def _drain_repairs(self, max_pages: int) -> int:
@@ -2078,7 +2184,7 @@ class TieredPageStore:
             if deficit <= 0:
                 q.n_repaired += 1
                 continue
-            free = [0 if susp[j] else pr.free()
+            free = [0 if susp[j] else self._ramp_free(j, pr.free())
                     for j, pr in enumerate(self.peers)]
             progressed = False
             for rp in self.placer.place(key[0], free, deficit,

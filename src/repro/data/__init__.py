@@ -3,4 +3,4 @@ from repro.data.pipeline import (DataConfig, TrainDataset, batch_for_step,
 from repro.data.workloads import (WorkloadTrace, YCSBConfig, MLTraceConfig,
                                   MixedTenantConfig, YCSB_MIXES, ycsb_trace,
                                   ml_trace, mixed_tenant_traces,
-                                  interleave_tenants)
+                                  interleave_tenants, tenant_lifetimes)

@@ -270,10 +270,33 @@ class MixedTenantConfig:
     idle_ops: int = 800            # KV trickle ops per cold phase
     idle_pages: int = 96           # trickle working set (keyspace head)
     slice_ops: int = 128           # round-robin time slice
+    # tenant churn (ROADMAP item 5 follow-up): extra KV tenants that join
+    # mid-run and leave again — live only for a bounded phase window
+    # around their own hot phase (register/deregister against the
+    # coordinator at the window edges).  Empty by default, which keeps the
+    # emitted traces bitwise identical to the churn-free suite.
+    churn_kv: Tuple[YCSBConfig, ...] = ()
+    churn_linger_phases: int = 1   # live phases before/after the hot phase
+
+
+def tenant_lifetimes(cfg: MixedTenantConfig) -> List[Tuple[int, int]]:
+    """Per-tenant live-phase windows ``[join, leave)``.
+
+    Base tenants (``kv`` + ``ml``) live for the whole run.  Churn tenants
+    join ``churn_linger_phases`` before their hot phase and leave the same
+    margin after it — a driver registers the tenant's container with the
+    coordinator at ``join`` and deregisters it at ``leave``."""
+    n_base = len(cfg.kv) + len(cfg.ml)
+    n_tenants = n_base + len(cfg.churn_kv)
+    linger = max(int(cfg.churn_linger_phases), 0)
+    out = [(0, n_tenants)] * n_base
+    for t in range(n_base, n_tenants):
+        out.append((max(t - linger, 0), min(t + linger + 1, n_tenants)))
+    return out
 
 
 def mixed_tenant_traces(cfg: MixedTenantConfig) -> List[WorkloadTrace]:
-    """Per-tenant phased traces (KV tenants first, then ML).
+    """Per-tenant phased traces (KV tenants first, then ML, then churn KV).
 
     Each tenant's trace has exactly ``n_tenants`` phase segments (its
     ``phase_bounds`` mark the cuts; segments may be empty) aligned with the
@@ -281,14 +304,28 @@ def mixed_tenant_traces(cfg: MixedTenantConfig) -> List[WorkloadTrace]:
     hot.  Page-id spaces are per-tenant — the *slab* is shared, the
     keyspaces are not.  Use ``phase_segments`` to slice a trace back into
     its per-phase (start, end) ranges.
+
+    Churn tenants behave like KV tenants inside their ``tenant_lifetimes``
+    window (full trace in their hot phase, keyspace-head trickle in the
+    linger phases) and emit *empty* segments outside it — op conservation
+    over the interleaved schedule therefore holds with or without churn.
     """
-    n_tenants = len(cfg.kv) + len(cfg.ml)
+    n_base = len(cfg.kv) + len(cfg.ml)
+    n_tenants = n_base + len(cfg.churn_kv)
     hot: List[WorkloadTrace] = ([ycsb_trace(c) for c in cfg.kv]
-                                + [ml_trace(c) for c in cfg.ml])
+                                + [ml_trace(c) for c in cfg.ml]
+                                + [ycsb_trace(c) for c in cfg.churn_kv])
+    lifetimes = tenant_lifetimes(cfg)
     out: List[WorkloadTrace] = []
     for t, trace in enumerate(hot):
-        is_kv = t < len(cfg.kv)
-        seed = (cfg.kv[t].seed if is_kv else cfg.ml[t - len(cfg.kv)].seed)
+        is_kv = t < len(cfg.kv) or t >= n_base
+        if t < len(cfg.kv):
+            seed = cfg.kv[t].seed
+        elif t < n_base:
+            seed = cfg.ml[t - len(cfg.kv)].seed
+        else:
+            seed = cfg.churn_kv[t - n_base].seed
+        join, leave = lifetimes[t]
         pages_parts, write_parts, bounds, pos = [], [], [], 0
         for ph in range(n_tenants):
             if ph:
@@ -297,14 +334,15 @@ def mixed_tenant_traces(cfg: MixedTenantConfig) -> List[WorkloadTrace]:
                 pages_parts.append(trace.pages)
                 write_parts.append(trace.is_write)
                 pos += len(trace)
-            elif is_kv and cfg.idle_ops > 0:
+            elif is_kv and cfg.idle_ops > 0 and join <= ph < leave:
                 rng = np.random.default_rng((seed + 1) * 1000 + ph)
                 idle_span = min(cfg.idle_pages, trace.n_pages)
                 pages_parts.append(rng.integers(0, idle_span, cfg.idle_ops,
                                                 dtype=np.int64))
                 write_parts.append(rng.random(cfg.idle_ops) >= 0.95)
                 pos += cfg.idle_ops
-            # ML tenants are silent outside their phase: empty segment
+            # ML tenants are silent outside their phase, churn tenants
+            # outside their lifetime: empty segment
         out.append(WorkloadTrace(
             trace.name, np.concatenate(pages_parts),
             np.concatenate(write_parts), trace.n_pages, tuple(bounds)))

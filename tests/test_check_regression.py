@@ -21,7 +21,9 @@ FULL = {"batch_speedup": {"speedup": 4.0},
         "mixed_tenant_workload": {"fairness": 0.99},
         "serve_qps": {"tokens_per_s": 1.2},
         "fault_recovery": {"durability": 1.0,
-                           "degraded_throughput": 0.84}}
+                           "degraded_throughput": 0.84},
+        "cluster_tenant": {"replica_availability": 1.0,
+                           "fairness": 0.99}}
 
 
 def test_tracked_covers_workload_suite_keys():
@@ -106,6 +108,36 @@ def test_missing_fault_recovery_keys_fail_clearly(tmp_path):
         in proc.stdout
     assert "fault_recovery/durability missing" not in proc.stdout
     assert "Traceback" not in proc.stderr
+
+
+def test_missing_cluster_tenant_keys_fail_clearly(tmp_path):
+    """Both cluster_tenant keys share one bench entry: dropping the entry
+    must name each tracked metric, and dropping a single metric must fail
+    on exactly that key."""
+    partial = {k: v for k, v in FULL.items() if k != "cluster_tenant"}
+    proc, _ = run_gate(tmp_path / "bench", partial, FULL)
+    assert proc.returncode == 1
+    assert "cluster_tenant/replica_availability missing from results" \
+        in proc.stdout
+    assert "cluster_tenant/fairness missing from results" in proc.stdout
+    assert "Traceback" not in proc.stderr
+    one_short = json.loads(json.dumps(FULL))
+    del one_short["cluster_tenant"]["fairness"]
+    proc, _ = run_gate(tmp_path / "metric", one_short, FULL)
+    assert proc.returncode == 1
+    assert "cluster_tenant/fairness missing from results" in proc.stdout
+    assert "cluster_tenant/replica_availability missing" not in proc.stdout
+    assert "Traceback" not in proc.stderr
+
+
+def test_replica_availability_regression_fails(tmp_path):
+    """A rack crash losing replicated pages (availability 1.0 -> 0.7)
+    trips the gate."""
+    bad = json.loads(json.dumps(FULL))
+    bad["cluster_tenant"]["replica_availability"] = 0.7
+    proc, _ = run_gate(tmp_path, bad, FULL)
+    assert proc.returncode == 1
+    assert "REGRESSION" in proc.stdout
 
 
 def test_durability_regression_fails(tmp_path):

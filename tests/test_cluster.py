@@ -1,0 +1,385 @@
+"""Cluster-scale coordination (core/cluster.py + the pieces it federates).
+
+Pins the layers the ``cluster_tenant`` benchmark stacks:
+
+* seeded heterogeneous peer profiles (deterministic draws, rack striping,
+  capacity overrides, per-peer latency pricing — and the all-defaults
+  profile set being bitwise invisible),
+* the ``ClusterCoordinator`` host lifecycle — floor reservation, slab
+  conservation, fail/rejoin reclamation, two-level lease escalation,
+* recovery-storm admission — grants shed to floor deficits inside a storm
+  window, the staggered exponential ladder charged per gated call,
+  degraded hosts pinned to floor until the backlog clears,
+* strictly cross-domain replica placement — the placer never co-locates a
+  replica with any copy's failure domain, so a whole-rack crash loses
+  nothing (the invariant checker's domain-disjointness law),
+* ``ClusterInvariantChecker`` — cluster-wide convergence over surviving
+  stores only.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ClusterCoordinator, ClusterInvariantChecker,
+                        HostState, InvariantChecker, OrchestrationConfig,
+                        PeerProfile, ReplicaPlacer, TieredPageStore,
+                        POLICIES, PAPER_COSTS, draw_peer_profiles,
+                        peers_in_domain, profile_domains)
+
+
+def make_store(*, pool=128, min_pool=None, n_peers=6, blocks=256, seed=0,
+               policy="valet", **kw):
+    cfg = OrchestrationConfig(
+        policy=POLICIES[policy], costs=PAPER_COSTS, pool_capacity=pool,
+        min_pool=pool if min_pool is None else min_pool, max_pool=pool,
+        n_peers=n_peers, peer_capacity_blocks=blocks, pages_per_block=16,
+        seed=seed, **kw)
+    return TieredPageStore.from_config(cfg)
+
+
+def populate(store, n_pages):
+    for p in range(n_pages):
+        store.write(p)
+    store.drain()
+    return store
+
+
+# -- heterogeneous peer profiles ----------------------------------------------
+
+def test_draw_peer_profiles_deterministic_and_striped():
+    a = draw_peer_profiles(8, 2, seed=7, latency_scale_us=3.0)
+    b = draw_peer_profiles(8, 2, seed=7, latency_scale_us=3.0)
+    assert a == b                                # identical seeds, identical set
+    assert a != draw_peer_profiles(8, 2, seed=8, latency_scale_us=3.0)
+    # contiguous rack stripes: first half domain 0, second half domain 1
+    assert [p.domain for p in a] == [0, 0, 0, 0, 1, 1, 1, 1]
+    assert all(p.latency_us > 0 for p in a)
+    base = 1024
+    assert all(base // 2 <= p.capacity_blocks <= base * 3 // 2 for p in a)
+
+
+def test_draw_peer_profiles_zero_scale_keeps_homogeneous_latency():
+    profs = draw_peer_profiles(4, 2, seed=0, latency_scale_us=0.0)
+    assert all(p.latency_us == 0.0 for p in profs)
+
+
+def test_profile_domains_flat_set_is_none():
+    flat = tuple(PeerProfile(domain=0) for _ in range(4))
+    assert profile_domains(flat) is None
+    assert profile_domains(()) is None
+    assert profile_domains(draw_peer_profiles(4, 2)) == [0, 0, 1, 1]
+
+
+def test_peer_profile_length_mismatch_rejected():
+    with pytest.raises(ValueError):
+        make_store(n_peers=4, peer_profiles=draw_peer_profiles(6, 2))
+
+
+def test_default_profiles_are_bitwise_invisible():
+    """An all-defaults profile tuple (no latency, no capacity override,
+    one domain) must run bitwise identically to no profiles at all."""
+    flat = tuple(PeerProfile() for _ in range(6))
+    plain = populate(make_store(seed=3), 600)
+    prof = populate(make_store(seed=3, peer_profiles=flat), 600)
+    rng = np.random.default_rng(5)
+    pages = rng.integers(0, 600, size=2000, dtype=np.int64)
+    is_write = rng.random(2000) < 0.3
+    for st in (plain, prof):
+        for i in range(0, 2000, 250):
+            st.access_batch(pages[i:i + 250], is_write[i:i + 250])
+            st.background_tick()
+        st.drain()
+    assert plain.stats.time_us == prof.stats.time_us
+    assert plain.stats.remote_hits == prof.stats.remote_hits
+    assert plain.pool.size == prof.pool.size
+
+
+def test_per_peer_latency_prices_remote_reads():
+    """Uniform extra latency does not change placement, so the run with
+    profiles costs exactly ``extra`` more per remote read hit than the run
+    without — the time delta is an integral multiple of ``extra``."""
+    extra = 37.0
+    profs = tuple(PeerProfile(latency_us=extra) for _ in range(6))
+    plain = populate(make_store(pool=16, seed=9), 200)
+    prof = populate(make_store(pool=16, seed=9, peer_profiles=profs), 200)
+    for st in (plain, prof):
+        for p in range(200):
+            st.read(p)
+    delta = prof.stats.time_us - plain.stats.time_us
+    assert delta > 0
+    hits = delta / extra
+    assert abs(hits - round(hits)) < 1e-9 and round(hits) >= 1
+
+
+def test_per_peer_capacity_override():
+    profs = (PeerProfile(capacity_blocks=7), PeerProfile())
+    st = make_store(n_peers=2, blocks=256, peer_profiles=profs)
+    assert st.peers[0].capacity == 7
+    assert st.peers[1].capacity == 256
+
+
+# -- strictly cross-domain replica placement ----------------------------------
+
+def test_replica_placer_strictly_cross_domain():
+    domains = [0, 0, 1, 1, 2, 2]
+    placer = ReplicaPlacer(np.random.default_rng(0), domains=domains)
+    free = [100] * 6
+    for primary in range(6):
+        for _ in range(50):
+            reps = placer.place(primary, free, n_replicas=2)
+            doms = {domains[primary]} | {domains[r] for r in reps}
+            assert len(doms) == 1 + len(reps)    # all copies distinct racks
+
+
+def test_replica_placer_short_when_no_cross_domain_peer():
+    # every peer shares the primary's rack: strictly cross-domain placement
+    # must come up short (no same-rack fallback) — the caller's repair
+    # queue owns eventual convergence
+    placer = ReplicaPlacer(np.random.default_rng(0), domains=[0, 0, 0])
+    assert placer.place(0, [100, 100, 100], n_replicas=1) == []
+    # two racks, two replicas wanted: only one distinct rack remains after
+    # the first replica, so the set stays short at one copy
+    placer = ReplicaPlacer(np.random.default_rng(0), domains=[0, 0, 1, 1])
+    assert len(placer.place(0, [100] * 4, n_replicas=2)) == 1
+
+
+def test_store_replicas_never_share_primary_domain():
+    profs = draw_peer_profiles(6, 3, seed=2)
+    doms = [p.domain for p in profs]
+    st = populate(make_store(n_peers=6, peer_profiles=profs, seed=2), 800)
+    assert st._peer_domain == doms
+    n_rep = 0
+    for (peer, _), reps in st.block_replicas.items():
+        for rpeer, _ in reps:
+            assert doms[rpeer] != doms[peer]
+            n_rep += 1
+    assert n_rep > 0                       # the law is vacuous otherwise
+    InvariantChecker(st).check()           # includes domain disjointness
+
+
+def test_rack_crash_loses_nothing_cross_domain():
+    """Killing every peer of one rack must recover every page: primary and
+    replica never share a rack."""
+    profs = draw_peer_profiles(6, 2, seed=4)
+    doms = [p.domain for p in profs]
+    st = populate(make_store(n_peers=6, peer_profiles=profs, seed=4), 800)
+    lost = 0
+    for peer in peers_in_domain(doms, 1):
+        _, l = st.fail_peer(peer)
+        lost += l
+    assert lost == 0
+    # with the whole far rack dead nothing is legally placeable: the
+    # backlog persists (degraded, not crashed) ...
+    assert st.repairq
+    assert st.repair_quiesce() == 0
+    # ... until the rack rejoins, at which point repair converges
+    for peer in peers_in_domain(doms, 1):
+        st.rejoin_peer(peer)
+    st.repair_quiesce()
+    chk = InvariantChecker(st)
+    chk.check()
+    chk.check_replication_restored()
+
+
+# -- cluster coordinator: host lifecycle --------------------------------------
+
+def test_register_reserves_floor_and_conserves():
+    cl = ClusterCoordinator(1000)
+    c0 = cl.register_host(min_slab=200, max_slab=600)
+    c1 = cl.register_host(min_slab=300)
+    assert cl.free() == 500
+    assert c0.total_pages == 200 and c1.total_pages == 300
+    assert c0.host_id != c1.host_id and c0.cluster is cl
+    cl.check_invariants()
+    with pytest.raises(ValueError):
+        cl.register_host(min_slab=501)     # floor does not fit
+    assert cl.deregister_host(c1.host_id) == 300
+    assert cl.free() == 800
+    cl.check_invariants()
+
+
+def test_fail_host_reclaims_whole_slab_and_rejoin_restores_floor():
+    cl = ClusterCoordinator(1000)
+    coord = cl.register_host(min_slab=200, max_slab=600)
+    hid = coord.host_id
+    assert cl.lease_slab(hid, 150) == 150
+    coord.total_pages += 150               # the host folds the grant in
+    coord._free += 150
+    cl.check_invariants()
+    assert cl.fail_host(hid) == 350        # floor + leased, all at once
+    rec = cl.hosts()[0]
+    assert rec.state is HostState.DOWN and rec.slab == 0
+    assert rec.coordinator is None and coord.cluster is None
+    assert cl.free() == 1000
+    cl.check_invariants()
+    assert cl.lease_slab(hid, 50) == 0     # DOWN hosts lease nothing
+    fresh = cl.rejoin_host(hid)
+    assert fresh is not coord and fresh.total_pages == 200
+    assert cl.free() == 800
+    cl.check_invariants()
+    with pytest.raises(AssertionError):
+        cl.rejoin_host(hid)                # already UP
+
+
+def test_lease_slab_is_grow_only_and_capped():
+    cl = ClusterCoordinator(500, storm_window=0)
+    coord = cl.register_host(min_slab=100, max_slab=250)
+    hid = coord.host_id
+    assert cl.lease_slab(hid, 1000) == 150         # capped at max_slab
+    coord.total_pages += 150
+    coord._free += 150
+    assert cl.lease_slab(hid, 10) == 0             # at cap: nothing more
+    assert cl.stats.pages_slab_leased == 150
+    cl.check_invariants()
+
+
+# -- recovery-storm admission -------------------------------------------------
+
+def test_storm_sheds_grants_to_floor_and_charges_ladder():
+    cl = ClusterCoordinator(2000, backoff_base_us=8.0, storm_window=4)
+    survivor = cl.register_host(min_slab=100, max_slab=800)
+    victim = cl.register_host(min_slab=100, max_slab=800)
+    sid = survivor.host_id
+    cl.fail_host(victim.host_id)
+    assert cl.storm_active()
+    # gated call 1: the survivor sits at its floor — zero deficit, zero
+    # grant, first rung of the ladder is free (2^0 - 1)
+    assert cl.lease_slab(sid, 300) == 0
+    assert cl.stats.n_storm_denials == 1
+    assert cl.stats.storm_wait_us == 0.0
+    # rungs 2..3 escalate: 8*(2^1-1), then 8*(2^2-1)
+    assert cl.lease_slab(sid, 300) == 0
+    assert cl.stats.storm_wait_us == 8.0
+    assert cl.lease_slab(sid, 300) == 0
+    assert cl.stats.storm_wait_us == 8.0 + 24.0
+    assert cl.stats.n_storm_denials == 3
+    # 4th gated call exhausts the window; afterwards grants flow again
+    assert cl.lease_slab(sid, 300) == 0
+    assert not cl.storm_active()
+    got = cl.lease_slab(sid, 300)
+    assert got == 300                      # ungated: full grant
+    survivor.total_pages += got
+    survivor._free += got
+    assert cl.hosts()[0].storm_attempts == 0      # grant resets the ladder
+    cl.check_invariants()
+
+
+def test_storm_grant_covers_floor_deficit():
+    """Mid-storm a rejoining host is guaranteed its floor — deficits are
+    grantable even while everyone else is shed to zero."""
+    cl = ClusterCoordinator(1000, storm_window=8)
+    coord = cl.register_host(min_slab=200, max_slab=600)
+    hid = coord.host_id
+    cl.fail_host(hid)
+    fresh = cl.rejoin_host(hid)
+    assert fresh.total_pages == 200        # floor re-reserved by rejoin
+    assert cl.storm_active()
+    assert cl.lease_slab(hid, 100) == 0    # above floor: shed
+    assert cl.stats.n_storm_denials == 1
+    cl.check_invariants()
+
+
+def test_headroom_shed_during_storm_and_for_degraded():
+    cl = ClusterCoordinator(1000, storm_window=2)
+    c0 = cl.register_host(min_slab=100, max_slab=400)
+    c1 = cl.register_host(min_slab=100, max_slab=400)
+    h0, h1 = c0.host_id, c1.host_id
+    assert cl.headroom_for(h0) == 300      # max - slab, free permitting
+    cl.note_host_degraded(h0, 17)
+    assert cl.headroom_for(h0) == 0        # degraded: floor only
+    assert cl.headroom_for(h1) == 300
+    cl.note_host_degraded(h0, 0)
+    assert cl.headroom_for(h0) == 300      # backlog cleared: released
+    assert cl.stats.n_degraded_reports == 1
+    assert cl.stats.n_degraded_clears == 1
+    cl.fail_host(h1)
+    assert cl.headroom_for(h0) == 0        # storm: everyone to floor
+    assert cl.headroom_for(h1) == 0        # DOWN: nothing
+    cl.lease_slab(h0, 1)
+    cl.lease_slab(h0, 1)                   # window (2) consumed
+    assert cl.headroom_for(h0) == 300
+
+
+def test_degraded_host_pinned_to_floor_outside_storm():
+    cl = ClusterCoordinator(1000, storm_window=0)
+    coord = cl.register_host(min_slab=100, max_slab=500)
+    hid = coord.host_id
+    cl.note_host_degraded(hid, 5)
+    assert cl.lease_slab(hid, 200) == 0    # at floor + degraded: no growth
+    cl.note_host_degraded(hid, 0)
+    got = cl.lease_slab(hid, 200)
+    assert got == 200                      # throttle released with backlog
+    coord.total_pages += got
+    coord._free += got
+    cl.check_invariants()
+    cl.note_host_degraded(999, 3)          # unknown host: ignored, no raise
+
+
+# -- two-level pooling: container -> host -> cluster --------------------------
+
+def test_container_growth_escalates_to_cluster_slab():
+    """A container outgrowing its host's slab pulls more slab from the
+    cluster transparently through the host coordinator's lease path."""
+    cl = ClusterCoordinator(4096, storm_window=0)
+    coord = cl.register_host(min_slab=96, max_slab=1024)
+    st = make_store(pool=512, min_pool=64, coordinator=coord,
+                    container_name="c0", seed=1)
+    populate(st, 1500)
+    rec = cl.hosts()[0]
+    assert rec.slab > 96                   # the host leased beyond its floor
+    assert rec.coordinator.total_pages == rec.slab
+    assert cl.stats.pages_slab_leased == rec.slab - 96
+    assert st.pool.size > 64               # ... and the container grew
+    cl.check_invariants()
+    ClusterInvariantChecker(cl, {rec.hid: [st]}).check()
+
+
+def test_available_for_includes_cluster_headroom():
+    cl = ClusterCoordinator(4096, storm_window=0)
+    coord = cl.register_host(min_slab=96, max_slab=1024)
+    lease = coord.register(min_pages=64, max_pages=512)
+    solo = ClusterCoordinator(4096).register_host(min_slab=96, max_slab=96)
+    solo_lease = solo.register(min_pages=64, max_pages=512)
+    # same host slab, but the clustered host advertises its leasable room
+    assert lease.available() == solo_lease.available() + (1024 - 96)
+
+
+def test_cluster_checker_skips_down_hosts_stores():
+    cl = ClusterCoordinator(2048, storm_window=0)
+    c0 = cl.register_host(min_slab=96, max_slab=512)
+    c1 = cl.register_host(min_slab=96, max_slab=512)
+    s0 = populate(make_store(pool=128, min_pool=64, coordinator=c0,
+                             seed=0), 400)
+    s1 = populate(make_store(pool=128, min_pool=64, coordinator=c1,
+                             seed=1), 400)
+    stores = {c0.host_id: [s0], c1.host_id: [s1]}
+    chk = ClusterInvariantChecker(cl, stores)
+    chk.check()
+    chk.check_recovery_converged()
+    s1.fail_peer(0)                        # leaves s1 with an open backlog
+    assert s1.repairq
+    cl.fail_host(c1.host_id)               # ... but its host dies with it
+    chk.check()                            # dead host's store not checked
+    chk.check_recovery_converged()
+    assert [st for st in chk._live_stores()] == [s0]
+
+
+def test_cluster_recovery_converges_end_to_end():
+    """Host fail + rejoin with fresh containers: the checker proves the
+    cluster came back conserved and fully replicated."""
+    cl = ClusterCoordinator(2048, storm_window=4)
+    c0 = cl.register_host(min_slab=96, max_slab=512)
+    c1 = cl.register_host(min_slab=96, max_slab=512)
+    s0 = populate(make_store(pool=128, min_pool=64, coordinator=c0,
+                             seed=0), 400)
+    populate(make_store(pool=128, min_pool=64, coordinator=c1, seed=1), 400)
+    stores = {c0.host_id: [s0], c1.host_id: []}
+    cl.fail_host(c1.host_id)
+    fresh = cl.rejoin_host(c1.host_id)
+    s1b = populate(make_store(pool=128, min_pool=64, coordinator=fresh,
+                              seed=2), 400)
+    stores[c1.host_id] = [s1b]
+    for st in (s0, s1b):
+        st.drain()
+        st.repair_quiesce()
+    ClusterInvariantChecker(cl, stores).check_recovery_converged()
+    assert cl.stats.n_storms == 2

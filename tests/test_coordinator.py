@@ -482,3 +482,96 @@ def test_peer_pressure_without_holders_is_a_noop():
     assert coord.peer_pressure(0, 8) == 0
     assert coord.peer_pressure(0, 0) == 0
     assert coord.stats.peer_blocks_freed == 0
+
+
+# -- degraded admission throttle & tenant churn (cluster-scale PR) ------------
+
+
+def test_degraded_lease_shed_to_floor_until_cleared():
+    """While a container reports a repair backlog its lease grants are shed
+    to the floor; ``clear_degraded`` releases the throttle exactly once."""
+    coord = HostMemoryCoordinator(1024)
+    lease = coord.register(min_pages=64, max_pages=512, name="c0")
+    assert lease.lease(32) == 32                 # healthy: growth flows
+    coord.note_degraded(lease.cid, 9)
+    assert lease.lease(64) == 0                  # above floor: shed
+    assert coord.stats.n_degraded_denials == 1
+    coord.clear_degraded(lease.cid)
+    assert coord.stats.n_degraded_clears == 1
+    coord.clear_degraded(lease.cid)              # already clear: no-op
+    assert coord.stats.n_degraded_clears == 1
+    assert lease.lease(64) == 64                 # throttle released
+    coord.check_invariants()
+
+
+def test_repair_drain_clears_degraded_and_growth_resumes():
+    """Regression (satellite of the cluster PR): the store reports its
+    backlog while repairing and fires ``clear_degraded`` when the queue
+    drains — a container that crashed a peer must not stay pinned at its
+    floor forever."""
+    from repro.core import OrchestrationConfig
+    coord = HostMemoryCoordinator(4096)
+    st = TieredPageStore.from_config(OrchestrationConfig(
+        policy=POLICIES["valet"], costs=PAPER_COSTS, pool_capacity=1024,
+        min_pool=64, max_pool=1024, grow_step=64, n_peers=4,
+        peer_capacity_blocks=256, pages_per_block=16, seed=0,
+        coordinator=coord, container_name="c0", repair_rate=4))
+    st.access_batch(np.arange(400, dtype=np.int64), True)
+    st.drain()
+    assert st.pool.size < 1024                   # headroom left to grow into
+    st.fail_peer(0)
+    assert len(st.repairq) > 4                   # outlives one drain slice
+    st.background_tick()                         # report rides the tick
+    rec = next(iter(coord.containers()))
+    assert rec.degraded_blocks > 0
+    assert coord.stats.n_degraded_reports > 0
+    # while degraded, traffic must not grow the pool (admission throttled)
+    frozen = st.pool.size
+    st.access_batch(np.arange(400, 900, dtype=np.int64), True)
+    assert st.pool.size == frozen
+    for _ in range(200):
+        if not st.repairq:
+            break
+        st.background_tick()
+    assert not st.repairq
+    assert rec.degraded_blocks == 0              # cleared on the drain tick
+    assert coord.stats.n_degraded_clears == 1
+    # growth genuinely resumes: drive more traffic and the pool expands
+    st.access_batch(np.arange(900, 1500, dtype=np.int64), True)
+    for _ in range(8):
+        st.background_tick()
+    assert st.pool.size > frozen                 # grants flow again
+    assert rec.leased == st.pool.size
+    coord.check_invariants()
+
+
+def test_deregister_returns_full_lease_and_arbitrates_admission():
+    """Tenant churn: a leaver returns floor + growth in one call, and a
+    joiner whose floor exceeds the bare free slab is admitted by
+    reclaiming co-tenants' excess instead of being refused."""
+    coord = HostMemoryCoordinator(256)
+    a = coord.register(min_pages=64, max_pages=256, name="a")
+    held = 64 + a.lease(192)
+    assert held == 256 and coord.free() == 0
+
+    # joiner: free slab is 0, but a's excess above its floor is reclaimable
+    donated = {"n": 0}
+
+    def donate(n):
+        got = min(n, held - 64)
+        donated["n"] += got
+        coord.release(a.cid, got)
+        return got
+
+    coord.set_donor(a.cid, donate)
+    b = coord.register(min_pages=64, max_pages=128, name="b")
+    assert donated["n"] >= 64                    # admission arbitrated
+    coord.check_invariants()
+
+    # leaver: the whole lease (floor included) returns at once
+    freed = coord.deregister(b.cid)
+    assert freed == 64
+    assert coord.stats.n_deregistrations == 1
+    coord.check_invariants()
+    with pytest.raises(KeyError):
+        coord.deregister(b.cid)                  # unknown cid stays loud

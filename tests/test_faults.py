@@ -331,3 +331,128 @@ def test_async_daemon_drains_repairs():
     assert not st.repairq
     assert st.stats.daemon_us > before     # repairs billed to the daemon
     InvariantChecker(st).check_replication_restored()
+
+
+# -- rejoin warm-up ramp (cluster-scale PR) -----------------------------------
+
+def test_rejoin_ramp_phases_capacity_back_in():
+    """A rejoined peer re-enters placement at a discounted advertised-free
+    weight that ramps linearly to full over its first
+    ``rejoin_ramp_grants`` block grants (never below 1 while room exists,
+    so the peer stays placeable and can actually warm up)."""
+    st = populate(make_store(rejoin_ramp_grants=4), 600)
+    st.fail_peer(1)
+    assert int(st._ramp_left[1]) == 0 and not st._any_ramp
+    assert st.rejoin_peer(1)
+    assert st._any_ramp and int(st._ramp_left[1]) == 4
+    # linear schedule pinned exactly: 0/4, 1/4, 2/4, 3/4 of true free
+    assert st._ramp_free(1, 100) == 1       # floor of one, never zero
+    st._ramp_note_grant(1)
+    assert st._ramp_free(1, 100) == 25
+    st._ramp_note_grant(1)
+    assert st._ramp_free(1, 100) == 50
+    st._ramp_note_grant(1)
+    assert st._ramp_free(1, 100) == 75
+    st._ramp_note_grant(1)                  # k-th grant: ramp exhausted
+    assert not st._any_ramp
+    assert st._ramp_free(1, 100) == 100
+    # peers that never crashed are never dampened, even mid-ramp
+    assert st._ramp_free(0, 100) == 100
+
+
+def test_rejoin_ramp_drains_through_repair_grants():
+    """The ramp is consumed by real placement traffic: draining the
+    post-rejoin repair backlog lands block grants on the warming-up peer
+    and walks the ramp to zero without any direct ramp calls."""
+    # two peers: after the crash every repair's only legal replica target
+    # is the rejoined peer itself, so the drain must grant through the ramp
+    st = populate(make_store(n_peers=2, rejoin_ramp_grants=2), 600)
+    st.fail_peer(1)
+    assert st.repairq                       # crash degraded some blocks
+    st.rejoin_peer(1)
+    assert st._any_ramp
+    st.repair_quiesce()
+    assert not st.repairq
+    assert not st._any_ramp and int(st._ramp_left[1]) == 0
+    InvariantChecker(st).check_replication_restored()
+
+
+def test_rejoin_ramp_disabled_and_cancelled_by_crash():
+    """``rejoin_ramp_grants=0`` turns the feature off entirely, and a
+    crash mid-warm-up zeroes the ramp (the peer starts over on its next
+    rejoin)."""
+    st = populate(make_store(rejoin_ramp_grants=0), 400)
+    st.fail_peer(1)
+    st.rejoin_peer(1)
+    assert not st._any_ramp                 # disabled: no discount at all
+    assert st._ramp_free(1, 100) == 100
+    st2 = populate(make_store(rejoin_ramp_grants=8), 400)
+    st2.fail_peer(1)
+    st2.rejoin_peer(1)
+    assert st2._any_ramp
+    st2.fail_peer(1)                        # REJOINING -> DOWN mid-ramp
+    assert int(st2._ramp_left[1]) == 0 and not st2._any_ramp
+
+
+# -- failure-domain schedule builders (cluster-scale PR) ----------------------
+
+def test_domain_builders_deterministic_and_domain_scoped():
+    """The rack-scale builders target exactly the peers of one failure
+    domain and are pure functions of their inputs."""
+    from repro.core import (peers_in_domain, domain_correlated_crash,
+                            domain_recovery_storm, cluster_schedule)
+    domains = [0, 0, 1, 1, 1, 2]
+    assert peers_in_domain(domains, 1) == (2, 3, 4)
+    assert peers_in_domain(domains, 2) == (5,)
+    crash = domain_correlated_crash(domains, 1, at_op=40)
+    assert [(e.at_op, e.kind, e.peers) for e in crash] == \
+        [(40, "crash", (2, 3, 4))]
+    storm = domain_recovery_storm(domains, 1, at_op=70)
+    assert [(e.at_op, e.kind, e.peers) for e in storm] == \
+        [(70, "rejoin", (2, 3, 4))]
+    # empty domains are a caller bug, not a silent no-op schedule
+    with pytest.raises(AssertionError):
+        domain_correlated_crash(domains, 7, at_op=0)
+    with pytest.raises(AssertionError):
+        domain_recovery_storm(domains, 7, at_op=0)
+    # canonical churn schedule: crash at 2n/5, rack rejoin at 7n/10, far
+    # rack by default, and identical inputs -> identical schedule
+    sched = cluster_schedule(10_000, domains)
+    assert sched == cluster_schedule(10_000, domains)
+    assert [(e.at_op, e.kind, e.peers) for e in sched] == \
+        [(4000, "crash", (5,)), (7000, "rejoin", (5,))]
+    near = cluster_schedule(10_000, domains, crash_domain=0)
+    assert [(e.at_op, e.kind, e.peers) for e in near] == \
+        [(4000, "crash", (0, 1)), (7000, "rejoin", (0, 1))]
+
+
+def test_cluster_schedule_converges_on_every_surviving_host():
+    """Injector-driven rack churn against two federated hosts: after the
+    crash + rack-wide recovery storm drain out, replication is restored on
+    every host's store and the cluster-level invariants hold."""
+    from repro.core import (ClusterCoordinator, ClusterInvariantChecker,
+                            cluster_schedule, draw_peer_profiles)
+    profs = draw_peer_profiles(6, 2, seed=3)
+    domains = [p.domain for p in profs]
+    cluster = ClusterCoordinator(4096, storm_window=8)
+    stores, injs = {}, []
+    for hid in range(2):
+        coord = cluster.register_host(min_slab=96, max_slab=1024)
+        st = populate(make_store(pool=96, min_pool=48, seed=20 + hid,
+                                 coordinator=coord, peer_profiles=profs,
+                                 container_name=f"h{hid}"), 500)
+        stores[hid] = [st]
+        injs.append(FaultInjector(st, cluster_schedule(4000, domains)))
+    rng = np.random.default_rng(21)
+    pages = rng.integers(0, 500, size=4000, dtype=np.int64)
+    is_write = rng.random(4000) < 0.3
+    for hid, st in ((h, s[0]) for h, s in stores.items()):
+        _drive_with_injector(st, injs[hid], pages, is_write)
+    assert all(i.done for i in injs)
+    # the rack crash was replica-covered on both hosts
+    assert sum(r[1] for i in injs for _, k, _, r in i.log
+               if k == "crash") == 0
+    chk = ClusterInvariantChecker(cluster, stores)
+    chk.check_recovery_converged()
+    for st in (s[0] for s in stores.values()):
+        InvariantChecker(st).check_replication_restored()

@@ -149,6 +149,75 @@ def test_mixed_tenant_conserves_per_tenant_op_counts():
                     assert e == s, "ML tenants are silent off-phase"
 
 
+def test_churn_tenants_conserve_ops_within_their_lifetime():
+    """Churn tenants (cluster-scale PR satellite) behave like KV tenants
+    inside their ``tenant_lifetimes`` window and emit empty segments
+    outside it, so op conservation over the interleaved schedule holds
+    with churn enabled."""
+    from repro.data.workloads import tenant_lifetimes
+    cfg = MixedTenantConfig(churn_kv=(
+        YCSBConfig("B", n_pages=256, n_ops=2_000, seed=40),))
+    n_base = len(cfg.kv) + len(cfg.ml)
+    n_tenants = n_base + 1
+    lifetimes = tenant_lifetimes(cfg)
+    # base tenants live the whole run; the churn tenant joins one phase
+    # before its hot phase (= its own index) and leaves one after
+    assert lifetimes[:n_base] == [(0, n_tenants)] * n_base
+    assert lifetimes[n_base] == (n_base - 1, n_tenants)
+    traces = mixed_tenant_traces(cfg)
+    assert len(traces) == n_tenants
+    churn = traces[n_base]
+    segs = phase_segments(churn)
+    assert len(segs) == n_tenants
+    join, leave = lifetimes[n_base]
+    for ph, (s, e) in enumerate(segs):
+        if ph == n_base:                     # hot phase: the full trace
+            assert e - s == cfg.churn_kv[0].n_ops
+        elif join <= ph < leave:             # linger: keyspace-head trickle
+            assert e - s == cfg.idle_ops
+            assert churn.pages[s:e].max() < cfg.idle_pages
+        else:                                # dead: not a single op
+            assert e == s
+    # conservation: the interleaved schedule drives exactly every op
+    sched = interleave_tenants([len(t) for t in traces], cfg.slice_ops)
+    for t, trace in enumerate(traces):
+        assert sum(e - s for tt, s, e in sched if tt == t) == len(trace)
+
+
+def test_churn_lifetime_windows_clamp_to_the_run():
+    """Linger windows never extend past the run: wide margins clamp to
+    ``[0, n_tenants)`` instead of inventing phantom phases."""
+    from repro.data.workloads import tenant_lifetimes
+    cfg = MixedTenantConfig(
+        churn_kv=(YCSBConfig("A", n_ops=500, seed=41),
+                  YCSBConfig("B", n_ops=500, seed=42)),
+        churn_linger_phases=10)
+    n_base = len(cfg.kv) + len(cfg.ml)
+    lifetimes = tenant_lifetimes(cfg)
+    n_tenants = n_base + 2
+    for join, leave in lifetimes:
+        assert 0 <= join < leave <= n_tenants
+    assert lifetimes[n_base:] == [(0, n_tenants)] * 2
+    # negative margins are treated as zero: live exactly in the hot phase
+    tight = tenant_lifetimes(MixedTenantConfig(
+        churn_kv=(YCSBConfig("A", n_ops=500, seed=41),),
+        churn_linger_phases=-3))
+    assert tight[n_base] == (n_base, n_base + 1)
+
+
+def test_empty_churn_config_is_bitwise_identical_to_default():
+    """``churn_kv=()`` (the default) must leave the suite untouched —
+    same lifetimes, and every emitted trace bitwise identical."""
+    from repro.data.workloads import tenant_lifetimes
+    plain, explicit = MixedTenantConfig(), MixedTenantConfig(churn_kv=())
+    assert tenant_lifetimes(plain) == tenant_lifetimes(explicit)
+    for a, b in zip(mixed_tenant_traces(plain),
+                    mixed_tenant_traces(explicit)):
+        np.testing.assert_array_equal(a.pages, b.pages)
+        np.testing.assert_array_equal(a.is_write, b.is_write)
+        assert a.phase_bounds == b.phase_bounds
+
+
 def test_interleave_schedule_conserves_and_reorders_nothing():
     lengths = [1000, 257, 0, 513]
     sched = interleave_tenants(lengths, slice_ops=128)
